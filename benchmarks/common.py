@@ -1,0 +1,31 @@
+"""Benchmark timing utilities (CPU wall-clock of jit-compiled XLA code)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds per call of an already-traceable fn(*args)."""
+    jitted = jax.jit(fn) if not hasattr(fn, "lower") else fn
+    out = jitted(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(jitted(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,46 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. ``--full`` uses the paper-sized
+R-MAT suite (slower); default is the reduced CI suite."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from . import (adaptive_strategy, csc_ablation, fig6_kernel_perf,
+                   moe_dispatch, roofline, vdl_ablation, vsr_ablation)
+
+    benches = {
+        "vsr_ablation": lambda: vsr_ablation.run(args.full),
+        "vdl_ablation": lambda: vdl_ablation.run(args.full),
+        "csc_ablation": lambda: csc_ablation.run(args.full),
+        "fig6_kernel_perf": lambda: fig6_kernel_perf.run(args.full),
+        "adaptive_strategy": lambda: adaptive_strategy.run(args.full),
+        "moe_dispatch": moe_dispatch.run,
+        "roofline": roofline.run,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            for row in benches[name]():
+                print(row, flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper §2.1.2 (VDL): SpMM with dense-row vector loading vs N independent
+SpMVs, at N=2 on the 27-matrix R-MAT micro-benchmark.  Paper claim: 1.89x.
+
+Mapping: ``spmm_nb_pr`` gathers X[k, 0:N] per nonzero (the V→N limit of
+float2/float4 loading); ``spmm_as_n_spmv`` re-gathers the sparse stream per
+column (the paper's two-SpMV strawman)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (PreparedMatrix, rmat_suite, rmat_suite_small,
+                        spmm_as_n_spmv, spmm_nb_pr)
+from .common import csv_row, geomean, time_fn
+
+
+def run(full: bool = False, n: int = 2):
+    suite = rmat_suite() if full else rmat_suite_small()
+    rng = np.random.default_rng(0)
+    rows, speedups = [], []
+    for name, csr in suite.items():
+        bal = PreparedMatrix.from_csr(csr, tile=512).balanced
+        x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
+        t_vdl = time_fn(lambda: spmm_nb_pr(bal, x))
+        t_nspmv = time_fn(lambda: spmm_as_n_spmv(bal, x))
+        speedups.append(t_nspmv / t_vdl)
+        rows.append(csv_row(f"vdl_ablation/{name}", t_vdl * 1e6,
+                            f"speedup={t_nspmv/t_vdl:.2f}"))
+    rows.append(csv_row(f"vdl_ablation/geomean_speedup_n{n}", 0.0,
+                        f"{geomean(speedups):.2f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper §2.1.1 (VSR): nnz-balanced + parallel-reduction SpMV vs the three
+alternatives, on the R-MAT suite.  Paper claim: VSR is best-of-four on 40.8%
+of SuiteSparse; we report the win-rate analogue on R-MAT + the skew
+correlation (VSR should win on short-row / skewed matrices)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import KERNELS, PreparedMatrix, matrix_stats, rmat_suite_small, rmat_suite
+from .common import csv_row, time_fn
+
+
+def run(full: bool = False):
+    suite = rmat_suite() if full else rmat_suite_small()
+    rows = []
+    wins = {k: 0 for k in KERNELS}
+    win_stats = []
+    rng = np.random.default_rng(0)
+    for name, csr in suite.items():
+        prep = PreparedMatrix.from_csr(csr, tile=512)
+        x = jnp.asarray(rng.standard_normal(csr.shape[1]).astype(np.float32))
+        times = {}
+        for kname, fn in KERNELS.items():
+            fmt = prep.ell if kname.startswith("rs") else prep.balanced
+            times[kname] = time_fn(lambda f=fmt, fn=fn: fn(f, x))
+        best = min(times, key=times.get)
+        wins[best] += 1
+        s = prep.stats
+        win_stats.append((best, s.avg_row, s.cv))
+        rows.append(csv_row(f"vsr_ablation/{name}/{best}",
+                            times[best] * 1e6,
+                            f"nb_pr_rel={times['nb_pr']/times[best]:.2f}"))
+    n = len(suite)
+    rows.append(csv_row("vsr_ablation/winrate_nb_pr", 0.0,
+                        f"{wins['nb_pr']/n:.3f}"))
+    # skew correlation: mean CV of matrices where a balanced kernel won
+    bal_cv = [cv for b, ar, cv in win_stats if b.startswith("nb")]
+    rs_cv = [cv for b, ar, cv in win_stats if b.startswith("rs")]
+    rows.append(csv_row(
+        "vsr_ablation/cv_when_balanced_wins", 0.0,
+        f"{np.mean(bal_cv) if bal_cv else 0:.2f}_vs_rs_{np.mean(rs_cv) if rs_cv else 0:.2f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

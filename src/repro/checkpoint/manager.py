@@ -1,0 +1,112 @@
+"""Checkpointing: atomic, async, mesh-elastic.
+
+Layout (one directory per step):
+    <dir>/step_000042.tmp-<nonce>/   — written first
+        arrays.npz                    — logical (unsharded) arrays
+        manifest.json                 — step, tree structure, shapes, dtypes
+    <dir>/step_000042/               — atomic rename on commit
+
+Guarantees:
+  * atomicity — a crash mid-write leaves only a .tmp dir (ignored on scan);
+    the rename is the commit point.
+  * async   — ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes on a worker thread; ``wait()`` joins before the next save.
+  * elastic restore — arrays are stored *logically*; ``restore`` device_puts
+    them with whatever shardings the (possibly different-size) new mesh
+    wants.  Production note: at 1T params this npz becomes a tensorstore
+    shard-per-host layout; the manifest/commit protocol is unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import uuid
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host = self._snapshot(tree)
+        self._write(step, host)
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()
+        host = self._snapshot(tree)  # sync D2H; disk IO goes to the thread
+        self._thread = threading.Thread(target=self._write, args=(step, host))
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _snapshot(self, tree: Any):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return [np.asarray(l) for l in leaves], treedef
+
+    def _write(self, step: int, host):
+        leaves, treedef = host
+        tmp = os.path.join(self.dir, f"step_{step:09d}.tmp-{uuid.uuid4().hex[:8]}")
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": l for i, l in enumerate(leaves)})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "num_leaves": len(leaves),
+            "shapes": [list(l.shape) for l in leaves],
+            "dtypes": [str(l.dtype) for l in leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)              # commit point
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp" not in name:
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Rebuild the pytree of ``like`` (structure donor) from step's
+        arrays; ``shardings`` (same structure or None) controls placement —
+        pass shardings built on a *different* mesh for elastic resume."""
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            leaves = [z[f"a{i}"] for i in range(len(z.files))]
+        _, treedef = jax.tree_util.tree_flatten(like)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree

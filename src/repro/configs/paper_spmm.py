@@ -1,0 +1,14 @@
+"""The paper's own workload: the R-MAT micro-benchmark suite x N sweep
+(N = 1..128), plus the SuiteSparse-analogue selection benchmark. Consumed by
+benchmarks/, not by the LM launcher."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperSpmmConfig:
+    n_sweep: tuple = (1, 2, 4, 8, 16, 32, 64, 128)
+    tile: int = 512
+    seed: int = 0
+
+
+CONFIG = PaperSpmmConfig()

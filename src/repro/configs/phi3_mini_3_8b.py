@@ -1,0 +1,15 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219; unverified] — dense, MHA (kv=32)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32064,
+    rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256, head_dim=16,
+    param_dtype="float32", compute_dtype="float32", remat="none",
+)

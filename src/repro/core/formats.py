@@ -1,0 +1,239 @@
+"""Sparse-matrix formats for the adaptive SpMV/SpMM library.
+
+Host-side construction is plain numpy (format building is an offline step,
+matching the paper's static-profiling usage mode); device-side containers are
+registered dataclasses whose array fields are pytree leaves and whose shape
+metadata is static, so every format jits cleanly.
+
+Formats
+-------
+CSR          canonical row-compressed storage (the paper's input format).
+ELL          row-split padded storage — the substrate for RS_* kernels; its
+             padding waste *is* the row-split imbalance cost the paper analyses.
+BalancedCOO  nnz-split tiled storage — fixed `tile` nonzeros per tile (the
+             paper's "fixed number of non-zeros per warp", with the TPU tile
+             replacing the GPU warp). Substrate for NB_* kernels (VSR/merge
+             style). Tail is padded with `row == M` sentinels and zero values.
+BSR          block-sparse rows with dense (bm, bk) blocks — the TPU-native
+             granule (MXU-aligned) used by kernels/bsr.py and block-sparse
+             attention masking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _register(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    data = [f for f in fields if f not in cls._meta_fields]
+    jax.tree_util.register_dataclass(cls, data_fields=data, meta_fields=list(cls._meta_fields))
+    return cls
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row. indptr:(M+1,) indices:(nnz,) data:(nnz,)."""
+
+    _meta_fields = ("shape",)
+
+    indptr: jax.Array
+    indices: jax.Array
+    data: jax.Array
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    def to_dense(self) -> jax.Array:
+        m, k = self.shape
+        rows = row_ids_from_indptr(np.asarray(self.indptr), self.nnz)
+        out = jnp.zeros((m, k), self.data.dtype)
+        return out.at[rows, self.indices].add(self.data)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    """Row-split padded format. cols/vals: (M, width); padding has vals==0,
+    cols clamped to a valid column (0) so gathers stay in-bounds."""
+
+    _meta_fields = ("shape",)
+
+    cols: jax.Array
+    vals: jax.Array
+    shape: Tuple[int, int]
+
+    @property
+    def width(self) -> int:
+        return self.cols.shape[1]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class BalancedCOO:
+    """nnz-split tiled COO. rows/cols/vals: (n_tiles, tile).
+
+    Every tile carries exactly `tile` nonzeros (the workload-balancing
+    principle); tiles may span row boundaries, which is why the NB kernels
+    need segment reduction (paper §2.1.1). Padding: rows==M (out-of-range
+    sentinel — dropped by segment_sum with num_segments=M+1 and by scatter-add
+    in drop mode), vals==0, cols==0.
+    """
+
+    _meta_fields = ("shape",)
+
+    rows: jax.Array
+    cols: jax.Array
+    vals: jax.Array
+    shape: Tuple[int, int]
+
+    @property
+    def n_tiles(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def tile(self) -> int:
+        return self.rows.shape[1]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class BSR:
+    """Block-sparse rows. indptr:(Mb+1,) indices:(nblocks,) blocks:(nblocks,bm,bk).
+
+    TPU-native granule: bm a multiple of 8 (sublanes), bk a multiple of 128
+    (lanes) for MXU-aligned staging.
+    """
+
+    _meta_fields = ("shape", "block_shape")
+
+    indptr: jax.Array
+    indices: jax.Array
+    blocks: jax.Array
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+    @property
+    def nblocks(self) -> int:
+        return self.blocks.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# host-side (numpy) construction
+# ---------------------------------------------------------------------------
+
+def row_ids_from_indptr(indptr: np.ndarray, nnz: int) -> np.ndarray:
+    """Expand CSR indptr to a per-nonzero row-id vector."""
+    indptr = np.asarray(indptr)
+    return np.repeat(np.arange(len(indptr) - 1), np.diff(indptr)).astype(np.int32)[:nnz]
+
+
+def csr_from_coo(rows, cols, vals, shape, dtype=np.float32) -> CSR:
+    """Build CSR from (possibly unsorted, possibly duplicated) COO triplets.
+    Duplicates are summed, matching scipy semantics."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, dtype)
+    m, k = shape
+    # sort by (row, col), then merge duplicates
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if len(rows):
+        keep = np.ones(len(rows), bool)
+        keep[1:] = (rows[1:] != rows[:-1]) | (cols[1:] != cols[:-1])
+        grp = np.cumsum(keep) - 1
+        vals = np.bincount(grp, weights=vals.astype(np.float64), minlength=keep.sum()).astype(dtype)
+        rows, cols = rows[keep], cols[keep]
+    indptr = np.zeros(m + 1, np.int32)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr, dtype=np.int32)
+    return CSR(jnp.asarray(indptr), jnp.asarray(cols.astype(np.int32)),
+               jnp.asarray(vals), (m, k))
+
+
+def csr_from_dense(a: np.ndarray) -> CSR:
+    a = np.asarray(a)
+    rows, cols = np.nonzero(a)
+    return csr_from_coo(rows, cols, a[rows, cols], a.shape, a.dtype)
+
+
+def csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    data = np.asarray(csr.data)
+    m, k = csr.shape
+    lens = np.diff(indptr)
+    w = int(lens.max()) if width is None else int(width)
+    w = max(w, 1)
+    cols = np.zeros((m, w), np.int32)
+    vals = np.zeros((m, w), data.dtype)
+    for i in range(m):  # offline prep; numpy loop is fine at bench scales
+        s, e = indptr[i], min(indptr[i + 1], indptr[i] + w)
+        cols[i, : e - s] = indices[s:e]
+        vals[i, : e - s] = data[s:e]
+    return ELL(jnp.asarray(cols), jnp.asarray(vals), csr.shape)
+
+
+def csr_to_balanced(csr: CSR, tile: int = 512) -> BalancedCOO:
+    """nnz-split: chop the row-major nonzero stream into fixed `tile` quotas.
+    This is the paper's workload-balancing step (Fig. 2(e))."""
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    data = np.asarray(csr.data)
+    m, k = csr.shape
+    nnz = len(data)
+    rows = row_ids_from_indptr(indptr, nnz)
+    n_tiles = max(1, -(-nnz // tile))
+    pad = n_tiles * tile - nnz
+    rows = np.concatenate([rows, np.full(pad, m, np.int32)])
+    cols = np.concatenate([indices, np.zeros(pad, np.int32)])
+    vals = np.concatenate([data, np.zeros(pad, data.dtype)])
+    return BalancedCOO(
+        jnp.asarray(rows.reshape(n_tiles, tile)),
+        jnp.asarray(cols.reshape(n_tiles, tile)),
+        jnp.asarray(vals.reshape(n_tiles, tile)),
+        (m, k),
+    )
+
+
+def csr_to_bsr(csr: CSR, bm: int = 8, bk: int = 128) -> BSR:
+    """Coarsen to (bm, bk) dense blocks — any block containing >=1 nonzero is
+    materialized. The TPU-granule view of the sparsity pattern."""
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    data = np.asarray(csr.data)
+    m, k = csr.shape
+    mb, kb = -(-m // bm), -(-k // bk)
+    rows = row_ids_from_indptr(indptr, len(data))
+    brow, bcol = rows // bm, indices // bk
+    key = brow.astype(np.int64) * kb + bcol
+    uniq, inv = np.unique(key, return_inverse=True)
+    blocks = np.zeros((len(uniq), bm, bk), data.dtype)
+    np.add.at(blocks, (inv, rows % bm, indices % bk), data)
+    ub_row, ub_col = (uniq // kb).astype(np.int32), (uniq % kb).astype(np.int32)
+    bindptr = np.zeros(mb + 1, np.int32)
+    np.add.at(bindptr, ub_row + 1, 1)
+    bindptr = np.cumsum(bindptr, dtype=np.int32)
+    return BSR(jnp.asarray(bindptr), jnp.asarray(ub_col), jnp.asarray(blocks),
+               (m, k), (bm, bk))
+
+
+def bsr_to_dense(bsr: BSR) -> jax.Array:
+    m, k = bsr.shape
+    bm, bk = bsr.block_shape
+    mb, kb = -(-m // bm), -(-k // bk)
+    dense = jnp.zeros((mb * bm, kb * bk), bsr.blocks.dtype)
+    indptr = np.asarray(bsr.indptr)
+    brow = row_ids_from_indptr(indptr, bsr.nblocks)
+    bcol = np.asarray(bsr.indices)
+    for t in range(bsr.nblocks):  # host loop; test/debug utility only
+        r0, c0 = int(brow[t]) * bm, int(bcol[t]) * bk
+        dense = dense.at[r0 : r0 + bm, c0 : c0 + bk].set(bsr.blocks[t])
+    return dense[:m, :k]

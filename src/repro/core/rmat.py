@@ -1,0 +1,84 @@
+"""R-MAT recursive matrix generator (Chakrabarti et al., SDM'04).
+
+The paper's §2.1.2/§2.1.3 micro-benchmarks use 27 R-MAT matrices sweeping
+size, sparsity and distribution.  We reproduce that suite here.  R-MAT drops
+each edge into a quadrant recursively with probabilities (a, b, c, d); skew
+in (a, b, c, d) controls the row-length skew — exactly the ``stdv_row``
+dimension the adaptive strategy (Insight 2) keys on.
+
+Host-side numpy only: matrix generation is offline prep, like the paper's
+dataset download.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .formats import CSR, csr_from_coo
+
+
+def rmat(
+    scale: int,
+    edge_factor: int,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+    m: int | None = None,
+    k: int | None = None,
+) -> CSR:
+    """Generate an R-MAT sparse matrix.
+
+    scale        log2 of the (square) dimension.
+    edge_factor  average nonzeros per row.
+    a,b,c        quadrant probabilities (d = 1-a-b-c). (0.25,0.25,0.25)
+                 is Erdos-Renyi-like (balanced rows); the Graph500 default
+                 (0.57,0.19,0.19) is heavily skewed.
+    m, k         optional rectangular crop of the 2^scale square.
+    """
+    n = 1 << scale
+    m = n if m is None else m
+    k = n if k is None else k
+    nnz = edge_factor * m
+    d = 1.0 - a - b - c
+    assert d >= -1e-9, "quadrant probabilities must sum to <= 1"
+    rng = np.random.default_rng(seed)
+
+    rows = np.zeros(nnz, np.int64)
+    cols = np.zeros(nnz, np.int64)
+    # vectorized recursive descent: one bit of row/col per level
+    for level in range(scale):
+        r = rng.random(nnz)
+        # quadrant: 0=a (0,0), 1=b (0,1), 2=c (1,0), 3=d (1,1)
+        quad = np.select([r < a, r < a + b, r < a + b + c], [0, 1, 2], default=3)
+        rows = (rows << 1) | (quad >> 1)
+        cols = (cols << 1) | (quad & 1)
+    keep = (rows < m) & (cols < k)
+    rows, cols = rows[keep], cols[keep]
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    return csr_from_coo(rows, cols, vals, (m, k))
+
+
+def rmat_suite(seed: int = 0) -> dict[str, CSR]:
+    """The paper's 27-matrix micro-benchmark: 3 sizes x 3 sparsities x 3 skews."""
+    suite: dict[str, CSR] = {}
+    skews = {"uniform": (0.25, 0.25, 0.25), "mild": (0.45, 0.22, 0.22), "skewed": (0.57, 0.19, 0.19)}
+    for scale in (10, 12, 14):
+        for ef in (4, 16, 64):
+            for skew_name, (a, b, c) in skews.items():
+                name = f"rmat_s{scale}_e{ef}_{skew_name}"
+                suite[name] = rmat(scale, ef, a, b, c, seed=seed)
+                seed += 1
+    return suite
+
+
+def rmat_suite_small(seed: int = 0) -> dict[str, CSR]:
+    """Reduced suite for CI-speed tests (same axes, tiny sizes)."""
+    suite: dict[str, CSR] = {}
+    skews = {"uniform": (0.25, 0.25, 0.25), "skewed": (0.57, 0.19, 0.19)}
+    for scale in (6, 8):
+        for ef in (4, 16):
+            for skew_name, (a, b, c) in skews.items():
+                name = f"rmat_s{scale}_e{ef}_{skew_name}"
+                suite[name] = rmat(scale, ef, a, b, c, seed=seed)
+                seed += 1
+    return suite

@@ -1,0 +1,133 @@
+"""Adaptive kernel selection (paper §2.2, Fig. 4).
+
+Decision tree, from three low-cost statistics (avg_row, stdv_row, N):
+
+  1. Insight 1 — N picks the reduction style: parallel-reduction for SpMV and
+     small-N SpMM (N <= n_threshold, paper: 4), sequential for larger N.
+  2. Insight 2 — on the sequential side, workload-balancing pays off when the
+     row-length distribution is skewed: cv = stdv_row/avg_row > cv_threshold.
+  3. Insight 3 — large avg_row means lots of total work → occupancy waves
+     self-balance → WB unnecessary.  On the parallel side, *small* avg_row is
+     the WB trigger (short rows idle PR lanes, §2.1.1).
+
+The thresholds are data, not constants: the paper derives them empirically on
+SuiteSparse; we re-derive them for this backend with ``calibrate`` over the
+R-MAT suite (recorded in EXPERIMENTS.md §Selection).  Defaults below are the
+calibrated CPU-XLA values; the paper's GPU values are kept for reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .formats import CSR, csr_to_balanced, csr_to_ell
+from .stats import MatrixStats, matrix_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectorThresholds:
+    n_threshold: int = 4        # N <= this → parallel reduction (paper: 4)
+    pr_avg_row: float = 32.0    # PR side: avg_row < this → workload-balance
+    sr_cv: float = 0.5          # SR side: cv > this → workload-balance
+
+    PAPER_GPU = None  # filled below
+
+
+SelectorThresholds.PAPER_GPU = SelectorThresholds(n_threshold=4, pr_avg_row=32.0, sr_cv=0.5)
+
+
+def select_kernel(stats: MatrixStats, n: int,
+                  th: SelectorThresholds = SelectorThresholds()) -> str:
+    """Paper Fig. 4: map (sparsity stats, N) → one of the four kernels."""
+    if n <= th.n_threshold:
+        # parallel reduction; WB when rows are short (idle-lane waste, §2.1.1)
+        return "nb_pr" if stats.avg_row < th.pr_avg_row else "rs_pr"
+    # sequential reduction; WB when row lengths are skewed relative to the
+    # mean (Insights 2+3 combined into the CV metric)
+    return "nb_sr" if stats.cv > th.sr_cv else "rs_sr"
+
+
+@dataclasses.dataclass
+class PreparedMatrix:
+    """A CSR matrix with both kernel substrates prebuilt + its statistics.
+
+    Mirrors the paper's usage mode: format construction and profiling are
+    offline; the online op just dispatches. ``ell_width`` may cap pathological
+    max-row ELL padding (rows longer than the cap spill... they don't — the
+    cap is only safe when max_row <= cap, so we keep full width by default and
+    let the selector route extreme-skew matrices to the balanced substrate)."""
+
+    csr: CSR
+    stats: MatrixStats
+    ell: object
+    balanced: object
+
+    @classmethod
+    def from_csr(cls, csr: CSR, tile: int = 512) -> "PreparedMatrix":
+        return cls(csr=csr, stats=matrix_stats(csr), ell=csr_to_ell(csr),
+                   balanced=csr_to_balanced(csr, tile=tile))
+
+
+def adaptive_spmm(prep: PreparedMatrix, x, th: SelectorThresholds = SelectorThresholds(),
+                  impl: str | None = None):
+    """Front door: route to the selected kernel. ``impl`` overrides the rule
+    (used by the oracle/off-line-profile mode and the ablations)."""
+    from .spmm import KERNELS, KERNEL_FORMAT
+
+    n = 1 if x.ndim == 1 else x.shape[1]
+    name = impl or select_kernel(prep.stats, n, th)
+    fmt = prep.ell if KERNEL_FORMAT[name] == "ell" else prep.balanced
+    return KERNELS[name](fmt, x)
+
+
+def calibrate(
+    matrices: dict[str, CSR],
+    ns: tuple[int, ...],
+    time_fn: Callable[[str, "PreparedMatrix", int], float] | None = None,
+    times: dict | None = None,
+    # 1<<30 = "never switch to sequential reduction": on this backend (XLA
+    # CPU / TPU) the PR/SR crossover of paper Insight 1 may not exist — the
+    # grid is allowed to learn that (see EXPERIMENTS.md §Selection).
+    n_grid: tuple[int, ...] = (2, 4, 8, 1 << 30),
+    avg_grid: tuple[float, ...] = (8.0, 16.0, 32.0, 64.0),
+    cv_grid: tuple[float, ...] = (0.25, 0.5, 1.0, 2.0),
+) -> tuple[SelectorThresholds, dict]:
+    """Re-derive thresholds for this backend by grid search against measured
+    kernel times.  Either ``time_fn(kernel_name, prep, n) -> seconds`` or a
+    precomputed ``times[(matrix_name, n, kernel_name)] -> seconds``.
+
+    Returns (best thresholds, report) where report carries the oracle/selected
+    geomean ratio per candidate — the §3.2 'performance loss vs optimal'."""
+    preps = {k: PreparedMatrix.from_csr(v) for k, v in matrices.items()}
+    if times is None:
+        assert time_fn is not None
+        times = {}
+        for mname, prep in preps.items():
+            for n in ns:
+                for kname in ("rs_sr", "rs_pr", "nb_sr", "nb_pr"):
+                    times[(mname, n, kname)] = time_fn(kname, prep, n)
+
+    def loss(th: SelectorThresholds) -> float:
+        ratios = []
+        for mname, prep in preps.items():
+            for n in ns:
+                chosen = times[(mname, n, select_kernel(prep.stats, n, th))]
+                oracle = min(times[(mname, n, k)] for k in ("rs_sr", "rs_pr", "nb_sr", "nb_pr"))
+                ratios.append(chosen / oracle)
+        return float(np.exp(np.mean(np.log(ratios))))  # geomean slowdown
+
+    best, best_loss = None, np.inf
+    for nt in n_grid:
+        for ag in avg_grid:
+            for cg in cv_grid:
+                th = SelectorThresholds(nt, ag, cg)
+                l = loss(th)
+                if l < best_loss:
+                    best, best_loss = th, l
+    report = {
+        "geomean_slowdown_vs_oracle": best_loss,
+        "times": {f"{m}|n={n}|{k}": t for (m, n, k), t in times.items()},
+    }
+    return best, report

@@ -1,0 +1,204 @@
+"""The paper's 2x2 implementation space (row-split/nnz-balanced x sequential/
+parallel reduction) as pure-JAX, jit-able, differentiable SpMV/SpMM.
+
+These are the *library* implementations: they lower to XLA on any backend and
+are what the model layers (sparse MLP, MoE dispatch) call in production. The
+Pallas kernels in ``repro.kernels`` are the TPU hot-path versions of the same
+four algorithms, validated against ``repro.kernels.ref`` which in turn is
+validated against these.
+
+Naming: RS=row-split, NB=nnz-balanced (workload-balancing); SR=sequential
+reduction, PR=parallel reduction.
+
+  rs_sr  CSR-Scalar / RowSplit        (ELL substrate, fori_loop over width)
+  rs_pr  CSR-Vector                   (ELL substrate, materialize + tree sum)
+  nb_sr  MergePath-style              (BalancedCOO, scan over tiles)
+  nb_pr  VSR — the paper's §2.1.1     (BalancedCOO, flat segment reduction)
+
+VDL (§2.1.2) is inherent to how the NB/RS paths gather the dense matrix: each
+gathered row ``x[col]`` covers all N output columns in one logical load (the
+V→N limit of float2/float4 loading).  The ablation baseline that *lacks* VDL
+is ``spmm_as_n_spmv``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from .formats import ELL, BalancedCOO
+
+Sparse = Union[ELL, BalancedCOO]
+
+
+def _as_2d(x: jax.Array) -> tuple[jax.Array, bool]:
+    if x.ndim == 1:
+        return x[:, None], True
+    return x, False
+
+
+# ---------------------------------------------------------------------------
+# RS (row-split) kernels on ELL
+# ---------------------------------------------------------------------------
+
+def spmm_rs_sr(ell: ELL, x: jax.Array) -> jax.Array:
+    """Row-split + sequential reduction (CSR-Scalar / RowSplit analogue).
+
+    The width loop is a ``fori_loop`` — genuinely sequential accumulation, one
+    gathered column slab per step, mirroring a per-thread running sum."""
+    x2, squeeze = _as_2d(x)
+    m = ell.shape[0]
+    n = x2.shape[1]
+    acc0 = jnp.zeros((m, n), _acc_dtype(ell.vals.dtype, x2.dtype))
+
+    def body(j, acc):
+        cols_j = jax.lax.dynamic_index_in_dim(ell.cols, j, axis=1, keepdims=False)
+        vals_j = jax.lax.dynamic_index_in_dim(ell.vals, j, axis=1, keepdims=False)
+        xg = jnp.take(x2, cols_j, axis=0)                  # (M, N)
+        return acc + vals_j[:, None].astype(acc.dtype) * xg.astype(acc.dtype)
+
+    out = jax.lax.fori_loop(0, ell.width, body, acc0).astype(x2.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def spmm_rs_pr(ell: ELL, x: jax.Array) -> jax.Array:
+    """Row-split + parallel reduction (CSR-Vector analogue).
+
+    All partial products materialize as (M, width, N) and reduce with a tree
+    sum — XLA's reduce is the merge-tree here."""
+    x2, squeeze = _as_2d(x)
+    xg = jnp.take(x2, ell.cols, axis=0)                    # (M, width, N)
+    acc = _acc_dtype(ell.vals.dtype, x2.dtype)
+    out = jnp.sum(ell.vals[..., None].astype(acc) * xg.astype(acc), axis=1)
+    out = out.astype(x2.dtype)
+    return out[:, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# NB (nnz-balanced) kernels on BalancedCOO
+# ---------------------------------------------------------------------------
+
+def spmm_nb_pr(bal: BalancedCOO, x: jax.Array) -> jax.Array:
+    """nnz-balanced + parallel reduction — the VSR algorithm (paper §2.1.1).
+
+    Every tile holds exactly ``tile`` nonzeros; partial products for the whole
+    stream reduce with one segment-sum keyed on row ids (padding rows == M
+    fall into the dropped trailing segment)."""
+    x2, squeeze = _as_2d(x)
+    m = bal.shape[0]
+    rows = bal.rows.reshape(-1)
+    cols = bal.cols.reshape(-1)
+    vals = bal.vals.reshape(-1)
+    acc = _acc_dtype(vals.dtype, x2.dtype)
+    p = vals[:, None].astype(acc) * jnp.take(x2, cols, axis=0).astype(acc)
+    out = jax.ops.segment_sum(p, rows, num_segments=m + 1)[:m]
+    out = out.astype(x2.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def spmm_nb_sr(bal: BalancedCOO, x: jax.Array) -> jax.Array:
+    """nnz-balanced + sequential reduction (MergePath-flavoured).
+
+    Tiles are walked with a scan (sequential across tiles, like merge-path
+    coordinates walked by one thread); within a tile the products scatter-add
+    into the output carry."""
+    x2, squeeze = _as_2d(x)
+    m = bal.shape[0]
+    acc = _acc_dtype(bal.vals.dtype, x2.dtype)
+    out0 = jnp.zeros((m + 1, x2.shape[1]), acc)
+
+    def step(out, t):
+        rows_t, cols_t, vals_t = t
+        p = vals_t[:, None].astype(acc) * jnp.take(x2, cols_t, axis=0).astype(acc)
+        return out.at[rows_t].add(p, mode="drop"), None
+
+    out, _ = jax.lax.scan(step, out0, (bal.rows, bal.cols, bal.vals))
+    out = out[:m].astype(x2.dtype)
+    return out[:, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# ablation baseline: SpMM as N independent SpMVs (the no-VDL strawman)
+# ---------------------------------------------------------------------------
+
+def spmm_as_n_spmv(bal: BalancedCOO, x: jax.Array) -> jax.Array:
+    """Paper §2.1.2 baseline: N column-by-column SpMVs. Each column re-gathers
+    the sparse stream — the redundant loads VDL eliminates."""
+    x2, squeeze = _as_2d(x)
+
+    def one_col(xcol):
+        return spmm_nb_pr(bal, xcol)
+
+    out = jax.lax.map(one_col, x2.T).T      # sequential over columns, like N launches
+    return out[:, 0] if squeeze else out
+
+
+def _acc_dtype(a, b):
+    # accumulate in f32 when either side is sub-f32 (bf16/f16), else widest
+    return jnp.promote_types(jnp.promote_types(a, b), jnp.float32) \
+        if jnp.promote_types(a, b) in (jnp.bfloat16, jnp.float16) else jnp.promote_types(a, b)
+
+
+KERNELS: dict[str, Callable[[Sparse, jax.Array], jax.Array]] = {
+    "rs_sr": spmm_rs_sr,
+    "rs_pr": spmm_rs_pr,
+    "nb_sr": spmm_nb_sr,
+    "nb_pr": spmm_nb_pr,
+}
+
+# which substrate format each kernel consumes
+KERNEL_FORMAT: dict[str, str] = {
+    "rs_sr": "ell",
+    "rs_pr": "ell",
+    "nb_sr": "balanced",
+    "nb_pr": "balanced",
+}
+
+
+# ---------------------------------------------------------------------------
+# differentiable front-door: custom VJP so sparse-weight layers train
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmm_trainable(shape: tuple, rows, cols, vals, x):
+    bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), shape)
+    return spmm_nb_pr(bal, x)
+
+
+def _spmm_trainable_fwd(shape, rows, cols, vals, x):
+    return _spmm_trainable(shape, rows, cols, vals, x), (rows, cols, vals, x)
+
+
+def _spmm_trainable_bwd(shape, res, g):
+    import numpy as np
+    rows, cols, vals, x = res
+    x2, _ = _as_2d(x)
+    g2, _ = _as_2d(g)
+    r = rows.reshape(-1)
+    c = cols.reshape(-1)
+    # dvals[e] = <g[row_e, :], x[col_e, :]> ; padding rows (== M) → 0
+    g_rows = jnp.take(g2, jnp.minimum(r, shape[0] - 1), axis=0)
+    g_rows = jnp.where((r < shape[0])[:, None], g_rows, 0)
+    x_cols = jnp.take(x2, c, axis=0)
+    dvals = jnp.sum(g_rows * x_cols, axis=-1)
+    # dx[k, :] = sum_{e: col_e == k} vals_e * g[row_e, :]
+    p = vals.reshape(-1)[:, None] * g_rows
+    dx = jax.ops.segment_sum(p, c, num_segments=shape[1])
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    # integer pattern args get symbolic-zero (float0) cotangents
+    zr = np.zeros(rows.shape, jax.dtypes.float0)
+    zc = np.zeros(cols.shape, jax.dtypes.float0)
+    return zr, zc, dvals.reshape(vals.shape).astype(vals.dtype), dx
+
+
+_spmm_trainable.defvjp(_spmm_trainable_fwd, _spmm_trainable_bwd)
+
+
+def spmm_nb_pr_trainable(bal_static: tuple, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """VSR SpMM with gradients to the nonzero values and the dense matrix.
+    ``bal_static`` = (rows, cols, shape); rows/cols may be traced (scanned
+    per-layer patterns) — they are real args with float0 cotangents."""
+    rows, cols, shape = bal_static
+    return _spmm_trainable(tuple(shape), rows, cols, vals, x)

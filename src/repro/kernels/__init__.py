@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's SpMV/SpMM space (+ ref oracles)."""
+from .ops import spmm, spmm_bsr, spmm_csc, spmm_vsr, spmv_vsr

@@ -1,0 +1,93 @@
+"""CSC — Coalesced Sparse-row Caching SpMM (paper §2.1.3), TPU-adapted.
+
+GPU original: a warp cooperatively loads ``warp_size`` nonzeros of one sparse
+row into shared memory with one coalesced transaction, then every lane walks
+the cached nonzeros *sequentially* while owning a distinct dense column —
+sequential reduction with parallel (coalesced) loading.
+
+TPU adaptation (see DESIGN.md §2):
+  * shared-memory staging → **BlockSpec VMEM staging**: the (TM, TW) slab of
+    ELL cols/vals is DMA'd HBM→VMEM once per grid step (the coalesced load);
+    the ``fori_loop`` below then walks the *cached* slab — data is touched
+    once in HBM, TW times in VMEM.
+  * "each lane owns a dense column" → the lane dimension of the (TM, TN)
+    output block carries TN dense columns; the loop body's gather+FMA is a
+    (TM, TN)-wide VPU op, i.e. all columns advance in lockstep per cached
+    nonzero — exactly the CSC schedule.
+  * row-split: grid axis 0 assigns TM whole rows per step (no cross-row
+    segments → no segment reduction needed; the imbalance cost this leaves
+    on the table is what the adaptive selector weighs against nb_* kernels).
+
+Accumulation across the W grid axis uses the sequential-TPU-grid revisit
+pattern (init at w==0, add thereafter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import ELL
+
+
+def _csc_kernel(cols_ref, vals_ref, x_ref, o_ref, *, tw):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = cols_ref[...]            # (TM, TW) — the VMEM-cached slab
+    vals = vals_ref[...]
+    x = x_ref[...]                  # (K, TN)
+
+    def body(j, acc):
+        # sequential walk over the cached slab (the SR inner loop)
+        c_j = jax.lax.dynamic_index_in_dim(cols, j, axis=1, keepdims=False)
+        v_j = jax.lax.dynamic_index_in_dim(vals, j, axis=1, keepdims=False)
+        xg = jnp.take(x, c_j, axis=0)                      # (TM, TN)
+        return acc + v_j[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, tw, body,
+                            jnp.zeros(o_ref.shape, jnp.float32))
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tw", "tile_n", "interpret"))
+def _csc_call(cols, vals, x, *, tm, tw, tile_n, interpret):
+    m_pad, w_pad = cols.shape
+    k, n_pad = x.shape
+    grid = (m_pad // tm, n_pad // tile_n, w_pad // tw)
+    return pl.pallas_call(
+        functools.partial(_csc_kernel, tw=tw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tw), lambda i, j, w: (i, w)),
+            pl.BlockSpec((tm, tw), lambda i, j, w: (i, w)),
+            pl.BlockSpec((k, tile_n), lambda i, j, w: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tile_n), lambda i, j, w: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(cols, vals, x)
+
+
+def spmm_csc(ell: ELL, x: jax.Array, *, tm: int = 8, tw: int = 128,
+             tile_n: int = 128, interpret: bool | None = None) -> jax.Array:
+    """RS+SR SpMM on the ELL substrate. Pads (M→tm, W→tw, N→tile_n)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2 = x[:, None] if x.ndim == 1 else x
+    m, _ = ell.shape
+    k, n = x2.shape
+    w = ell.width
+    tw = min(tw, -(-w // 8) * 8)
+    m_pad, w_pad, n_pad = (-(-m // tm) * tm, -(-w // tw) * tw, -(-n // tile_n) * tile_n)
+    cols = jnp.pad(ell.cols, ((0, m_pad - m), (0, w_pad - w)))
+    vals = jnp.pad(ell.vals, ((0, m_pad - m), (0, w_pad - w)))
+    xp = jnp.pad(x2, ((0, 0), (0, n_pad - n))) if n_pad != n else x2
+    y = _csc_call(cols, vals, xp, tm=tm, tw=tw, tile_n=tile_n, interpret=interpret)
+    y = y[:m, :n].astype(x2.dtype)
+    return y[:, 0] if x.ndim == 1 else y

@@ -1,0 +1,60 @@
+"""Public kernel entry points: backend-aware dispatch.
+
+On a TPU backend the Pallas kernels compile natively; on CPU (this container)
+the *production* path is the XLA implementations in ``repro.core.spmm`` —
+Pallas ``interpret=True`` is a correctness harness, not a fast path, so it is
+only selected explicitly (tests) or when ``force_pallas=True``.
+
+The adaptive strategy (paper Fig. 4) lives in ``repro.core.selector``; this
+module maps its four logical kernels onto physical implementations:
+
+  logical     XLA path (core.spmm)     Pallas path (this package)
+  rs_sr       spmm_rs_sr               csc.spmm_csc        (SpMM)
+  rs_pr       spmm_rs_pr               csc.spmm_csc        (PR folds into lanes)
+  nb_sr       spmm_nb_sr               vsr.spmm_vsr        (tile-sequential grid)
+  nb_pr       spmm_nb_pr               vsr.spmm_vsr / spmv.spmv_vsr (N=1)
+
+Note rs_pr/nb_sr map onto the same Pallas binaries as their neighbours: on
+TPU the reduction-style distinction inside a tile collapses (the VPU/MXU is
+always "parallel" across lanes; the grid is always sequential across tiles),
+which is itself a finding recorded in DESIGN.md §2 — the 2x2 space is a GPU
+space; TPU natively exposes a 2x1 (balanced-or-not) space with reduction
+style chosen per-tile by the compiler.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.formats import BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr, csr_to_ell
+from repro.core.selector import PreparedMatrix, SelectorThresholds, select_kernel
+from repro.core import spmm as core_spmm
+
+from .bsr import spmm_bsr
+from .csc import spmm_csc
+from .spmv import spmv_vsr
+from .vsr import spmm_vsr
+
+
+def use_pallas_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(prep: PreparedMatrix, x: jax.Array, *, impl: str | None = None,
+         th: SelectorThresholds = SelectorThresholds(),
+         force_pallas: bool = False, interpret: bool | None = None) -> jax.Array:
+    """Adaptive SpMV/SpMM front door over a PreparedMatrix."""
+    n = 1 if x.ndim == 1 else x.shape[1]
+    name = impl or select_kernel(prep.stats, n, th)
+    if force_pallas or use_pallas_default():
+        if name in ("nb_pr", "nb_sr"):
+            if n == 1:
+                return spmv_vsr(prep.balanced, x, interpret=interpret)
+            return spmm_vsr(prep.balanced, x, interpret=interpret)
+        return spmm_csc(prep.ell, x, interpret=interpret)
+    fmt = prep.ell if core_spmm.KERNEL_FORMAT[name] == "ell" else prep.balanced
+    return core_spmm.KERNELS[name](fmt, x)
+
+
+__all__ = [
+    "spmm", "spmm_vsr", "spmm_csc", "spmm_bsr", "spmv_vsr", "use_pallas_default",
+]

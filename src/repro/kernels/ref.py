@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Deliberately written as the *simplest possible* scatter-add formulation —
+independent of the optimized implementations in ``repro.core.spmm`` so the
+test matrix cross-validates three ways: ref (here) vs core (XLA-optimized
+jnp) vs kernels (Pallas, interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BSR, CSR, ELL, BalancedCOO, row_ids_from_indptr
+
+
+def ref_spmm_coo(rows, cols, vals, m: int, x: jax.Array) -> jax.Array:
+    """Y[r] += v * X[c] — the definition. rows may contain the padding
+    sentinel ``m`` (dropped)."""
+    x2 = x[:, None] if x.ndim == 1 else x
+    p = vals[:, None].astype(jnp.float32) * jnp.take(x2, cols, axis=0).astype(jnp.float32)
+    out = jnp.zeros((m + 1, x2.shape[1]), jnp.float32).at[rows].add(p, mode="drop")[:m]
+    out = out.astype(x2.dtype)
+    return out[:, 0] if x.ndim == 1 else out
+
+
+def ref_spmm_csr(csr: CSR, x: jax.Array) -> jax.Array:
+    rows = jnp.asarray(row_ids_from_indptr(np.asarray(csr.indptr), csr.nnz))
+    return ref_spmm_coo(rows, csr.indices, csr.data, csr.shape[0], x)
+
+
+def ref_spmm_ell(ell: ELL, x: jax.Array) -> jax.Array:
+    m = ell.shape[0]
+    rows = jnp.repeat(jnp.arange(m), ell.width)
+    return ref_spmm_coo(rows, ell.cols.reshape(-1), ell.vals.reshape(-1), m, x)
+
+
+def ref_spmm_balanced(bal: BalancedCOO, x: jax.Array) -> jax.Array:
+    return ref_spmm_coo(bal.rows.reshape(-1), bal.cols.reshape(-1),
+                        bal.vals.reshape(-1), bal.shape[0], x)
+
+
+def ref_spmm_bsr(bsr: BSR, x: jax.Array) -> jax.Array:
+    """Oracle over the padded block-ELL view used by the kernel."""
+    from repro.core.formats import bsr_to_dense
+    dense = bsr_to_dense(bsr)
+    x2 = x[:, None] if x.ndim == 1 else x
+    out = (dense.astype(jnp.float32) @ x2.astype(jnp.float32)).astype(x2.dtype)
+    return out[:, 0] if x.ndim == 1 else out
+
+
+def ref_segment_reduce(p: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Oracle for the in-kernel segment reduction: plain segment_sum."""
+    return jax.ops.segment_sum(p, seg_ids, num_segments=num_segments)

@@ -1,0 +1,92 @@
+"""VSR SpMV — the paper's shuffle-network segment scan, on the VPU.
+
+For N=1 the one-hot MXU matmul of ``vsr.py`` would light up 1/128 of the
+systolic array (paper Insight 1 in reverse), so SpMV keeps the *literal* VSR
+algorithm: a log-depth prefix network whose combine rule is "add if row ids
+match" (paper Fig. 2(e)), realized with lane shifts (``jnp.roll``) — the TPU
+analogue of ``__shfl_up_sync`` — followed by a segment-head dump.
+
+Per tile of T nonzeros:
+  1. p = vals * x[cols]                      (VDL-style vector gather)
+  2. log2(T) shift-and-add-if-same-row steps → p[i] = inclusive segment sum
+  3. segment *ends* (next row differs) dump their sum into the tile's
+     (WIN,) output window; cross-tile rows merge in the spill combine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import BalancedCOO
+from .vsr import plan_windows
+
+
+def _spmv_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win):
+    rows = rows_ref[0, :]
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]
+    base = base_ref[0]
+    t = rows.shape[0]
+    mask = rows < m
+    local = jnp.clip(rows - base, 0, win - 1)
+
+    p = vals.astype(jnp.float32) * jnp.take(x_ref[...], cols)          # (T,)
+    p = jnp.where(mask, p, 0.0)
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
+    # --- the shuffle prefix network: add-if-row-matches, log2(T) rounds ---
+    d = 1
+    while d < t:
+        p_prev = jnp.roll(p, d)
+        r_prev = jnp.roll(rows, d)
+        take = (idx >= d) & (r_prev == rows)
+        p = p + jnp.where(take, p_prev, 0.0)
+        d *= 2
+    # --- segment-head dump: last element of each row-run holds the sum ---
+    r_next = jnp.roll(rows, -1)
+    is_end = (idx == t - 1) | (r_next != rows)
+    contrib = jnp.where(is_end & mask, p, 0.0)
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (win, t), 0)
+    sel = (local[None, :] == row_iota) & (is_end & mask)[None, :]
+    o_ref[0, :] = jnp.sum(jnp.where(sel, contrib[None, :], 0.0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "win", "interpret"))
+def _spmv_call(rows, cols, vals, row_base, x, *, m, win, interpret):
+    n_tiles, t = rows.shape
+    k = x.shape[0]
+    partials = pl.pallas_call(
+        functools.partial(_spmv_kernel, m=m, win=win),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, win), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, win), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, vals, row_base, x)
+
+    idx = row_base[:, None].astype(jnp.int32) + jnp.arange(win, dtype=jnp.int32)[None, :]
+    y = jax.ops.segment_sum(partials.reshape(-1), idx.reshape(-1),
+                            num_segments=m + win + 1)
+    return y[:m]
+
+
+def spmv_vsr(bal: BalancedCOO, x: jax.Array, *,
+             interpret: bool | None = None) -> jax.Array:
+    """NB+PR SpMV. ``x``: (K,)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    assert x.ndim == 1, "spmv_vsr is the N=1 path; use spmm_vsr for N>1"
+    row_base, win = plan_windows(bal)
+    y = _spmv_call(bal.rows, bal.cols, bal.vals, jnp.asarray(row_base), x,
+                   m=bal.shape[0], win=win, interpret=interpret)
+    return y.astype(x.dtype)

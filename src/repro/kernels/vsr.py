@@ -1,0 +1,115 @@
+"""VSR — Vectorized Segment Reduction SpMM (paper §2.1.1), TPU-adapted.
+
+GPU original: each warp takes a fixed quota of nonzeros (workload-balancing),
+computes per-lane partial products, segment-reduces them with a SIMD-shuffle
+prefix network keyed on row ids, and dumps segment heads with atomics.
+
+TPU adaptation (see DESIGN.md §2):
+  * warp → nnz-tile of ``T`` nonzeros; each grid step owns exactly one tile —
+    equal work per step is the workload-balancing invariant.
+  * shuffle network → **one-hot segment matmul on the MXU**: with per-tile
+    local row ids ``l[T]`` and partial products ``P[T, N]``, the segment sums
+    are ``S @ P`` where ``S[w, t] = (l[t] == w)`` — the same algebra the
+    shuffle tree computes, expressed as the 128x128-systolic-friendly op.
+  * atomics → **spill-and-combine**: TPU has no atomics; each tile writes its
+    (WIN, N) window of row sums to a partials buffer and a single
+    segment-sum outside the kernel adds the tile-boundary spills. The spill
+    traffic is n_tiles*WIN*N, asymptotically nnz/T of the output traffic —
+    the same overhead class as the paper's boundary atomics.
+  * VDL (§2.1.2) is the gather ``X[cols]`` returning (T, N) blocks: one
+    logical load covers all N output columns (the V→N limit of float4).
+
+Layout: T is kept a multiple of 128 (lane width) and WIN a multiple of 8
+(sublanes); N is padded to the lane width by the ops wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.formats import BalancedCOO
+
+
+def plan_windows(bal: BalancedCOO) -> tuple[np.ndarray, int]:
+    """Host-side prep: per-tile first row (row_base) and the max row-window
+    WIN any tile spans (padded to a sublane multiple).
+
+    Only valid (non-sentinel) entries count toward the span; the kernel masks
+    sentinels so clamping cannot corrupt real rows."""
+    rows = np.asarray(bal.rows)
+    m = bal.shape[0]
+    valid = rows < m
+    any_valid = valid.any(axis=1)
+    first = np.where(any_valid, rows[:, 0], m).astype(np.int32)
+    last = np.where(any_valid, np.where(valid, rows, -1).max(axis=1), 0)
+    span = int(np.maximum(last - first + 1, 1).max()) if len(rows) else 1
+    win = -(-span // 8) * 8
+    return first, win
+
+
+def _vsr_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win):
+    rows = rows_ref[0, :]                      # (T,) global row ids
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]
+    base = base_ref[0]
+    t = rows.shape[0]
+    mask = rows < m                            # sentinel padding drops out
+    local = jnp.clip(rows - base, 0, win - 1)  # in-window row id
+
+    # dense-row loading (VDL): one gather covers all N columns of this block
+    xg = jnp.take(x_ref[...], cols, axis=0)    # (T, TN)
+    p = vals[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+
+    # segment reduction as one-hot matmul on the MXU
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (win, t), 0)
+    onehot = jnp.where((local[None, :] == row_iota) & mask[None, :], 1.0, 0.0)
+    o_ref[0, :, :] = jnp.dot(onehot.astype(jnp.float32), p,
+                             preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "win", "tile_n", "interpret"))
+def _vsr_call(rows, cols, vals, row_base, x, *, m, win, tile_n, interpret):
+    n_tiles, t = rows.shape
+    k, n_pad = x.shape
+    nb = n_pad // tile_n
+    partials = pl.pallas_call(
+        functools.partial(_vsr_kernel, m=m, win=win),
+        grid=(n_tiles, nb),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, win, tile_n), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, win, n_pad), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, vals, row_base, x)
+
+    # spill combine: tile (t, w) holds the sum for global row row_base[t]+w;
+    # one segment-sum merges boundary-crossing rows (the atomics analogue).
+    idx = (row_base[:, None].astype(jnp.int32) + jnp.arange(win, dtype=jnp.int32)[None, :])
+    y = jax.ops.segment_sum(partials.reshape(-1, n_pad), idx.reshape(-1),
+                            num_segments=m + win + 1)
+    return y[:m]
+
+
+def spmm_vsr(bal: BalancedCOO, x: jax.Array, *, tile_n: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """NB+PR SpMM. ``x``: (K, N) — N padded to ``tile_n`` internally."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2 = x[:, None] if x.ndim == 1 else x
+    k, n = x2.shape
+    row_base, win = plan_windows(bal)
+    n_pad = -(-n // tile_n) * tile_n
+    xp = jnp.pad(x2, ((0, 0), (0, n_pad - n))) if n_pad != n else x2
+    y = _vsr_call(bal.rows, bal.cols, bal.vals, jnp.asarray(row_base), xp,
+                  m=bal.shape[0], win=win, tile_n=tile_n, interpret=interpret)
+    y = y[:, :n].astype(x2.dtype)
+    return y[:, 0] if x.ndim == 1 else y

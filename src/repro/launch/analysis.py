@@ -1,0 +1,220 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute  = FLOPs / (chips x 197 TF/s bf16)
+  memory   = HBM bytes / (chips x 819 GB/s)
+  collect. = per-device collective wire bytes / 50 GB/s ICI
+
+Sources
+-------
+* collective bytes: parsed from the post-SPMD HLO (shapes there are
+  per-device).  XLA's cost_analysis counts while bodies ONCE, so a naive
+  text scan undercounts anything inside the layers scan by its trip count —
+  ``collective_bytes`` therefore walks the computation graph recursively,
+  multiplying each while body by its parsed trip count.
+* FLOPs / HBM bytes: primary values come from the analytic model in
+  ``cost_model.py`` (exact to first order and backend-independent);
+  ``compiled.cost_analysis()`` values are recorded alongside as a
+  diagnostic with the documented scan-body-once caveat (they also reflect
+  the CPU backend's f32 upcasts, not TPU bf16 traffic).
+
+Ring-traffic factors (per-device wire bytes, group size n):
+  all-gather         out_bytes x (n-1)/n
+  all-reduce         in_bytes  x 2(n-1)/n
+  reduce-scatter     in_bytes  x (n-1)/n
+  all-to-all         bytes     x (n-1)/n
+  collective-permute bytes     x 1
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|c64|[suf]\d+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Computation headers start at column 0 and end with '{'; op lines are
+    indented.  Name = first token (sans '%'); params may nest parens."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            tokens = line.split()
+            if tokens[0] == "ENTRY":
+                name = tokens[1].lstrip("%")
+                entry = name
+            elif tokens[0].startswith("%"):
+                name = tokens[0].lstrip("%")
+            else:
+                cur = None
+                continue
+            cur = name
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def _direct_stats(lines: list[str]):
+    """(collective bytes by kind, counts, [(trip, body_name)...]) for one
+    computation body (no recursion)."""
+    bytes_by = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    whiles: list[str] = []
+    for line in lines:
+        s = line.strip()
+        w = _WHILE_RE.search(s)
+        if w and "= " in s:
+            whiles.append(w.group(2))        # body computation name
+            continue
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(", s)
+        if not m:
+            continue
+        opcode = m.group(2)
+        base = None
+        for kind in _COLLECTIVES:
+            if opcode == kind or opcode.startswith(kind + "-"):
+                base = kind
+                break
+        if base is None or opcode.endswith("-done"):
+            continue
+        n = 0
+        g = _GROUPS_EXPLICIT.search(s)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        else:
+            g2 = _GROUPS_IOTA.search(s)
+            if g2:
+                n = int(g2.group(2))
+        n = max(n, 2)
+        ring = (n - 1) / n
+        b = _shape_bytes(m.group(1))
+        if base == "reduce-scatter":
+            b *= n                            # traffic keyed on input size
+        bytes_by[base] += b * _FACTOR[base] * ring
+        counts[base] += 1
+    return bytes_by, counts, whiles
+
+
+def _trip_count(cond_lines: list[str], body_lines: list[str]) -> int:
+    """Trip count from the loop-bound constant in the condition (fallback:
+    any s32 constant in the body header region; final fallback 1)."""
+    for lines in (cond_lines, body_lines):
+        vals = [int(v) for v in _TRIP_RE.findall("\n".join(lines))]
+        vals = [v for v in vals if v > 1]
+        if vals:
+            return max(vals)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    # map body name -> condition name (from while lines anywhere)
+    cond_of: dict[str, str] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond_of[w.group(2)] = w.group(1)
+
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def visit(name: str, depth=0) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        lines = comps.get(name, [])
+        bytes_by, counts, whiles = _direct_stats(lines)
+        for body in whiles:
+            trip = _trip_count(comps.get(cond_of.get(body, ""), []),
+                               comps.get(body, []))
+            if depth > 8:
+                continue
+            sub_b, sub_c = visit(body, depth + 1)
+            for k in _COLLECTIVES:
+                bytes_by[k] += trip * sub_b[k]
+                counts[k] += trip * sub_c[k]
+        memo[name] = (bytes_by, counts)
+        return memo[name]
+
+    bytes_by, counts = visit(entry)
+    out = dict(bytes_by)
+    out.update({f"n_{k}": v for k, v in counts.items()})
+    out["total_wire_bytes"] = sum(bytes_by[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_global: float
+    bytes_global: float
+    wire_bytes_per_dev: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    hlo_flops_per_dev: float = 0.0
+    hlo_bytes_per_dev: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops: float, bytes_: float, wire_bytes: float, chips: int,
+                   model_flops: float, hlo_flops: float = 0.0,
+                   hlo_bytes: float = 0.0) -> Roofline:
+    compute_s = flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = bytes_ / (chips * HBM_BW)
+    collective_s = wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        flops_global=flops, bytes_global=bytes_, wire_bytes_per_dev=wire_bytes,
+        chips=chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if flops else 0.0,
+        hlo_flops_per_dev=hlo_flops, hlo_bytes_per_dev=hlo_bytes)
+
+
+def summarize(artifact: dict) -> str:
+    r = artifact["roofline"]
+    return (f"{artifact['arch']:>18s} {artifact['cell']:>11s} "
+            f"mesh={artifact['mesh']:<6s} "
+            f"C={r['compute_s']:.3e}s M={r['memory_s']:.3e}s "
+            f"X={r['collective_s']:.3e}s → {r['bottleneck']:<10s} "
+            f"useful={r['useful_ratio']:.2f}")

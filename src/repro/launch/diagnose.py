@@ -1,0 +1,114 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Collective-traffic diagnosis for one dry-run cell: per-while-body wire
+bytes (trip-multiplied) and the top individual collective ops, with HLO
+metadata (op_name) so each byte is attributable to a model-code line.
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch phi4-mini-3.8b \
+      --shape prefill_32k [--multipod]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.configs import ARCH_NAMES, get
+from repro.models import SHAPES, Model
+
+from . import analysis
+from .input_specs import build_cell
+from .mesh import make_production_mesh
+
+
+def diagnose(hlo_text: str, top: int = 18) -> str:
+    comps = analysis._split_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    cond_of = {}
+    for name, lines in comps.items():
+        for line in lines:
+            w = analysis._WHILE_RE.search(line)
+            if w:
+                cond_of[w.group(2)] = w.group(1)
+
+    # effective multiplier per computation (product of enclosing trips)
+    mult = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        lines = comps.get(name, [])
+        _, _, whiles = analysis._direct_stats(lines)
+        for body in whiles:
+            trip = analysis._trip_count(comps.get(cond_of.get(body, ""), []),
+                                        comps.get(body, []))
+            mult[body] = mult.get(name, 1.0) * trip
+            if body not in seen:
+                seen.add(body)
+                order.append(body)
+
+    rows = []
+    body_tot = {}
+    for name, m in mult.items():
+        for line in comps.get(name, []):
+            s = line.strip()
+            mm = re.search(r"=\s*(\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(", s)
+            if not mm:
+                continue
+            opcode = mm.group(2)
+            base = None
+            for kind in analysis._COLLECTIVES:
+                if opcode == kind or opcode.startswith(kind + "-"):
+                    base = kind
+            if base is None or opcode.endswith("-done"):
+                continue
+            g = analysis._GROUPS_EXPLICIT.search(s)
+            n = 0
+            if g:
+                n = len([x for x in g.group(1).split(",") if x.strip()])
+            else:
+                g2 = analysis._GROUPS_IOTA.search(s)
+                if g2:
+                    n = int(g2.group(2))
+            n = max(n, 2)
+            b = analysis._shape_bytes(mm.group(1))
+            if base == "reduce-scatter":
+                b *= n
+            wire = b * analysis._FACTOR[base] * (n - 1) / n * m
+            meta = re.search(r'op_name="([^"]*)"', s)
+            rows.append((wire, base, m, mm.group(1)[:60],
+                         meta.group(1)[-80:] if meta else "?"))
+            body_tot[name] = body_tot.get(name, 0.0) + wire
+
+    out = ["== per-computation totals (trip-multiplied) =="]
+    for name, tot in sorted(body_tot.items(), key=lambda kv: -kv[1])[:8]:
+        out.append(f"  {tot/1e9:10.2f} GB  x{mult.get(name,1):<6.0f} {name[:70]}")
+    out.append(f"== top {top} collective ops ==")
+    for wire, base, m, shape, meta in sorted(rows, key=lambda r: -r[0])[:top]:
+        out.append(f"  {wire/1e9:10.2f} GB {base:<18s} x{m:<7.0f} {shape:<40s} {meta}")
+    total = sum(r[0] for r in rows)
+    out.append(f"TOTAL wire: {total/1e9:.2f} GB/dev → {total/50e9:.3f}s ICI")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--shape", choices=[c.name for c in SHAPES], required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    cell = next(c for c in SHAPES if c.name == args.shape)
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    model = Model(cfg)
+    fn, specs, donate = build_cell(model, cell, mesh)
+    with mesh:
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*specs).compile()
+    print(diagnose(compiled.as_text(), args.top))
+
+
+if __name__ == "__main__":
+    main()

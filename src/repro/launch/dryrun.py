@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape-cell) on
+the production meshes, prove memory/sharding coherence, and emit the
+roofline artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --multipod
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+  python -m repro.launch.dryrun --all --multipod
+
+Artifacts: results/dryrun/<arch>__<shape>__<mesh>.json
+  {memory_analysis, cost_analysis, collective bytes, roofline terms}
+Skipped cells (long_500k on pure full-attention archs; see DESIGN.md §6)
+emit a skip artifact so the 40-cell table stays complete.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+from repro.configs import ARCH_NAMES, get
+from repro.models import SHAPES, Model
+from repro.models.config import ShapeCell
+
+from .analysis import collective_bytes, roofline_terms, summarize
+from .cost_model import cell_cost
+from .input_specs import build_cell
+from .mesh import make_production_mesh
+
+RESULTS = os.path.join(os.getcwd(), "results", "dryrun")
+
+
+def cell_by_name(name: str) -> ShapeCell:
+    return next(c for c in SHAPES if c.name == name)
+
+
+def should_skip(cfg, cell: ShapeCell) -> str | None:
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k-token cache per layer is "
+                "quadratic-prefill territory; skipped per spec, see DESIGN.md §6")
+    return None
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str = RESULTS,
+             tag: str = "") -> dict:
+    cfg = get(arch)
+    cell = cell_by_name(shape)
+    mesh_name = ("multi" if multi_pod else "single") + (f"-{tag}" if tag else "")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+    skip = should_skip(cfg, cell)
+    if skip:
+        artifact = {"arch": arch, "cell": shape, "mesh": mesh_name,
+                    "status": "skipped", "reason": skip}
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"SKIP {arch} {shape}: {skip}")
+        return artifact
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = Model(cfg)
+    fn, args, donate = build_cell(model, cell, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_dict = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes", "peak_memory_in_bytes"):
+        mem_dict[key] = getattr(mem, key, None)
+    print("memory_analysis:", mem_dict)
+
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" not in k)}
+    print("cost_analysis[flops]:", cost.get("flops"),
+          " bytes:", cost.get("bytes accessed"))
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # primary FLOPs/bytes from the analytic model (cost_model.py); HLO
+    # cost_analysis values recorded as the per-device diagnostic (it counts
+    # scan bodies once and reflects CPU f32 upcasts — see analysis.py).
+    cm = cell_cost(cfg, cell)
+    roof = roofline_terms(cm.flops, cm.hbm_bytes,
+                          coll["total_wire_bytes"], chips, cm.model_flops,
+                          hlo_flops=float(cost.get("flops", 0.0)),
+                          hlo_bytes=float(cost.get("bytes accessed", 0.0)))
+
+    artifact = {
+        "arch": arch, "cell": shape, "mesh": mesh_name, "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_dict,
+        "cost_analysis": cost,
+        "collectives": coll,
+        "cost_model": cm.to_dict(),
+        "roofline": roof.to_dict(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(summarize(artifact))
+    return artifact
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=[c.name for c in SHAPES])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have artifacts")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix (e.g. opt1) for §Perf iterations")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch in ARCH_NAMES:
+            for cell in SHAPES:
+                mesh_name = "multi" if args.multipod else "single"
+                path = os.path.join(args.out, f"{arch}__{cell.name}__{mesh_name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"CACHED {arch} {cell.name} {mesh_name}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", cell.name, "--out", args.out]
+                if args.multipod:
+                    cmd.append("--multipod")
+                print(">>>", " ".join(cmd), flush=True)
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    failures.append((arch, cell.name))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("ALL CELLS OK")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    run_cell(args.arch, args.shape, args.multipod, args.out, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x shape-cell) input:
+weak-type-correct, sharded, zero allocation — the dry-run lowers against
+these directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import Model, ModelConfig, ShapeCell
+from repro.models.params import abstract_params
+from repro.train import OptConfig, TrainConfig, make_train_step
+
+from .sharding_rules import (LONG_CTX_OVERRIDES, TRAIN_RULES, make_sharding_fn,
+                             resolve_rules)
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def rules_for_cell(cell: ShapeCell, cfg: ModelConfig | None = None) -> dict:
+    if cell.name == "long_500k":
+        rules = resolve_rules(TRAIN_RULES, LONG_CTX_OVERRIDES)
+    else:
+        rules = resolve_rules(TRAIN_RULES)
+    if cell.kind in ("train", "prefill"):
+        # §Perf iteration 2-3: weight-gathered (ZeRO-3-style) regime — GEMM
+        # outputs pinned batch-only; decode keeps classic TP.
+        rules["__gather_weights__"] = True
+    elif cfg is not None:
+        # §Perf iteration 12: serving keeps weights TP-sharded over `model`
+        # and REPLICATED over the DP axes whenever they fit (<8 GB/chip) —
+        # FSDP at decode re-gathers every weight each token.  The 1T/72B
+        # archs keep FSDP sharding (they cannot fit model-axis-only).
+        from repro.models.params import param_bytes
+        from repro.models.transformer import model_specs
+        per_dev = param_bytes(model_specs(cfg)) / 16
+        if per_dev < 8e9:
+            rules["embed"] = ()
+    return rules
+
+
+def finalize_rules(rules: dict, mesh: Mesh) -> dict:
+    # §Perf iterations 4+10: one MoE dispatch group per DEVICE — group-local
+    # sort/scatter, group↔expert reshard as a true A2A
+    rules["__moe_groups__"] = int(mesh.size)
+    return rules
+
+
+def train_config_for(cfg: ModelConfig) -> TrainConfig:
+    """bf16 optimizer moments for the ≥50B archs (fits 512 chips; §Dry-run)."""
+    big = cfg.name in ("kimi-k2-1t-a32b", "qwen2-vl-72b")
+    return TrainConfig(opt=OptConfig(moment_dtype="bfloat16" if big else "float32"))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, sfn) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    tok = _sds((b, s), jnp.int32, sfn(("batch", None)))
+    out = {"tokens": tok}
+    if cell.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32, sfn(("batch", None)))
+    if cfg.family == "audio":
+        out["frames"] = _sds((b, cfg.num_frames, cfg.d_model), jnp.float32,
+                             sfn(("batch", None, None)))
+    return out
+
+
+def _cache_logical(path_keys: tuple, ndim: int) -> tuple:
+    last = path_keys[-1]
+    if last in ("k", "v"):
+        if ndim == 6:
+            return ("groups", "inner", "batch", "kv_heads", "cache_seq", "head_dim")
+        return ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+    if last == "ssm":
+        return ("groups", "inner", "batch", "heads", None, None)
+    if last == "conv":
+        return ("groups", "inner", "batch", None, "ssm_in")
+    if last == "wkv":
+        # rwkv6 has 40 heads (not divisible by model=16): replicate heads,
+        # shard over batch only
+        return ("layers", "batch", None, None, None)
+    if last in ("tm_prev", "cm_prev"):
+        return ("layers", "batch", "embed")
+    if last == "memory":
+        return ("batch", None, "embed")
+    if last == "length":
+        return ()
+    raise ValueError(f"unknown cache leaf {path_keys}")
+
+
+def cache_specs(model: Model, batch: int, max_len: int, sfn) -> Any:
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+    def mk(path, leaf):
+        keys = tuple(p.key for p in path)
+        logical = _cache_logical(keys, leaf.ndim)
+        return _sds(leaf.shape, leaf.dtype, sfn(logical))
+
+    return jax.tree_util.tree_map_with_path(mk, shapes)
+
+
+def state_specs(model: Model, tcfg: TrainConfig, sfn) -> dict:
+    params = abstract_params(model.specs, sfn)
+    mdt = jnp.dtype(tcfg.opt.moment_dtype)
+    moments = jax.tree_util.tree_map(
+        lambda p: _sds(p.shape, mdt, p.sharding), params)
+    return {
+        "params": params,
+        "opt": {"step": _sds((), jnp.int32, sfn(())), "m": moments,
+                "v": jax.tree_util.tree_map(lambda x: x, moments)},
+    }
+
+
+def build_cell(model: Model, cell: ShapeCell, mesh: Mesh,
+               act_sharding: bool | None = None):
+    """Returns (fn, example_args (SDS tree), donate_argnums) for the cell.
+
+    ``act_sharding`` installs the activation-constraint context during
+    tracing (§Perf iteration 1); default on, REPRO_ACT_SHARDING=0 reverts
+    to the unconstrained baseline for before/after artifacts."""
+    import os
+
+    from repro.models.sharding_ctx import activation_sharding
+
+    cfg = model.cfg
+    rules = finalize_rules(rules_for_cell(cell, cfg), mesh)
+    sfn = make_sharding_fn(mesh, rules)
+    if act_sharding is None:
+        act_sharding = os.environ.get("REPRO_ACT_SHARDING", "1") != "0"
+
+    def wrap(fn):
+        def wrapped(*args):
+            with activation_sharding(mesh, rules, enabled=act_sharding):
+                return fn(*args)
+        return wrapped
+
+    if cell.kind == "train":
+        tcfg = train_config_for(cfg)
+        step = make_train_step(model.loss_fn, tcfg)
+        args = (state_specs(model, tcfg, sfn), batch_specs(cfg, cell, sfn))
+        return wrap(step), args, (0,)
+
+    if cell.kind == "prefill":
+        fn = functools.partial(_prefill_fn, model, cell.seq_len)
+        args = (abstract_params(model.specs, sfn), batch_specs(cfg, cell, sfn))
+        return wrap(fn), args, ()
+
+    # decode: one new token against a seq_len-deep cache
+    fn = _decode_fn(model)
+    toks = _sds((cell.global_batch, 1), jnp.int32, sfn(("batch", None)))
+    args = (abstract_params(model.specs, sfn),
+            cache_specs(model, cell.global_batch, cell.seq_len, sfn), toks)
+    return wrap(fn), args, (1,)
+
+
+def _prefill_fn(model, max_len, params, batch):
+    return model.prefill(params, batch, max_len)
+
+
+def _decode_fn(model):
+    def fn(params, caches, tokens):
+        return model.decode_step(params, caches, tokens)
+    return fn

@@ -1,0 +1,3 @@
+"""Architecture zoo: configs, layers, and the Model assembly."""
+from .config import SHAPES, ModelConfig, MoEConfig, ShapeCell, SparseFFNConfig, SSMConfig
+from .model import Model

@@ -1,0 +1,53 @@
+"""Sequence-chunked LM cross-entropy.
+
+Materializing (B, S, V) logits for train_4k at vocab 200k would be ~0.8 TB
+global — instead the unembed + softmax-CE runs per sequence chunk inside a
+scan, so peak logits memory is (B, chunk, V).  Gradients flow through the
+scan as usual.  This is a production-standard memory trick (recorded in
+EXPERIMENTS.md §Perf as part of the baseline, not a hillclimb step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(hidden: jax.Array, w_unembed: jax.Array, labels: jax.Array,
+            chunk: int = 512):
+    """hidden (B,S,D), w_unembed (D,V), labels (B,S) int32 (-1 = ignore).
+    Returns (mean CE over valid tokens, n_valid)."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    if s % c:
+        pad = c - s % c
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s = s + pad
+    nc = s // c
+    hc = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    from .sharding_ctx import constrain
+    # §Perf iteration 1: vocab-shard the unembed weight (one small gather of
+    # the FSDP'd table) so chunk logits come out vocab-sharded — instead of
+    # GSPMD all-reducing replicated f32 logits per chunk (8 GB/chunk).
+    w_unembed = constrain(w_unembed, (None, "vocab"))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, y = xs
+        h = constrain(h, ("batch", None, None))
+        logits = jnp.einsum("bcd,dv->bcv", h.astype(jnp.float32),
+                            w_unembed.astype(jnp.float32))
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(y, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((logz - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (hc, yc))
+    return tot / jnp.maximum(cnt, 1.0), cnt

@@ -1,0 +1,211 @@
+"""Mixture-of-Experts with the paper's workload-balancing principle applied
+to token→expert dispatch.
+
+The dispatch problem IS the paper's problem: tokens (nonzeros) distribute
+unevenly over experts (rows).  Two dispatch paths mirror the paper's 2x2:
+
+* ``onehot`` (parallel-reduction analogue): dispatch/combine as dense
+  one-hot einsums — every token-expert pair materializes, reduction on the
+  MXU.  Efficient only when tokens-per-expert is small (paper Insight 1/3).
+* ``sort`` (sequential/merge analogue): argsort tokens by expert id, place
+  into capacity-bounded per-expert slots — the row-binning form of
+  workload-balancing ([6,9] in the paper); overflow drops (capacity factor).
+
+``dispatch="auto"`` applies the selection rule with the same shape as the
+paper's Fig. 4: small total work → PR path, large → SR path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MoEConfig
+from .layers import dot
+from .sharding_ctx import constrain
+
+
+def select_dispatch(tokens: int, cfg: MoEConfig) -> str:
+    if cfg.dispatch != "auto":
+        return cfg.dispatch
+    # paper Insight 3 analogue: total work per expert large → occupancy is
+    # already high → the cheap (sort) path; tiny expert batches → one-hot.
+    # Threshold recalibrated from benchmarks/moe_dispatch.py (sort wins from
+    # ~8 tokens/expert on this backend; see EXPERIMENTS.md §Selection).
+    tokens_per_expert = tokens * cfg.top_k / cfg.num_experts
+    return "onehot" if tokens_per_expert <= 8 else "sort"
+
+
+def capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(np.ceil(cfg.capacity_factor * tokens * cfg.top_k / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)
+
+
+def router(p: dict, x: jax.Array, cfg: MoEConfig):
+    """x: (T, d) → (gates (T, k), experts (T, k), aux_loss)."""
+    # §Perf iteration 11: the router lives on the same 1-group-per-device
+    # ("tokens") sharding as the dispatch streams — mixed 32-way/256-way
+    # shardings made the backward all-gather the full (T, d) stream.
+    x = constrain(x, ("tokens", None))
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["w_router"].astype(jnp.float32))
+    logits = constrain(logits, ("tokens", None))
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate, idx = _topk_rows(gates_all, cfg.top_k)
+    gate = constrain(gate, ("tokens", None))
+    idx = constrain(idx, ("tokens", None))
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * <f, p>.  Counts via a
+    # one-hot reduction (T stays sharded; only a (E,) partial-sum crosses
+    # devices) — a global scatter here made GSPMD gather the whole (T, E)
+    # gate matrix (§Perf iteration 5).
+    me = gates_all.mean(0)
+    ce = jnp.sum(jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32),
+                 axis=(0, 1))
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return gate, idx, aux
+
+
+def _topk_rows(x: jax.Array, k: int):
+    """Row-wise top-k via k iterative argmaxes.  lax.top_k lowers to a TopK
+    custom-call that GSPMD cannot partition (it all-gathered the full (T, E)
+    gate matrix, §Perf iteration 9); argmax partitions row-locally."""
+    vals, idxs = [], []
+    cur = x
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        cur = jnp.where(jax.nn.one_hot(i, x.shape[-1], dtype=bool), -jnp.inf, cur)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def _expert_ffn(p: dict, h: jax.Array) -> jax.Array:
+    """h: (E, C, d) → (E, C, d), SwiGLU per expert (batched on the E axis —
+    EP shards this einsum over the model axis)."""
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_up"], preferred_element_type=jnp.float32)
+    gate = jnp.einsum("ecd,edf->ecf", h, p["w_gate"], preferred_element_type=jnp.float32)
+    act = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", act.astype(h.dtype), p["w_down"],
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def moe_sort(p: dict, x: jax.Array, cfg: MoEConfig, groups: int | None = None):
+    """Sort-based (workload-balanced row-binning) dispatch, in the GShard
+    *grouped* formulation: tokens split into G groups (one per DP shard on
+    the production mesh), each group sorts/bins its own tokens with a
+    group-local capacity, entirely shard-locally.  The only cross-device
+    dispatch traffic is the (G, E, C, d) buffer resharding onto the
+    expert-parallel axis — the hierarchical all-to-all.
+
+    §Perf iteration 4: the ungrouped global argsort/scatter made GSPMD
+    replicate the (T·k, d) token stream per layer (f32 all-reduces of
+    240 GB tensors on kimi-k2); grouping removes all of it.  x: (T, d)."""
+    from .sharding_ctx import moe_groups
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g = groups if groups is not None else moe_groups()
+    g = max(1, min(g, t))
+    while t % g:
+        g //= 2
+    tg = t // g
+    cap = capacity(tg, cfg)
+
+    gate, idx, aux = router(p, x, cfg)                         # (T, k) each
+
+    # §Perf iteration 6: gather-free dispatch.  GSPMD partitions scatters
+    # and sorts group-locally but lowers dynamic *gathers* of the token
+    # stream as replicate-and-all-reduce (3.4 TB/dev on kimi-k2) — so data
+    # moves exclusively via static repeats and scatters; indices travel
+    # through one small int sort; the combine is a static reshape-sum.  The
+    # only remaining collective is the (G,E,C,d) buffer A2A.
+    gl = ("tokens", None)                                      # group-local 2D
+    tgk = tg * k
+    flat_e = constrain(idx.reshape(g, tgk), gl)
+    flat_j = jnp.broadcast_to(jnp.arange(tgk, dtype=jnp.int32)[None], (g, tgk))
+    flat_g = constrain(gate.reshape(g, tgk), gl)
+    xg = constrain(x.reshape(g, tg, d), ("tokens", None, None))
+
+    # rank tokens within their expert: one int-only sort
+    se, sj = jax.lax.sort((flat_e, flat_j), dimension=1, num_keys=1,
+                          is_stable=True)
+    first = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos = jnp.arange(tgk)[None, :] - jnp.take_along_axis(first, se, axis=1)
+    slot_s = jnp.where(pos < cap, se * cap + pos, e * cap)     # overflow → drop
+    # back to unsorted token order (scatter, not gather).  All scatters here
+    # go through put_along_axis: its HLO carries operand_batching_dims on the
+    # group axis, which GSPMD partitions locally — vmap'd .at[] scatters fell
+    # back to replicate+all-reduce (§Perf iterations 6-7).
+    slot_u = constrain(jnp.put_along_axis(
+        jnp.zeros((g, tgk), jnp.int32), sj, slot_s, axis=1, inplace=False), gl)
+
+    # token replication via broadcast+reshape — jnp.repeat lowers to a
+    # constant-index gather, which GSPMD replicates-and-all-reduces (§it.7)
+    xrep = jnp.broadcast_to(xg[:, :, None, :], (g, tg, k, d)).reshape(g, tgk, d)
+    # §Perf iteration 8: pin the scatter TARGET batch-only before the expert
+    # reshard — a scatter whose target dim is model-sharded (propagated back
+    # from eb) makes GSPMD replicate-and-all-reduce the whole stream.
+    buf = jax.vmap(lambda sl, sr: jnp.zeros((e * cap + 1, d), x.dtype)
+                   .at[sl].set(sr, mode="drop"))(slot_u, xrep)
+    buf = constrain(buf, ("tokens", None, None))
+    eb = constrain(buf[:, :-1].reshape(g, e, cap, d),
+                   ("batch", "experts", None, None))           # the A2A
+    h = _expert_ffn_grouped(p, eb)
+    h = constrain(h, ("batch", "experts", None, None)).reshape(g, e * cap, d)
+    h = constrain(h, ("tokens", None, None))                   # A2A back
+
+    # scatter expert outputs straight back to unsorted stream positions
+    u_of_slot = jnp.put_along_axis(
+        jnp.full((g, e * cap + 1), tgk, jnp.int32), slot_u,
+        jnp.broadcast_to(jnp.arange(tgk, dtype=jnp.int32)[None], (g, tgk)),
+        axis=1, inplace=False)
+    out_u = jax.vmap(lambda uo, hh: jnp.zeros((tgk + 1, d), x.dtype)
+                     .at[uo].set(hh, mode="drop"))(u_of_slot[:, :-1], h)[:, :-1]
+    out_u = constrain(out_u, ("tokens", None, None))
+    # dropped tokens were never written → rows stay zero; gates weight the rest
+    contrib = out_u * flat_g[..., None].astype(x.dtype)
+    yg = contrib.reshape(g, tg, k, d).sum(axis=2)              # static combine
+    y = constrain(yg, ("tokens", None, None)).reshape(t, d)
+    return y, aux
+
+
+def _expert_ffn_grouped(p: dict, h: jax.Array) -> jax.Array:
+    """h: (G, E, C, d) → (G, E, C, d); E sharded over model (EP)."""
+    up = jnp.einsum("gecd,edf->gecf", h, p["w_up"], preferred_element_type=jnp.float32)
+    gate = jnp.einsum("gecd,edf->gecf", h, p["w_gate"], preferred_element_type=jnp.float32)
+    act = jax.nn.silu(gate) * up
+    return jnp.einsum("gecf,efd->gecd", act.astype(h.dtype), p["w_down"],
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def moe_onehot(p: dict, x: jax.Array, cfg: MoEConfig):
+    """One-hot-einsum (parallel-reduction) dispatch — the GShard form.
+    Only sane for small T (the selector guards this)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = capacity(t, cfg)
+    gate, idx, aux = router(p, x, cfg)
+
+    # position of token within each chosen expert
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (T, k, E)
+    pos = jnp.cumsum(onehot.reshape(t * k, e), axis=0).reshape(t, k, e) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (T, k)
+    keep = pos < cap
+    disp = (jax.nn.one_hot(idx, e, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., None, :]
+            )[..., :cap]                                       # (T, k, E, C)
+    expert_in = jnp.einsum("td,tkec->ecd", x, disp)
+    h = _expert_ffn(p, expert_in)
+    comb = disp * gate[..., None, None].astype(x.dtype)
+    y = jnp.einsum("ecd,tkec->td", h, comb)
+    return y, aux
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig):
+    """x: (..., d) → (..., d), aux. Flattens leading dims into tokens."""
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    path = select_dispatch(flat.shape[0], cfg)
+    y, aux = (moe_onehot if path == "onehot" else moe_sort)(p, flat, cfg)
+    return y.reshape(*lead, x.shape[-1]), aux

@@ -1,0 +1,88 @@
+"""Parameter specification machinery: one tree of ``ParamSpec`` per model,
+consumed three ways:
+
+  * ``init_params``      — materialize real arrays (smoke tests, examples)
+  * ``abstract_params``  — ShapeDtypeStructs only (dry-run lowering; a 1T
+                           model never allocates)
+  * ``param_shardings``  — NamedShardings from logical axis names via the
+                           rules table in ``repro.launch.sharding_rules``
+
+Logical axis names used across the zoo:
+  layers, groups, inner            — stacking axes for lax.scan
+  embed                            — d_model (FSDP-sharded)
+  vocab                            — vocabulary (TP-sharded)
+  heads, kv_heads, head_dim        — attention
+  ff                               — MLP hidden (TP-sharded)
+  experts                          — MoE experts (EP-sharded)
+  nnz, tiles                       — sparse-FFN value streams
+  conv, state, ssm_in              — SSM internals
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple                  # one name-or-None per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"            # normal | zeros | ones
+    scale: float | None = None      # None → 1/sqrt(fan_in) with fan_in=shape[-2 or 0]
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _std(spec: ParamSpec) -> float:
+    if spec.scale is not None:
+        return spec.scale
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+    return 1.0 / float(np.sqrt(fan_in))
+
+
+def init_params(rng: jax.Array, specs) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, spec in zip(keys, leaves):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            out.append((jax.random.normal(key, spec.shape, jnp.float32)
+                        * _std(spec)).astype(spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs, sharding_fn: Callable | None = None) -> Any:
+    """ShapeDtypeStruct tree; ``sharding_fn(logical) -> Sharding`` optional."""
+    def mk(spec: ParamSpec):
+        sh = sharding_fn(spec.logical) if sharding_fn else None
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+    return jax.tree_util.tree_map(mk, specs,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_shardings(specs, sharding_fn: Callable) -> Any:
+    return jax.tree_util.tree_map(lambda s: sharding_fn(s.logical), specs,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves))

@@ -1,0 +1,98 @@
+"""RWKV-6 (Finch) — attention-free token mixing with data-dependent decay.
+
+Time-mix: all per-token projections (r,k,v,g and the decay LoRA) are computed
+in parallel (MXU work); only the rank-1 WKV state update scans over time.
+State per head is (N, N) — the outer-product memory.
+
+Decode carries (wkv_state (B,H,N,N), x_prev (B,D)) — no KV cache, which is
+why rwkv6 runs the long_500k cell at O(1) memory in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dot
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array | None):
+    """x (B,S,D) → previous-token view; x_prev (B,D) seeds streaming mode."""
+    if x_prev is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu[None, None, :].astype(x.dtype)
+
+
+def wkv6_scan(r, k, v, w, u, state):
+    """The WKV recurrence.  r,k,v (B,S,H,N); w (B,S,H,N) decay in (0,1);
+    u (H,N) bonus; state (B,H,N,N).  Returns (y (B,S,H,N), state)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                   # (B,H,N) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)               # rank-1 update
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))  # scan over S
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def rwkv6_time_mix(p: dict, x: jax.Array, n_heads: int, *,
+                   state=None, x_prev=None):
+    """x (B,S,D). Returns (out, (state, x_prev_new))."""
+    bsz, s, d = x.shape
+    n = d // n_heads
+    prev = _token_shift(x, x_prev)
+
+    xr = _lerp(x, prev, p["mu_r"])
+    xk = _lerp(x, prev, p["mu_k"])
+    xv = _lerp(x, prev, p["mu_v"])
+    xw = _lerp(x, prev, p["mu_w"])
+    xg = _lerp(x, prev, p["mu_g"])
+
+    r = dot(xr, p["w_r"]).reshape(bsz, s, n_heads, n)
+    k = dot(xk, p["w_k"]).reshape(bsz, s, n_heads, n)
+    v = dot(xv, p["w_v"]).reshape(bsz, s, n_heads, n)
+    g = jax.nn.silu(dot(xg, p["w_g"]))
+
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora))
+    lora = dot(xw, p["w_decay_a"])
+    lora = dot(jnp.tanh(lora), p["w_decay_b"])
+    w = jnp.exp(-jnp.exp(jnp.clip(
+        p["w0"][None, None].astype(jnp.float32) + lora.astype(jnp.float32),
+        -8.0, 8.0)))
+    w = w.reshape(bsz, s, n_heads, n)
+
+    if state is None:
+        state = jnp.zeros((bsz, n_heads, n, n), jnp.float32)
+    y, state = wkv6_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w,
+                         p["u_bonus"].reshape(n_heads, n).astype(jnp.float32),
+                         state)
+    # per-head groupnorm
+    mean = y.mean(-1, keepdims=True)
+    var = ((y - mean) ** 2).mean(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (y.reshape(bsz, s, d) * p["ln_w"][None, None].astype(jnp.float32)
+         + p["ln_b"][None, None].astype(jnp.float32))
+    out = dot(y.astype(x.dtype) * g.astype(x.dtype), p["w_o"])
+    return out, (state, x[:, -1])
+
+
+def rwkv6_channel_mix(p: dict, x: jax.Array, *, x_prev=None):
+    """Squared-ReLU channel mix. Returns (out, x_prev_new)."""
+    prev = _token_shift(x, x_prev)
+    xk = _lerp(x, prev, p["mu_ck"])
+    xr = _lerp(x, prev, p["mu_cr"])
+    k = dot(xk, p["w_ck"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = dot(k, p["w_cv"])
+    r = jax.nn.sigmoid(dot(xr, p["w_cr"]).astype(jnp.float32))
+    return r.astype(x.dtype) * kv, x[:, -1]

@@ -1,0 +1,90 @@
+"""Activation-sharding context: explicit with_sharding_constraint hooks.
+
+The №1 baseline finding of the §Perf loop (EXPERIMENTS.md): without
+explicit activation constraints, GSPMD propagation sharded the flash-
+attention contraction dim over ``data`` and replicated the batch inside the
+scan — one f32 score all-reduce × 65k trips = 13 TB/device wire traffic on
+phi4 prefill_32k.  Layers therefore consult this context at the few
+load-bearing points (attention q/k/v, block outputs, loss logits) and pin
+the batch/heads/vocab dims.
+
+The context is a no-op unless installed (tests and CPU examples run
+unconstrained); ``build_cell`` installs it during tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: dict, enabled: bool = True):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules) if enabled else None
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def gather_weights_mode() -> bool:
+    ctx = getattr(_TLS, "ctx", None)
+    return bool(ctx and ctx[1].get("__gather_weights__"))
+
+
+def constrain_gemm(w: jax.Array | None = None, out: jax.Array | None = None):
+    """§Perf iterations 2-3: weight-gathered (ZeRO-3-style) GEMMs for
+    train/prefill cells, where batch·seq·d activations dwarf layer weights.
+
+    Iteration 2 (refuted): pinning only the GEMM *output* batch-only made
+    GSPMD compute TP-sharded and then all-gather the f32 activations —
+    wire bytes went UP 1.9x.  Iteration 3: additionally pin the *weight*
+    replicated at use-site, so the all-gather moves to the small bf16
+    weight and the activation never leaves the device.  Decode cells
+    (weights >> activations) keep classic TP — the marker is absent."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None or not ctx[1].get("__gather_weights__"):
+        return w if out is None else out
+    if w is not None:
+        return constrain(w, (None,) * w.ndim)
+    return constrain(out, ("batch",) + (None,) * (out.ndim - 1))
+
+
+def moe_groups() -> int:
+    """§Perf iteration 4: number of dispatch groups for the GShard-style
+    grouped MoE (one group per DP shard → group-local sort/scatter, the only
+    cross-device dispatch traffic is the expert all-to-all)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return 1
+    return int(ctx[1].get("__moe_groups__", 1))
+
+
+def constrain(x: jax.Array, logical: tuple) -> jax.Array:
+    """Pin ``x`` to the mesh axes the rules give ``logical``; dims that do
+    not divide evenly fall back to unsharded (e.g. 24 heads on model=16)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    used: set = set()
+    dims = []
+    for size, name in zip(x.shape, logical):
+        axes = rules.get(name, ()) if name is not None else ()
+        picked = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        total = 1
+        for a in picked:
+            total *= mesh.shape[a]
+        if picked and size % total == 0:
+            used.update(picked)
+            dims.append(picked[0] if len(picked) == 1 else picked)
+        else:
+            dims.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*dims)))

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) block — chunked-parallel for train/prefill, recurrent for
+decode.
+
+The chunked form is the TPU-correct one: within a chunk of length L the
+recurrence is rewritten as two matmuls (an L×L decay-masked score matrix and
+a state outer-product), so the MXU does the work; only the O(S/L) inter-chunk
+state scan is sequential.  A per-timestep scan would leave the MXU idle for
+the whole sequence — this is the SSM analogue of the paper's Insight 3
+(enough total work → feed the wide unit).
+
+Shapes: x (B, S, H, P) heads x head_dim; B/C (B, S, N) (single group);
+dt (B, S, H); A (H,) negative; state (B, H, N, P).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import SSMConfig
+from .layers import dot
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, *, chunk: int):
+    """Chunked SSD scan. Returns (y, final_state).
+
+    x (B,S,H,P)  dt (B,S,H)  a_log (H,)  b,c (B,S,N)  d_skip (H,)
+    """
+    bsz, s_in, h, p = x.shape
+    n = b.shape[-1]
+    l = min(chunk, s_in)
+    pad = (-s_in) % l
+    if pad:  # dt=0 padding: decay=exp(0)=1, input=0 → state passes through
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s = s_in + pad
+    nc = s // l
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,) < 0
+    dt32 = dt.astype(jnp.float32)
+    la = dt32 * a[None, None, :]                               # (B,S,H) log-decay
+    u = (dt32[..., None] * x.astype(jnp.float32))              # dt-scaled input
+
+    # chunk views
+    lac = la.reshape(bsz, nc, l, h)
+    cum = jnp.cumsum(lac, axis=2)                              # (B,NC,L,H)
+    total = cum[:, :, -1, :]                                   # (B,NC,H)
+    uc = u.reshape(bsz, nc, l, h, p)
+    bc = b.reshape(bsz, nc, l, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, l, n).astype(jnp.float32)
+
+    # ---- intra-chunk: decay-masked score matmul (the MXU part) ----
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                        preferred_element_type=jnp.float32)     # (B,NC,L,L)
+    ii = jnp.arange(l)
+    causal = ii[:, None] >= ii[None, :]
+    # decay(i,j) = exp(cum_i - cum_j) for i >= j, per head
+    dec = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                           -60.0, 0.0))                         # (B,NC,L,L,H)
+    m = scores[..., None] * jnp.where(causal[None, None, :, :, None], dec, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, uc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk state summaries: S_k = sum_j exp(total - cum_j) B_j ⊗ u_j ----
+    w = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60.0, None))  # (B,NC,L,H)
+    sk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, w, uc,
+                    preferred_element_type=jnp.float32)         # (B,NC,H,N,P)
+
+    # ---- inter-chunk recurrence (the only sequential part, NC steps) ----
+    def step(hstate, inp):
+        ski, toti = inp
+        h_prev = hstate
+        h_new = h_prev * jnp.exp(toti)[..., None, None] + ski
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    hfin, h_prevs = jax.lax.scan(
+        step, h0, (sk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                  # (B,NC,H,N,P)
+
+    # ---- inter-chunk contribution: C_i · h_{k-1} * exp(cum_i) ----
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, jnp.exp(cum), h_prevs,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :s_in].astype(x.dtype), hfin
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c, d_skip):
+    """One-token recurrence. state (B,H,N,P); x (B,H,P); dt (B,H); b,c (B,N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * a[None, :])                          # (B,H)
+    u = dt32[..., None] * x.astype(jnp.float32)                 # (B,H,P)
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bn,bhp->bhnp", b.astype(jnp.float32), u))
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), state)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def causal_conv(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):
+    """Depthwise causal conv. x (B,S,C), w (W,C). If ``cache`` (B,W-1,C) is
+    given, runs in streaming mode and returns (y, new_cache)."""
+    width = w.shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache, x], axis=1)               # (B, W-1+S, C)
+    else:
+        ctx = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(ctx[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    new_cache = ctx[:, -(width - 1):, :] if width > 1 else ctx[:, :0, :]
+    return y.astype(x.dtype), new_cache
+
+
+def mamba2_mix(p: dict, x: jax.Array, cfg: SSMConfig, d_model: int, *,
+               state=None, conv_cache=None, decode: bool = False):
+    """Full Mamba2 mixer. x (B,S,D). Returns (y, (state, conv_cache))."""
+    d_inner = cfg.expand * d_model
+    h = d_inner // cfg.head_dim
+    n = cfg.d_state
+
+    from .sharding_ctx import constrain
+    zxbcdt = dot(x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    # pin the split streams batch-only: mixed shardings across the split
+    # make the backward pad/concat re-gather the whole xbc stream (§Perf)
+    z = constrain(z, ("batch", None, None))
+    xbc = constrain(xbc, ("batch", None, None))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    xbc, conv_cache = causal_conv(xbc, p["w_conv"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(*xs.shape[:-1], h, cfg.head_dim)
+
+    if decode:
+        y, state = ssd_decode_step(state, xs[:, 0], dt[:, 0], p["a_log"],
+                                   b[:, 0], c[:, 0], p["d_skip"])
+        y = y[:, None]                                          # (B,1,H,P)
+    else:
+        y, state = ssd_chunked(xs, dt, p["a_log"], b, c, p["d_skip"],
+                               chunk=cfg.chunk)
+    y = y.reshape(*y.shape[:-2], d_inner)
+    # gated RMSNorm (mamba2's norm-before-out)
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) * (1.0 + p["norm_w"].astype(x.dtype))
+    out = dot(y, p["w_out"])
+    return out, (state, conv_cache)

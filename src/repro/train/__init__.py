@@ -1,0 +1,2 @@
+from .optim import OptConfig, adamw_update, init_opt_state, schedule
+from .step import TrainConfig, init_state, make_train_step

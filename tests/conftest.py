@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only dryrun.py forces 512 host devices."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def random_csr(rng, m, k, density, dtype=np.float32):
+    from repro.core import csr_from_dense
+    a = (rng.random((m, k)) * (rng.random((m, k)) < density)).astype(dtype)
+    return csr_from_dense(a), a

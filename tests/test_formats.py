@@ -1,0 +1,89 @@
+"""Format construction/roundtrip tests + hypothesis property tests."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CSR, csr_from_coo, csr_from_dense, csr_to_balanced,
+                        csr_to_bsr, csr_to_ell, bsr_to_dense, matrix_stats,
+                        row_ids_from_indptr)
+
+from conftest import random_csr
+
+
+def test_csr_roundtrip(rng):
+    csr, a = random_csr(rng, 37, 53, 0.2)
+    assert np.allclose(np.asarray(csr.to_dense()), a, atol=1e-6)
+
+
+def test_csr_from_coo_duplicates():
+    csr = csr_from_coo([0, 0, 1], [1, 1, 2], [1.0, 2.0, 3.0], (2, 4))
+    d = np.asarray(csr.to_dense())
+    assert d[0, 1] == 3.0 and d[1, 2] == 3.0 and csr.nnz == 2
+
+
+def test_ell_padding(rng):
+    csr, a = random_csr(rng, 20, 30, 0.15)
+    ell = csr_to_ell(csr)
+    lens = np.diff(np.asarray(csr.indptr))
+    assert ell.width == max(1, lens.max())
+    # padded vals are zero → ELL matvec equals dense
+    x = rng.standard_normal(30).astype(np.float32)
+    y = (np.asarray(ell.vals) * x[np.asarray(ell.cols)]).sum(1)
+    assert np.allclose(y, a @ x, atol=1e-4)
+
+
+def test_balanced_invariants(rng):
+    csr, a = random_csr(rng, 64, 64, 0.1)
+    bal = csr_to_balanced(csr, tile=32)
+    rows = np.asarray(bal.rows).reshape(-1)
+    vals = np.asarray(bal.vals).reshape(-1)
+    # every tile has exactly `tile` slots; valid prefix matches nnz
+    assert bal.rows.shape[1] == 32
+    valid = rows < 64
+    assert valid.sum() == csr.nnz
+    assert np.all(vals[~valid] == 0)
+    # row ids are non-decreasing across the stream (row-major order)
+    assert np.all(np.diff(rows[valid]) >= 0)
+
+
+def test_bsr_roundtrip(rng):
+    csr, a = random_csr(rng, 33, 70, 0.08)
+    bsr = csr_to_bsr(csr, bm=8, bk=16)
+    assert np.allclose(np.asarray(bsr_to_dense(bsr)), a, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(1, 40),
+       density=st.floats(0.0, 0.5), seed=st.integers(0, 2**31 - 1),
+       tile=st.sampled_from([8, 32, 128]))
+def test_property_format_equivalence(m, k, density, seed, tile):
+    """All formats represent the same matrix (property over random inputs)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.random((m, k)) * (rng.random((m, k)) < density)).astype(np.float32)
+    csr = csr_from_dense(a)
+    x = rng.standard_normal(k).astype(np.float32)
+    ref = a @ x
+    bal = csr_to_balanced(csr, tile=tile)
+    rows = np.asarray(bal.rows).reshape(-1)
+    cols = np.asarray(bal.cols).reshape(-1)
+    vals = np.asarray(bal.vals).reshape(-1)
+    y = np.zeros(m + 1, np.float32)
+    np.add.at(y, rows, vals * x[cols])
+    assert np.allclose(y[:m], ref, atol=1e-3)
+    ell = csr_to_ell(csr)
+    y2 = (np.asarray(ell.vals) * x[np.asarray(ell.cols)]).sum(1)
+    assert np.allclose(y2, ref, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 50), k=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_property_stats(m, k, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((m, k)) < 0.2).astype(np.float32)
+    csr = csr_from_dense(a)
+    s = matrix_stats(csr)
+    assert s.nnz == int(a.sum())
+    assert abs(s.avg_row - a.sum(1).mean()) < 1e-9
+    assert s.max_row == int(a.sum(1).max())
+    assert 0 <= s.density <= 1

@@ -1,0 +1,185 @@
+"""Per-architecture smoke tests (reduced configs, real CPU execution):
+forward/train-step shape + finiteness, prefill/decode agreement, and
+family-specific invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get, get_smoke
+from repro.models import Model, SHAPES
+from repro.models.config import SparseFFNConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16, seed=1):
+    k = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(k, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(k, (b, cfg.num_frames, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_step(arch):
+    """One forward/train step on CPU: output shapes + no NaNs (deliverable f)."""
+    cfg = get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(metrics["tokens"]) > 0
+    # one grad step moves the loss
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_match(arch):
+    """decode_step(prefill(t[:n])) logits == prefill(t[:n+1]) logits."""
+    cfg = get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s)
+    batch.pop("labels")
+    logits_p, cache = jax.jit(lambda p, x: model.prefill(p, x, 32))(params, batch)
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (b, 1), 0, cfg.vocab_size)
+    logits_d, cache = jax.jit(model.decode_step)(params, cache, nxt)
+    batch2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    logits_p2, _ = jax.jit(lambda p, x: model.prefill(p, x, 32))(params, batch2)
+    rel = float(jnp.abs(logits_d - logits_p2).max() /
+                (jnp.abs(logits_p2).max() + 1e-9))
+    assert rel < 2e-2, (arch, rel)
+
+
+def test_multi_step_decode_matches_prefill():
+    cfg = get_smoke("llama3.2-1b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 10), 0, cfg.vocab_size)
+    _, cache = model.prefill(params, {"tokens": toks[:, :4]}, 24)
+    decode = jax.jit(model.decode_step)
+    for i in range(4, 9):
+        logits_d, cache = decode(params, cache, toks[:, i : i + 1])
+    logits_p, _ = model.prefill(params, {"tokens": toks[:, :9]}, 24)
+    # predictions should agree after the same prefix
+    assert int(jnp.argmax(logits_d)) == int(jnp.argmax(logits_p))
+
+
+def test_sliding_window_smoke():
+    """gemma3: local layers must not attend beyond the window."""
+    cfg = get_smoke("gemma3-12b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    b, s = 1, 40   # longer than window=16
+    batch = _batch(cfg, b, s)
+    loss, _ = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))
+    # decode past the window: rolling cache stays finite & consistent
+    batch.pop("labels")
+    _, cache = model.prefill(params, batch, 64)
+    for i in range(5):
+        tok = jnp.full((b, 1), i + 3, jnp.int32)
+        logits, cache = jax.jit(model.decode_step)(params, cache, tok)
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_moe_balance_aux():
+    cfg = get_smoke("olmoe-1b-7b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    loss, metrics = jax.jit(model.loss_fn)(params, _batch(cfg, 2, 32))
+    assert float(metrics["aux_loss"]) > 0  # router entropy term active
+
+
+def test_rwkv_state_streaming():
+    """rwkv6: chunked prefill == one-shot prefill (state handoff exact)."""
+    cfg = get_smoke("rwkv6-3b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 12), 0, cfg.vocab_size)
+    logits_a, _ = model.prefill(params, {"tokens": toks}, 16)
+    _, cache = model.prefill(params, {"tokens": toks[:, :11]}, 16)
+    logits_b, _ = model.decode_step(params, cache, toks[:, 11:12])
+    np.testing.assert_allclose(np.asarray(logits_a), np.asarray(logits_b),
+                               atol=1e-3)
+
+
+def test_sparse_ffn_variant():
+    """The paper-as-feature: llama smoke with pruned FFN trains and differs
+    from dense."""
+    cfg = get_smoke("llama3.2-1b").scaled(
+        sparse_ffn=SparseFFNConfig(density=0.2, tile=64))
+    model = Model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    loss, _ = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    vg = g["blocks"]["ffn"]["v_gate"]
+    assert float(jnp.abs(vg).sum()) > 0, "sparse FFN values receive gradient"
+
+
+def test_mamba_chunked_vs_stepwise():
+    """zamba2's SSD: chunked scan == step-by-step recurrence."""
+    from repro.models.ssm import ssd_chunked, ssd_decode_step
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 16, 4, 8, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.random((b, s, h)).astype(np.float32) * 0.5 + 0.1)
+    a_log = jnp.asarray(rng.random(h).astype(np.float32))
+    bb = jnp.asarray(rng.standard_normal((b, s, n)).astype(np.float32))
+    cc = jnp.asarray(rng.standard_normal((b, s, n)).astype(np.float32))
+    d = jnp.zeros(h, jnp.float32)
+    y_chunk, state_chunk = ssd_chunked(x, dt, a_log, bb, cc, d, chunk=4)
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], a_log,
+                                   bb[:, t], cc[:, t], d)
+        ys.append(y)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state_chunk), np.asarray(state),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.layers import flash_attention
+    rng = np.random.default_rng(0)
+    b, hq, hk, s, d = 2, 4, 2, 33, 16
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hk, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hk, s, d)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, q_block=8, kv_block=16)
+    # naive reference
+    kr = jnp.repeat(k, hq // hk, axis=1)
+    vr = jnp.repeat(v, hq // hk, axis=1)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q, kr) / np.sqrt(d)
+    mask = np.tril(np.ones((s, s), bool))
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    ref = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1), vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_flash_attention_window():
+    from repro.models.layers import flash_attention
+    rng = np.random.default_rng(1)
+    b, h, s, d, w = 1, 2, 64, 8, 8
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, window=w, q_block=16, kv_block=16)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(d)
+    ii = np.arange(s)
+    mask = (ii[None, :] <= ii[:, None]) & (ii[None, :] > ii[:, None] - w)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    ref = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)

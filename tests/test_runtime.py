@@ -1,0 +1,147 @@
+"""Fault-tolerance: checkpoint atomicity, restart-from-failure, preemption,
+straggler detection, elastic (mesh-shape-changing) restore, serving engine."""
+import os
+import shutil
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke
+from repro.data import DataConfig, SyntheticLM
+from repro.models import Model
+from repro.runtime import DriverConfig, TrainDriver
+from repro.serve import Request, ServeEngine
+from repro.train import OptConfig, TrainConfig, init_state, make_train_step
+
+
+@pytest.fixture()
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _setup(steps=30):
+    cfg = get_smoke("llama3.2-1b")
+    model = Model(cfg)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=steps))
+    step = jax.jit(make_train_step(model.loss_fn, tcfg))
+    data = SyntheticLM(DataConfig(seed=0, vocab_size=cfg.vocab_size,
+                                  seq_len=16, global_batch=4))
+    data_fn = lambda i: {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+    state = init_state(model.init(jax.random.PRNGKey(0)), tcfg)
+    return model, step, data_fn, state
+
+
+def test_checkpoint_atomic_and_gc(tmp_ckpt):
+    mgr = CheckpointManager(tmp_ckpt, keep=2)
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]          # gc keeps last 2
+    back = mgr.restore(4, like=tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.arange(5))
+    # a stray tmp dir must be ignored
+    os.makedirs(os.path.join(tmp_ckpt, "step_000000099.tmp-dead"))
+    assert mgr.latest_step() == 4
+
+
+def test_async_checkpoint(tmp_ckpt):
+    mgr = CheckpointManager(tmp_ckpt)
+    tree = {"w": jnp.ones((64, 64))}
+    mgr.save_async(7, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_driver_failure_recovery(tmp_ckpt):
+    model, step, data_fn, state = _setup(30)
+    boom = {"armed": True}
+
+    def failure_hook(s):
+        if s == 25 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected failure")
+
+    d = TrainDriver(DriverConfig(total_steps=30, checkpoint_every=10,
+                                 checkpoint_dir=tmp_ckpt),
+                    step, data_fn, failure_hook=failure_hook)
+    final = d.run(state)
+    assert d.restarts == 1
+    assert int(final["opt"]["step"]) == 30
+    # steps 20..24 were replayed after rollback to the step-20 checkpoint
+    replayed = [e.step for e in d.events].count(21)
+    assert replayed == 2
+
+
+def test_driver_resume_from_disk(tmp_ckpt):
+    """Simulates a job restart: second driver picks up where the first died."""
+    model, step, data_fn, state = _setup(20)
+    d1 = TrainDriver(DriverConfig(total_steps=10, checkpoint_every=5,
+                                  checkpoint_dir=tmp_ckpt), step, data_fn)
+    s1 = d1.run(state)
+    d2 = TrainDriver(DriverConfig(total_steps=20, checkpoint_every=5,
+                                  checkpoint_dir=tmp_ckpt), step, data_fn)
+    s2 = d2.run(state)  # `state` is the structure donor; values come from disk
+    assert int(s2["opt"]["step"]) == 20
+    assert d2.events[0].step == 10            # resumed, not restarted
+
+
+def test_straggler_watchdog(tmp_ckpt):
+    model, step, data_fn, state = _setup(12)
+    slow = {12: 0.3}
+
+    def slow_data(i):
+        time.sleep(slow.get(i, 0.0))
+        return data_fn(i)
+
+    # wrap step to inject latency instead (data time isn't measured)
+    orig_step = step
+
+    def slow_step(st, b):
+        s = int(st["opt"]["step"])
+        if s == 8:
+            time.sleep(0.5)
+        return orig_step(st, b)
+
+    d = TrainDriver(DriverConfig(total_steps=12, checkpoint_every=50,
+                                 checkpoint_dir=tmp_ckpt, straggler_factor=3.0),
+                    slow_step, data_fn)
+    d.run(state)
+    assert len(d.straggler_events) >= 1
+
+
+def test_elastic_restore(tmp_ckpt):
+    """Checkpoint written under one sharding restores onto a different mesh."""
+    mgr = CheckpointManager(tmp_ckpt)
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mgr.save(1, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    back = mgr.restore(1, like=tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+    assert back["w"].sharding == sh["w"]
+
+
+def test_serve_engine_matches_sequential_decode():
+    cfg = get_smoke("llama3.2-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=2, max_len=64)
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=5))
+    done = eng.run_until_done()
+    assert all(r.done for r in done) and len(done) == 3
+    # oracle: plain greedy decode for request 0
+    toks = jnp.asarray([prompts[0]], jnp.int32)
+    logits, cache = model.prefill(params, {"tokens": toks}, 64)
+    want = [int(jnp.argmax(logits[0]))]
+    for _ in range(4):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[want[-1]]], jnp.int32))
+        want.append(int(jnp.argmax(logits[0])))
+    assert done[0].out == want
