@@ -9,41 +9,43 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (KERNELS, PreparedMatrix, SelectorThresholds,
-                        calibrate, rmat_suite, rmat_suite_small, select_kernel)
+from repro.core import (LOGICAL_KERNELS, SelectorThresholds, calibrate,
+                        execute, plan, rmat_suite, rmat_suite_small,
+                        select_kernel)
 from .common import csv_row, geomean, time_fn
 
 NS = (1, 2, 4, 8, 32, 128)
 
 
-def run(full: bool = False):
+def run(full: bool = False, save_thresholds_to: str | None = None):
     suite = rmat_suite() if full else rmat_suite_small()
     rng = np.random.default_rng(0)
-    preps = {k: PreparedMatrix.from_csr(v, tile=512) for k, v in suite.items()}
+    plans = {k: plan(v, tile=512) for k, v in suite.items()}
     xs = {(m, n): jnp.asarray(rng.standard_normal((p.csr.shape[1], n)).astype(np.float32))
-          for m, p in preps.items() for n in NS}
+          for m, p in plans.items() for n in NS}
 
     times: dict = {}
-    for mname, prep in preps.items():
+    for mname, p in plans.items():
         for n in NS:
             x = xs[(mname, n)]
             xv = x[:, 0] if n == 1 else x
-            for kname, fn in KERNELS.items():
-                fmt = prep.ell if kname.startswith("rs") else prep.balanced
-                times[(mname, n, kname)] = time_fn(lambda: fn(fmt, xv))
+            for kname in LOGICAL_KERNELS:
+                times[(mname, n, kname)] = time_fn(
+                    lambda kn=kname: execute(p, xv, impl=kn))
 
     def loss_of(select_fn):
         ratios = []
-        for mname, prep in preps.items():
+        for mname, p in plans.items():
             for n in NS:
-                choice = select_fn(prep, n)
-                oracle = min(times[(mname, n, k)] for k in KERNELS)
+                choice = select_fn(p, n)
+                oracle = min(times[(mname, n, k)] for k in LOGICAL_KERNELS)
                 ratios.append(times[(mname, n, choice)] / oracle)
         return geomean(ratios) - 1.0
 
     rows = []
-    # calibrated thresholds (re-derived for this backend, paper §2.2 method)
-    th, report = calibrate(suite, NS, times=times)
+    # calibrated thresholds (re-derived for this backend, paper §2.2 method);
+    # persisted as JSON when asked, for auto-load via $REPRO_THRESHOLDS
+    th, report = calibrate(suite, NS, times=times, save_to=save_thresholds_to)
     rows.append(csv_row("adaptive/calibrated_thresholds", 0.0,
                         f"n={th.n_threshold}_avg={th.pr_avg_row}_cv={th.sr_cv}"))
 
@@ -51,7 +53,7 @@ def run(full: bool = False):
     paper_loss = loss_of(lambda p, n: select_kernel(p.stats, n, SelectorThresholds.PAPER_GPU))
     rows.append(csv_row("adaptive/rule_loss_vs_oracle", 0.0, f"{rule_loss:.3f}"))
     rows.append(csv_row("adaptive/paperGPU_rule_loss", 0.0, f"{paper_loss:.3f}"))
-    for kname in KERNELS:
+    for kname in LOGICAL_KERNELS:
         single = loss_of(lambda p, n, k=kname: k)
         rows.append(csv_row(f"adaptive/single_{kname}_loss", 0.0, f"{single:.3f}"))
     return rows

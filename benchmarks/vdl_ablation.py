@@ -9,8 +9,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (PreparedMatrix, rmat_suite, rmat_suite_small,
-                        spmm_as_n_spmv, spmm_nb_pr)
+from repro.core import (execute, plan, rmat_suite, rmat_suite_small,
+                        spmm_as_n_spmv)
 from .common import csv_row, geomean, time_fn
 
 
@@ -19,9 +19,10 @@ def run(full: bool = False, n: int = 2):
     rng = np.random.default_rng(0)
     rows, speedups = [], []
     for name, csr in suite.items():
-        bal = PreparedMatrix.from_csr(csr, tile=512).balanced
+        p = plan(csr, tile=512, n_hint=n)
+        bal = p.substrate("balanced")
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
-        t_vdl = time_fn(lambda: spmm_nb_pr(bal, x))
+        t_vdl = time_fn(lambda: execute(p, x, impl="nb_pr"))
         t_nspmv = time_fn(lambda: spmm_as_n_spmv(bal, x))
         speedups.append(t_nspmv / t_vdl)
         rows.append(csv_row(f"vdl_ablation/{name}", t_vdl * 1e6,

@@ -7,26 +7,25 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import KERNELS, PreparedMatrix, matrix_stats, rmat_suite_small, rmat_suite
+from repro.core import LOGICAL_KERNELS, execute, plan, rmat_suite_small, rmat_suite
 from .common import csv_row, time_fn
 
 
 def run(full: bool = False):
     suite = rmat_suite() if full else rmat_suite_small()
     rows = []
-    wins = {k: 0 for k in KERNELS}
+    wins = {k: 0 for k in LOGICAL_KERNELS}
     win_stats = []
     rng = np.random.default_rng(0)
     for name, csr in suite.items():
-        prep = PreparedMatrix.from_csr(csr, tile=512)
+        p = plan(csr, tile=512)
         x = jnp.asarray(rng.standard_normal(csr.shape[1]).astype(np.float32))
         times = {}
-        for kname, fn in KERNELS.items():
-            fmt = prep.ell if kname.startswith("rs") else prep.balanced
-            times[kname] = time_fn(lambda f=fmt, fn=fn: fn(f, x))
+        for kname in LOGICAL_KERNELS:
+            times[kname] = time_fn(lambda kn=kname: execute(p, x, impl=kn))
         best = min(times, key=times.get)
         wins[best] += 1
-        s = prep.stats
+        s = p.stats
         win_stats.append((best, s.avg_row, s.cv))
         rows.append(csv_row(f"vsr_ablation/{name}/{best}",
                             times[best] * 1e6,

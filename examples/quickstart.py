@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a skewed R-MAT matrix, runs all four kernels of the 2x2 design space
-(workload-balancing x reduction style), lets the paper's Fig.4 rules pick
-one, and cross-checks the Pallas TPU kernels in interpret mode."""
+Builds a skewed R-MAT matrix, plans it once (stats + Fig. 4 selector; the
+kernel substrate is built lazily on first execute), runs all four kernels of
+the 2x2 design space through the one ``execute`` front door, and cross-checks
+the Pallas backend in interpret mode via the same door."""
 import sys
 
 import numpy as np
@@ -12,41 +13,43 @@ import jax.numpy as jnp
 
 sys.path.insert(0, "src")
 
-from repro.core import (KERNELS, PreparedMatrix, adaptive_spmm, matrix_stats,
-                        rmat, select_kernel)
-from repro.kernels import spmm_csc, spmm_vsr, spmv_vsr
+from repro.core import LOGICAL_KERNELS, execute, plan
 
 
 def main():
     # 1. a skewed sparse matrix (Graph500 R-MAT parameters)
+    from repro.core import rmat
     csr = rmat(scale=10, edge_factor=16, seed=0)
-    stats = matrix_stats(csr)
-    print(f"matrix: {csr.shape}, nnz={csr.nnz}, avg_row={stats.avg_row:.1f}, "
-          f"cv={stats.cv:.2f} (skewed={stats.skewed})")
 
-    # 2. offline prep: both substrates + statistics (paper's usage mode)
-    prep = PreparedMatrix.from_csr(csr, tile=512)
+    # 2. offline plan: statistics + thresholds once; substrates built lazily,
+    #    only for the kernels that actually run (paper's offline/online split)
+    p = plan(csr, tile=512)
+    s = p.stats
+    print(f"matrix: {csr.shape}, nnz={csr.nnz}, avg_row={s.avg_row:.1f}, "
+          f"cv={s.cv:.2f} (skewed={s.skewed}); backend={p.backend}")
     rng = np.random.default_rng(0)
 
-    # 3. the 2x2 space, SpMV and SpMM
+    # 3. the 2x2 space, SpMV and SpMM, all through execute()
     for n in (1, 4, 64):
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
         xv = x[:, 0] if n == 1 else x
-        picked = select_kernel(stats, n)
-        outs = {k: np.asarray(adaptive_spmm(prep, xv, impl=k)) for k in KERNELS}
+        picked = p.select(n)
+        outs = {k: np.asarray(execute(p, xv, impl=k)) for k in LOGICAL_KERNELS}
         ref = outs["nb_pr"]
         agree = all(np.allclose(o, ref, atol=1e-3) for o in outs.values())
-        print(f"N={n:3d}: rules pick {picked}; all four kernels agree: {agree}")
+        print(f"N={n:3d}: rules pick {picked}; all four kernels agree: {agree} "
+              f"(substrates built so far: {p.built_substrates})")
 
-    # 4. the Pallas TPU kernels (interpret mode on CPU = correctness harness)
+    # 4. the Pallas TPU backend through the same front door (interpret mode
+    #    on CPU = correctness harness) — just a different registry column
     x = jnp.asarray(rng.standard_normal((csr.shape[1], 16)).astype(np.float32))
-    y_vsr = np.asarray(spmm_vsr(prep.balanced, x, interpret=True))
-    y_csc = np.asarray(spmm_csc(prep.ell, x, interpret=True))
-    y_spmv = np.asarray(spmv_vsr(prep.balanced, x[:, 0], interpret=True))
-    ref = np.asarray(adaptive_spmm(prep, x, impl="nb_pr"))
-    print(f"pallas vsr maxerr: {np.abs(y_vsr - ref).max():.2e}")
-    print(f"pallas csc maxerr: {np.abs(y_csc - ref).max():.2e}")
-    print(f"pallas spmv maxerr: {np.abs(y_spmv - ref[:, 0]).max():.2e}")
+    ref = np.asarray(execute(p, x, impl="nb_pr"))
+    for k in ("nb_pr", "rs_sr"):
+        y = np.asarray(execute(p, x, impl=k, backend="pallas", interpret=True))
+        print(f"pallas {k} maxerr: {np.abs(y - ref).max():.2e}")
+    y1 = np.asarray(execute(p, x[:, 0], impl="nb_pr", backend="pallas",
+                            interpret=True))
+    print(f"pallas spmv maxerr: {np.abs(y1 - ref[:, 0]).max():.2e}")
 
 
 if __name__ == "__main__":

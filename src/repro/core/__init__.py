@@ -1,10 +1,15 @@
-"""Core sparse library: formats, statistics, the 2x2 kernel space, selector."""
+"""Core sparse library: formats, statistics, the 2x2 kernel space, and the
+plan/execute dispatch subsystem (registry + lazy substrates + unified VJP)."""
 from .formats import (BSR, CSR, ELL, BalancedCOO, bsr_to_dense, csr_from_coo,
                       csr_from_dense, csr_to_balanced, csr_to_bsr, csr_to_ell,
-                      row_ids_from_indptr)
+                      reset_build_counts, row_ids_from_indptr)
+from .plan import SparsePlan, execute, execute_pattern, plan
+from .registry import (LOGICAL_KERNELS, KernelEntry, available, backends_for,
+                       default_backend, register, resolve)
 from .rmat import rmat, rmat_suite, rmat_suite_small
 from .selector import (PreparedMatrix, SelectorThresholds, adaptive_spmm,
-                       calibrate, select_kernel)
-from .spmm import (KERNEL_FORMAT, KERNELS, spmm_as_n_spmv, spmm_nb_pr,
-                   spmm_nb_pr_trainable, spmm_nb_sr, spmm_rs_pr, spmm_rs_sr)
+                       calibrate, default_thresholds, load_thresholds,
+                       save_thresholds, select_kernel)
+from .spmm import (spmm_as_n_spmv, spmm_nb_pr, spmm_nb_pr_trainable,
+                   spmm_nb_sr, spmm_rs_pr, spmm_rs_sr)
 from .stats import MatrixStats, matrix_stats

@@ -129,6 +129,20 @@ class BSR:
 # host-side (numpy) construction
 # ---------------------------------------------------------------------------
 
+#: constructions per substrate since process start (or last reset).  The
+#: plan/execute layer promises to build only the substrate the selected kernel
+#: consumes; tests assert that promise by diffing these counters.
+BUILD_COUNTS: dict[str, int] = {"ell": 0, "balanced": 0, "bsr": 0}
+
+
+def reset_build_counts() -> dict[str, int]:
+    """Zero the substrate-construction counters; returns the previous values."""
+    prev = dict(BUILD_COUNTS)
+    for k in BUILD_COUNTS:
+        BUILD_COUNTS[k] = 0
+    return prev
+
+
 def row_ids_from_indptr(indptr: np.ndarray, nnz: int) -> np.ndarray:
     """Expand CSR indptr to a per-nonzero row-id vector."""
     indptr = np.asarray(indptr)
@@ -165,6 +179,7 @@ def csr_from_dense(a: np.ndarray) -> CSR:
 
 
 def csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
+    BUILD_COUNTS["ell"] += 1
     indptr = np.asarray(csr.indptr)
     indices = np.asarray(csr.indices)
     data = np.asarray(csr.data)
@@ -184,6 +199,7 @@ def csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
 def csr_to_balanced(csr: CSR, tile: int = 512) -> BalancedCOO:
     """nnz-split: chop the row-major nonzero stream into fixed `tile` quotas.
     This is the paper's workload-balancing step (Fig. 2(e))."""
+    BUILD_COUNTS["balanced"] += 1
     indptr = np.asarray(csr.indptr)
     indices = np.asarray(csr.indices)
     data = np.asarray(csr.data)
@@ -206,6 +222,7 @@ def csr_to_balanced(csr: CSR, tile: int = 512) -> BalancedCOO:
 def csr_to_bsr(csr: CSR, bm: int = 8, bk: int = 128) -> BSR:
     """Coarsen to (bm, bk) dense blocks — any block containing >=1 nonzero is
     materialized. The TPU-granule view of the sparsity pattern."""
+    BUILD_COUNTS["bsr"] += 1
     indptr = np.asarray(csr.indptr)
     indices = np.asarray(csr.indices)
     data = np.asarray(csr.data)

@@ -1,0 +1,375 @@
+"""Plan/execute: the one dispatch path for every sparse kernel in the repo.
+
+The paper's usage mode is offline-profile / online-dispatch; Dai et al.
+(PAPERS.md) name the same split "offline plan, online execute".  This module
+makes that split the architecture:
+
+* ``plan(csr, ...)`` is the **offline** step: compute the Fig. 4 statistics
+  once, fix the thresholds (auto-loading a persisted calibration from
+  ``$REPRO_THRESHOLDS``), pick the backend, and hand back a ``SparsePlan``.
+  Substrates (ELL / BalancedCOO / BSR) are built **lazily** — only the format
+  the selected kernel consumes is ever constructed, and it is cached on first
+  touch.  (The old ``PreparedMatrix`` built both eagerly, doubling prep
+  memory; ``tests/test_plan.py`` pins the new behaviour by counting format
+  constructions.)
+
+* ``execute(plan, x)`` is the **online** step: select the logical kernel from
+  (stats, N), resolve the physical implementation through the backend-aware
+  registry, and run it through a custom VJP that covers all four logical
+  kernels — so ``jax.grad`` works through every kernel, not just ``nb_pr``.
+  ``execute`` is jit-able (close over the plan: ``jax.jit(lambda x:
+  execute(p, x))``); all host-side work happens at plan/trace time.
+
+* ``execute_pattern(rows, cols, vals, shape, x)`` is the training entry:
+  sparse-weight layers own a static pattern and a live value stream, with no
+  CSR in sight — same registry, same VJP.
+
+Gradient math is kernel-independent (the VJP of Y = A·X is dA = G·Xᵀ restricted
+to the pattern, dX = Aᵀ·G), so one backward pair per substrate family serves
+every backend; the forward primal is whatever physical kernel the registry
+resolved.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import registry
+from .formats import (CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
+                      csr_to_ell)
+from .selector import SelectorThresholds, default_thresholds, select_kernel
+from .stats import MatrixStats, matrix_stats
+
+
+# ---------------------------------------------------------------------------
+# the plan object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SparsePlan:
+    """Offline artifact: statistics + thresholds + lazily-built substrates.
+
+    Not a pytree — plans live on the host side of the offline/online split and
+    are closed over (not traced) by jitted execute calls."""
+
+    csr: CSR
+    stats: MatrixStats
+    thresholds: SelectorThresholds
+    backend: str
+    tile: int = 512
+    bsr_block: tuple = (8, 128)
+    _substrates: dict = dataclasses.field(default_factory=dict, repr=False)
+    _opts: dict = dataclasses.field(default_factory=dict, repr=False)
+    _bound: dict = dataclasses.field(default_factory=dict, repr=False)
+    _ell_lens: Any = dataclasses.field(default=None, repr=False)
+    _ell_src: Any = dataclasses.field(default=None, repr=False)
+
+    # -- substrates ---------------------------------------------------------
+    def substrate(self, kind: str):
+        """Build-and-cache the named substrate. Only ever called for the
+        format the resolved kernel consumes — the laziness contract.
+        ``ensure_compile_time_eval`` keeps construction concrete (host-side)
+        even when the first touch happens inside a jit trace of ``execute``."""
+        sub = self._substrates.get(kind)
+        if sub is None:
+            with jax.ensure_compile_time_eval():
+                if kind == "ell":
+                    sub = csr_to_ell(self.csr)
+                elif kind == "balanced":
+                    sub = csr_to_balanced(self.csr, tile=self.tile)
+                elif kind == "bsr":
+                    sub = csr_to_bsr(self.csr, *self.bsr_block)
+                else:
+                    raise ValueError(f"unknown substrate {kind!r}")
+            self._substrates[kind] = sub
+        return sub
+
+    @property
+    def built_substrates(self) -> tuple[str, ...]:
+        return tuple(sorted(self._substrates))
+
+    # -- selection ----------------------------------------------------------
+    def select(self, n: int) -> str:
+        return select_kernel(self.stats, n, self.thresholds)
+
+    def with_thresholds(self, th: SelectorThresholds) -> "SparsePlan":
+        """Same matrix and caches, different decision thresholds."""
+        if th == self.thresholds:
+            return self
+        return dataclasses.replace(self, thresholds=th, _bound={})
+
+    # -- resolution ---------------------------------------------------------
+    def entry(self, name: str, backend: str | None = None) -> registry.KernelEntry:
+        return registry.resolve(name, backend or self.backend)
+
+    def kernel_opts(self, entry: registry.KernelEntry) -> dict:
+        """Host-side prep artifacts for this (entry, matrix) pair, cached.
+        Runs the entry's ``prep`` hook on the concrete substrate once — this
+        is what keeps ``execute`` traceable for Pallas backends."""
+        key = (entry.logical, entry.backend)
+        opts = self._opts.get(key)
+        if opts is None:
+            if entry.prep is None:
+                opts = {}
+            else:
+                with jax.ensure_compile_time_eval():
+                    opts = dict(entry.prep(self.substrate(entry.substrate)))
+            self._opts[key] = opts
+        return opts
+
+    def bound_kernel(self, entry: registry.KernelEntry, interpret: bool | None):
+        """A stable (identity-cached) callable with interpret + prep opts
+        baked in — used as the hashable static of the shared custom VJPs, so
+        repeated executes of the same plan do not retrace."""
+        key = (entry.logical, entry.backend, interpret)
+        fn = self._bound.get(key)
+        if fn is None:
+            fn = functools.partial(entry.fn, interpret=interpret,
+                                   **self.kernel_opts(entry))
+            self._bound[key] = fn
+        return fn
+
+    # -- ELL value-override support -----------------------------------------
+    def ell_lens(self):
+        """(M,) valid-entries-per-row — the ELL padding mask, O(M) from the
+        indptr.  Needed by every ELL-family execute (grad masking)."""
+        if self._ell_lens is None:
+            with jax.ensure_compile_time_eval():
+                lens = np.diff(np.asarray(self.csr.indptr)).astype(np.int32)
+                self._ell_lens = jnp.asarray(lens)
+        return self._ell_lens
+
+    def ell_src(self):
+        """(M, width) gather map from the CSR nonzero stream into the ELL
+        slab — ``ell_vals = where(valid, stream[src], 0)``.  Only the
+        live-value-stream path pays for this (it is width/avg_row times the
+        size of ``ell_lens``)."""
+        if self._ell_src is None:
+            ell = self.substrate("ell")
+            with jax.ensure_compile_time_eval():
+                indptr = np.asarray(self.csr.indptr)
+                j = np.arange(ell.width, dtype=np.int64)[None, :]
+                src = np.minimum(indptr[:-1, None] + j, max(self.csr.nnz - 1, 0))
+                self._ell_src = jnp.asarray(src.astype(np.int32))
+        return self._ell_src
+
+
+def plan(csr: CSR, *, n_hint: int | None = None,
+         thresholds: SelectorThresholds | None = None,
+         backend: str | None = None, tile: int = 512,
+         bsr_block: tuple = (8, 128)) -> SparsePlan:
+    """Offline planning front door.
+
+    ``n_hint``: anticipated N of the dense operand; when given, the substrate
+    for the kernel the selector will pick is built eagerly (prep off the hot
+    path), everything else stays lazy.  ``thresholds=None`` auto-loads a
+    persisted calibration (``$REPRO_THRESHOLDS``) or falls back to defaults;
+    ``backend=None`` picks the platform default (Pallas on TPU, XLA
+    elsewhere)."""
+    p = SparsePlan(
+        csr=csr,
+        stats=matrix_stats(csr),
+        thresholds=thresholds if thresholds is not None else default_thresholds(),
+        backend=backend or registry.default_backend(),
+        tile=tile,
+        bsr_block=tuple(bsr_block),
+    )
+    if n_hint is not None:
+        entry = p.entry(p.select(n_hint))
+        p.substrate(entry.substrate)
+        p.kernel_opts(entry)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the unified custom VJPs — one backward pair per substrate family
+# ---------------------------------------------------------------------------
+
+def _as_2d(a):
+    return (a[:, None], True) if a.ndim == 1 else (a, False)
+
+
+def _coo_bwd(rows, cols, valid, vals, x, g, shape):
+    """Shared cotangent math for any COO-viewable substrate:
+    dvals[e] = <g[row_e,:], x[col_e,:]> (masked), dx = Aᵀ·g."""
+    m, k = shape
+    x2, _ = _as_2d(x)
+    g2, _ = _as_2d(g)
+    g_rows = jnp.take(g2, jnp.minimum(rows, m - 1), axis=0)
+    g_rows = jnp.where(valid[:, None], g_rows, 0)
+    x_cols = jnp.take(x2, cols, axis=0)
+    dvals = jnp.sum(g_rows.astype(jnp.float32) * x_cols.astype(jnp.float32), axis=-1)
+    p = vals.astype(jnp.float32)[:, None] * g_rows.astype(jnp.float32)
+    dx = jax.ops.segment_sum(p, cols, num_segments=k)
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    return dvals, dx
+
+
+def _float0(a):
+    # integer pattern args get symbolic-zero (float0) cotangents
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_balanced(static, rows, cols, vals, x):
+    bound_fn, shape = static
+    bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), tuple(shape))
+    return bound_fn(bal, x)
+
+
+def _exec_balanced_fwd(static, rows, cols, vals, x):
+    return _exec_balanced(static, rows, cols, vals, x), (rows, cols, vals, x)
+
+
+def _exec_balanced_bwd(static, res, g):
+    _, shape = static
+    rows, cols, vals, x = res
+    r, c, v = rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
+    dvals, dx = _coo_bwd(r, c, r < shape[0], v, x, g, shape)
+    return (_float0(rows), _float0(cols),
+            dvals.reshape(vals.shape).astype(vals.dtype), dx)
+
+
+_exec_balanced.defvjp(_exec_balanced_fwd, _exec_balanced_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_ell(static, cols, lens, vals, x):
+    bound_fn, shape = static
+    return bound_fn(ELL(cols, vals, tuple(shape)), x)
+
+
+def _exec_ell_fwd(static, cols, lens, vals, x):
+    return _exec_ell(static, cols, lens, vals, x), (cols, lens, vals, x)
+
+
+def _exec_ell_bwd(static, res, g):
+    _, shape = static
+    cols, lens, vals, x = res
+    m, w = cols.shape
+    g2, _ = _as_2d(g)
+    rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), w)
+    valid = (jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]).reshape(-1)
+    dvals, dx = _coo_bwd(rows, cols.reshape(-1), valid, vals.reshape(-1),
+                         x, g2, shape)
+    return (_float0(cols), _float0(lens),
+            dvals.reshape(vals.shape).astype(vals.dtype), dx)
+
+
+_exec_ell.defvjp(_exec_ell_fwd, _exec_ell_bwd)
+
+
+# ---------------------------------------------------------------------------
+# online front doors
+# ---------------------------------------------------------------------------
+
+def execute(p: SparsePlan, x: jax.Array, *, vals: jax.Array | None = None,
+            impl: str | None = None, backend: str | None = None,
+            interpret: bool | None = None) -> jax.Array:
+    """Run the planned SpMV/SpMM: ``y = A @ x``.
+
+    Differentiable w.r.t. ``x`` and (when given) ``vals`` — a live CSR-ordered
+    nonzero stream overriding the values baked into the plan's substrates,
+    which is how trainable sparse weights ride the adaptive dispatch.  ``impl``
+    forces a logical kernel (oracle / ablation mode); ``backend`` overrides
+    the plan's backend for this call; ``interpret`` is forwarded to Pallas
+    backends."""
+    if vals is not None and vals.size != p.csr.nnz:
+        raise ValueError(f"vals stream has {vals.size} entries but the "
+                         f"matrix has {p.csr.nnz} nonzeros")
+    n = 1 if x.ndim == 1 else x.shape[1]
+    name = impl or p.select(n)
+    entry = p.entry(name, backend)
+    sub = p.substrate(entry.substrate)
+    bound = p.bound_kernel(entry, interpret)
+
+    if not entry.differentiable:
+        # forward-only physical path (e.g. the BSR block-granule backend):
+        # values stay baked, gradients are not defined through it.
+        if vals is not None:
+            raise ValueError(f"backend {entry.backend!r} does not support "
+                             "live value streams; use xla/pallas")
+        return bound(sub, x)
+
+    if entry.substrate == "balanced":
+        v = sub.vals if vals is None else _stream_to_balanced(vals, sub)
+        return _exec_balanced((bound, sub.shape), sub.rows, sub.cols,
+                              v.reshape(-1), x)
+    if entry.substrate == "ell":
+        lens = p.ell_lens()
+        if vals is None:
+            v = sub.vals
+        elif p.csr.nnz == 0:
+            v = jnp.zeros(sub.vals.shape, sub.vals.dtype)
+        else:
+            valid = jnp.arange(sub.width, dtype=jnp.int32)[None, :] < lens[:, None]
+            v = jnp.where(valid, jnp.take(vals.reshape(-1), p.ell_src()), 0)
+            v = v.astype(sub.vals.dtype)
+        return _exec_ell((bound, sub.shape), sub.cols, lens, v, x)
+    raise ValueError(f"substrate {entry.substrate!r} has no differentiable path")
+
+
+def _stream_to_balanced(stream: jax.Array, bal: BalancedCOO) -> jax.Array:
+    """Pad the CSR-ordered nonzero stream to the tile grid (row-major order is
+    preserved by construction, so this is a pure pad+reshape)."""
+    flat = stream.reshape(-1)
+    total = bal.n_tiles * bal.tile
+    return jnp.pad(flat, (0, total - flat.shape[0])).reshape(bal.rows.shape)
+
+
+# module-level bound-kernel cache for the plan-free training entry
+_PATTERN_BOUND: dict = {}
+
+
+def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
+                    shape: tuple, x: jax.Array, *, impl: str = "nb_pr",
+                    backend: str | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Differentiable SpMM over a bare BalancedCOO-layout pattern — the
+    training entry for sparse-weight layers (no CSR, values are live params).
+    rows/cols may be traced (scanned per-layer patterns); they are real args
+    with float0 cotangents, but traced patterns restrict you to backends whose
+    kernels need no host-side prep (the XLA reference backend)."""
+    explicit = backend is not None
+    backend = backend or registry.default_backend()
+    entry = registry.resolve(impl, backend)
+    if entry.prep is not None and isinstance(rows, jax.core.Tracer) and not explicit:
+        # scanned per-layer patterns are traced; the default backend may need
+        # host-side prep it cannot run on tracers — the XLA reference can
+        # always take them, so fall back rather than fail the train step.
+        backend, entry = "xla", registry.resolve(impl, "xla")
+    if entry.substrate != "balanced":
+        raise ValueError(f"execute_pattern needs a balanced-substrate kernel; "
+                         f"({impl!r}, {backend!r}) consumes {entry.substrate!r}")
+    if entry.prep is not None:
+        if isinstance(rows, jax.core.Tracer):
+            raise ValueError(
+                f"backend {backend!r} needs host-side prep ({impl!r}) and "
+                "cannot take a traced pattern; pass concrete rows/cols or "
+                "use backend='xla'")
+        # key prep artifacts by pattern *content* — an id()-based key can be
+        # reused by a new array after GC and serve stale row windows
+        with jax.ensure_compile_time_eval():
+            r = np.asarray(rows)
+        digest = hashlib.sha1(r.tobytes()).hexdigest()
+        key = (entry, interpret, tuple(shape), r.shape, digest)
+    else:
+        key = (entry, interpret)
+    bound = _PATTERN_BOUND.get(key)
+    if bound is None:
+        if len(_PATTERN_BOUND) >= 256:   # bound the per-pattern cache
+            _PATTERN_BOUND.clear()
+        opts = {}
+        if entry.prep is not None:
+            opts = dict(entry.prep(BalancedCOO(
+                rows, cols, jnp.zeros(rows.shape, vals.dtype), tuple(shape))))
+        bound = functools.partial(entry.fn, interpret=interpret, **opts)
+        _PATTERN_BOUND[key] = bound
+    return _exec_balanced((bound, tuple(shape)), rows, cols,
+                          vals.reshape(-1), x)

@@ -1,0 +1,115 @@
+"""Backend-aware kernel registry: one table for the whole dispatch space.
+
+The paper's 2x2 design space (row-split/nnz-balanced x sequential/parallel
+reduction) gives four *logical* kernels.  Each logical kernel may have several
+*physical* implementations — the XLA lowering in ``repro.core.spmm``, the
+Pallas TPU kernels in ``repro.kernels``, the block-granule BSR path — and the
+registry maps ``(logical_kernel, backend)`` onto one ``KernelEntry``.
+
+Kernel modules self-register at import time (see the bottom of
+``core/spmm.py``, ``kernels/vsr.py``, ``kernels/csc.py``, ``kernels/bsr.py``);
+non-XLA backends are imported lazily on first resolve so importing
+``repro.core`` never pulls in Pallas.
+
+An entry's ``fn`` has the uniform signature::
+
+    fn(substrate, x, *, interpret=None, **opts) -> y
+
+where ``substrate`` is the format named by ``entry.substrate`` ("ell",
+"balanced" or "bsr"), ``interpret`` is honoured by Pallas backends (ignored by
+XLA), and ``opts`` are the static per-matrix artifacts produced by the entry's
+optional ``prep`` hook.  ``prep(substrate) -> opts`` runs host-side once, at
+plan time, on concrete arrays — hoisting work like ``plan_windows`` out of the
+traced path so ``execute`` stays jit-able (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Optional
+
+import jax
+
+LOGICAL_KERNELS: tuple[str, ...] = ("rs_sr", "rs_pr", "nb_sr", "nb_pr")
+
+#: substrate format each *logical* kernel consumes on the reference (XLA)
+#: backend; physical backends may substitute their own (BSR does).
+SUBSTRATES: tuple[str, ...] = ("ell", "balanced", "bsr")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    logical: str                 # one of LOGICAL_KERNELS
+    backend: str                 # "xla" | "pallas" | "bsr" | ...
+    substrate: str               # one of SUBSTRATES
+    fn: Callable                 # fn(substrate, x, *, interpret=None, **opts)
+    prep: Optional[Callable] = None   # prep(substrate) -> opts dict (host-side)
+    differentiable: bool = True  # eligible for the unified custom-VJP path
+
+
+_REGISTRY: dict[tuple[str, str], KernelEntry] = {}
+
+# module that registers each backend's kernels; imported on first resolve
+_LAZY_BACKENDS: dict[str, str] = {
+    "xla": "repro.core.spmm",
+    "pallas": "repro.kernels",
+    "bsr": "repro.kernels",
+}
+
+
+def register(logical: str, backend: str, substrate: str, fn: Callable, *,
+             prep: Callable | None = None, differentiable: bool = True) -> KernelEntry:
+    """Register (or replace) the physical implementation of a logical kernel."""
+    if logical not in LOGICAL_KERNELS:
+        raise ValueError(f"unknown logical kernel {logical!r}; "
+                         f"expected one of {LOGICAL_KERNELS}")
+    if substrate not in SUBSTRATES:
+        raise ValueError(f"unknown substrate {substrate!r}; "
+                         f"expected one of {SUBSTRATES}")
+    entry = KernelEntry(logical, backend, substrate, fn, prep, differentiable)
+    _REGISTRY[(logical, backend)] = entry
+    return entry
+
+
+_LOADED_MODULES: set[str] = set()
+
+
+def _ensure_backend_loaded(backend: str) -> None:
+    # tracked by module, not by registry contents: a user pre-registering one
+    # custom override must not suppress the import of the built-in entries
+    mod = _LAZY_BACKENDS.get(backend)
+    if mod is not None and mod not in _LOADED_MODULES:
+        importlib.import_module(mod)
+        _LOADED_MODULES.add(mod)  # only marked on successful import
+
+
+def resolve(logical: str, backend: str) -> KernelEntry:
+    """Look up the physical kernel for (logical, backend)."""
+    _ensure_backend_loaded(backend)
+    try:
+        return _REGISTRY[(logical, backend)]
+    except KeyError:
+        avail = sorted(_REGISTRY)
+        raise KeyError(
+            f"no kernel registered for (logical={logical!r}, backend={backend!r}); "
+            f"registered: {avail}") from None
+
+
+def available(backend: str | None = None) -> tuple[KernelEntry, ...]:
+    """All registered entries, optionally filtered by backend."""
+    if backend is not None:
+        _ensure_backend_loaded(backend)
+    return tuple(e for e in _REGISTRY.values()
+                 if backend is None or e.backend == backend)
+
+
+def backends_for(logical: str) -> tuple[str, ...]:
+    for b in _LAZY_BACKENDS:
+        _ensure_backend_loaded(b)
+    return tuple(b for (l, b) in _REGISTRY if l == logical)
+
+
+def default_backend() -> str:
+    """Pallas compiles natively on TPU; everywhere else the XLA lowerings are
+    the production path (Pallas interpret mode is a correctness harness)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"

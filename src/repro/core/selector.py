@@ -1,4 +1,4 @@
-"""Adaptive kernel selection (paper §2.2, Fig. 4).
+"""Adaptive kernel selection (paper §2.2, Fig. 4) + threshold persistence.
 
 Decision tree, from three low-cost statistics (avg_row, stdv_row, N):
 
@@ -12,18 +12,30 @@ Decision tree, from three low-cost statistics (avg_row, stdv_row, N):
 
 The thresholds are data, not constants: the paper derives them empirically on
 SuiteSparse; we re-derive them for this backend with ``calibrate`` over the
-R-MAT suite (recorded in EXPERIMENTS.md §Selection).  Defaults below are the
-calibrated CPU-XLA values; the paper's GPU values are kept for reference.
+R-MAT suite and persist the result as JSON (``save_thresholds``).  A persisted
+calibration is auto-loaded by ``repro.core.plan.plan`` when the
+``REPRO_THRESHOLDS`` environment variable points at it (format in DESIGN.md
+§4).  Defaults below are the calibrated CPU-XLA values; the paper's GPU values
+are kept for reference.
+
+The old eager front door (``PreparedMatrix`` / ``adaptive_spmm``) survives only
+as deprecation shims over the plan/execute subsystem in ``repro.core.plan``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import warnings
 from typing import Callable
 
 import numpy as np
 
-from .formats import CSR, csr_to_balanced, csr_to_ell
+from .formats import CSR
 from .stats import MatrixStats, matrix_stats
+
+#: environment variable naming a calibrated-thresholds JSON file to auto-load
+THRESHOLDS_ENV = "REPRO_THRESHOLDS"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,8 +46,48 @@ class SelectorThresholds:
 
     PAPER_GPU = None  # filled below
 
+    # -- persistence (DESIGN.md §4) -----------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({"version": 1,
+                           "n_threshold": int(self.n_threshold),
+                           "pr_avg_row": float(self.pr_avg_row),
+                           "sr_cv": float(self.sr_cv)}, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SelectorThresholds":
+        d = json.loads(text)
+        if d.get("version", 1) != 1:
+            raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
+        return cls(n_threshold=int(d["n_threshold"]),
+                   pr_avg_row=float(d["pr_avg_row"]),
+                   sr_cv=float(d["sr_cv"]))
+
 
 SelectorThresholds.PAPER_GPU = SelectorThresholds(n_threshold=4, pr_avg_row=32.0, sr_cv=0.5)
+
+
+def save_thresholds(th: SelectorThresholds, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(th.to_json() + "\n")
+
+
+def load_thresholds(path: str) -> SelectorThresholds:
+    with open(path) as f:
+        return SelectorThresholds.from_json(f.read())
+
+
+def default_thresholds() -> SelectorThresholds:
+    """Calibrated thresholds from ``$REPRO_THRESHOLDS`` when set (and
+    readable), else the built-in defaults.  Read per call — the file is tiny
+    and tests/calibration loops repoint the variable at runtime."""
+    path = os.environ.get(THRESHOLDS_ENV)
+    if path:
+        try:
+            return load_thresholds(path)
+        except (OSError, ValueError, KeyError) as e:
+            warnings.warn(f"could not load thresholds from {path!r}: {e}; "
+                          "falling back to defaults", stacklevel=2)
+    return SelectorThresholds()
 
 
 def select_kernel(stats: MatrixStats, n: int,
@@ -49,43 +101,63 @@ def select_kernel(stats: MatrixStats, n: int,
     return "nb_sr" if stats.cv > th.sr_cv else "rs_sr"
 
 
-@dataclasses.dataclass
+# ---------------------------------------------------------------------------
+# deprecation shims over the plan/execute subsystem (repro.core.plan)
+# ---------------------------------------------------------------------------
+
 class PreparedMatrix:
-    """A CSR matrix with both kernel substrates prebuilt + its statistics.
+    """Deprecated: use ``repro.core.plan.plan`` — substrates are now built
+    lazily, per the selected kernel, instead of both eagerly.  This shim wraps
+    a ``SparsePlan`` so legacy ``.ell`` / ``.balanced`` / ``.stats`` accessors
+    keep working (each access builds that substrate on first touch)."""
 
-    Mirrors the paper's usage mode: format construction and profiling are
-    offline; the online op just dispatches. ``ell_width`` may cap pathological
-    max-row ELL padding (rows longer than the cap spill... they don't — the
-    cap is only safe when max_row <= cap, so we keep full width by default and
-    let the selector route extreme-skew matrices to the balanced substrate)."""
-
-    csr: CSR
-    stats: MatrixStats
-    ell: object
-    balanced: object
+    def __init__(self, plan_obj):
+        self._plan = plan_obj
 
     @classmethod
     def from_csr(cls, csr: CSR, tile: int = 512) -> "PreparedMatrix":
-        return cls(csr=csr, stats=matrix_stats(csr), ell=csr_to_ell(csr),
-                   balanced=csr_to_balanced(csr, tile=tile))
+        warnings.warn("PreparedMatrix.from_csr is deprecated; use "
+                      "repro.core.plan.plan (lazy substrates)",
+                      DeprecationWarning, stacklevel=2)
+        from .plan import plan
+        return cls(plan(csr, tile=tile))
+
+    @property
+    def csr(self) -> CSR:
+        return self._plan.csr
+
+    @property
+    def stats(self) -> MatrixStats:
+        return self._plan.stats
+
+    @property
+    def ell(self):
+        return self._plan.substrate("ell")
+
+    @property
+    def balanced(self):
+        return self._plan.substrate("balanced")
 
 
-def adaptive_spmm(prep: PreparedMatrix, x, th: SelectorThresholds = SelectorThresholds(),
+def adaptive_spmm(prep, x, th: SelectorThresholds = SelectorThresholds(),
                   impl: str | None = None):
-    """Front door: route to the selected kernel. ``impl`` overrides the rule
-    (used by the oracle/off-line-profile mode and the ablations)."""
-    from .spmm import KERNELS, KERNEL_FORMAT
+    """Deprecated front door: route to the selected kernel through the unified
+    ``execute``.  ``impl`` overrides the rule (oracle/ablation mode)."""
+    warnings.warn("adaptive_spmm is deprecated; use repro.core.plan.execute",
+                  DeprecationWarning, stacklevel=2)
+    from .plan import execute, plan
+    p = prep._plan if isinstance(prep, PreparedMatrix) else plan(prep)
+    return execute(p.with_thresholds(th), x, impl=impl)
 
-    n = 1 if x.ndim == 1 else x.shape[1]
-    name = impl or select_kernel(prep.stats, n, th)
-    fmt = prep.ell if KERNEL_FORMAT[name] == "ell" else prep.balanced
-    return KERNELS[name](fmt, x)
 
+# ---------------------------------------------------------------------------
+# offline calibration (paper §2.2 method, §3.2 metric)
+# ---------------------------------------------------------------------------
 
 def calibrate(
     matrices: dict[str, CSR],
     ns: tuple[int, ...],
-    time_fn: Callable[[str, "PreparedMatrix", int], float] | None = None,
+    time_fn: Callable[[str, object, int], float] | None = None,
     times: dict | None = None,
     # 1<<30 = "never switch to sequential reduction": on this backend (XLA
     # CPU / TPU) the PR/SR crossover of paper Insight 1 may not exist — the
@@ -93,28 +165,34 @@ def calibrate(
     n_grid: tuple[int, ...] = (2, 4, 8, 1 << 30),
     avg_grid: tuple[float, ...] = (8.0, 16.0, 32.0, 64.0),
     cv_grid: tuple[float, ...] = (0.25, 0.5, 1.0, 2.0),
+    save_to: str | None = None,
 ) -> tuple[SelectorThresholds, dict]:
     """Re-derive thresholds for this backend by grid search against measured
-    kernel times.  Either ``time_fn(kernel_name, prep, n) -> seconds`` or a
+    kernel times.  Either ``time_fn(kernel_name, plan, n) -> seconds`` or a
     precomputed ``times[(matrix_name, n, kernel_name)] -> seconds``.
 
     Returns (best thresholds, report) where report carries the oracle/selected
-    geomean ratio per candidate — the §3.2 'performance loss vs optimal'."""
-    preps = {k: PreparedMatrix.from_csr(v) for k, v in matrices.items()}
+    geomean ratio per candidate — the §3.2 'performance loss vs optimal'.
+    ``save_to`` persists the winner as JSON so ``plan()`` auto-loads it via
+    ``$REPRO_THRESHOLDS``."""
+    from .plan import plan
+    from .registry import LOGICAL_KERNELS
+
+    plans = {k: plan(v) for k, v in matrices.items()}
     if times is None:
         assert time_fn is not None
         times = {}
-        for mname, prep in preps.items():
+        for mname, p in plans.items():
             for n in ns:
-                for kname in ("rs_sr", "rs_pr", "nb_sr", "nb_pr"):
-                    times[(mname, n, kname)] = time_fn(kname, prep, n)
+                for kname in LOGICAL_KERNELS:
+                    times[(mname, n, kname)] = time_fn(kname, p, n)
 
     def loss(th: SelectorThresholds) -> float:
         ratios = []
-        for mname, prep in preps.items():
+        for mname, p in plans.items():
             for n in ns:
-                chosen = times[(mname, n, select_kernel(prep.stats, n, th))]
-                oracle = min(times[(mname, n, k)] for k in ("rs_sr", "rs_pr", "nb_sr", "nb_pr"))
+                chosen = times[(mname, n, select_kernel(p.stats, n, th))]
+                oracle = min(times[(mname, n, k)] for k in LOGICAL_KERNELS)
                 ratios.append(chosen / oracle)
         return float(np.exp(np.mean(np.log(ratios))))  # geomean slowdown
 
@@ -130,4 +208,6 @@ def calibrate(
         "geomean_slowdown_vs_oracle": best_loss,
         "times": {f"{m}|n={n}|{k}": t for (m, n, k), t in times.items()},
     }
+    if save_to is not None:
+        save_thresholds(best, save_to)
     return best, report

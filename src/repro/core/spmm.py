@@ -23,11 +23,13 @@ is ``spmm_as_n_spmv``.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Union
+import warnings
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
+from . import registry
 from .formats import ELL, BalancedCOO
 
 Sparse = Union[ELL, BalancedCOO]
@@ -141,64 +143,34 @@ def _acc_dtype(a, b):
         if jnp.promote_types(a, b) in (jnp.bfloat16, jnp.float16) else jnp.promote_types(a, b)
 
 
-KERNELS: dict[str, Callable[[Sparse, jax.Array], jax.Array]] = {
-    "rs_sr": spmm_rs_sr,
-    "rs_pr": spmm_rs_pr,
-    "nb_sr": spmm_nb_sr,
-    "nb_pr": spmm_nb_pr,
-}
+# ---------------------------------------------------------------------------
+# registry: these four ARE the reference ("xla") backend
+# ---------------------------------------------------------------------------
 
-# which substrate format each kernel consumes
-KERNEL_FORMAT: dict[str, str] = {
-    "rs_sr": "ell",
-    "rs_pr": "ell",
-    "nb_sr": "balanced",
-    "nb_pr": "balanced",
-}
+def _xla(fn):
+    """Uniform registry signature: XLA lowerings ignore ``interpret``."""
+    @functools.wraps(fn)
+    def wrapped(sub, x, *, interpret=None, **_opts):
+        return fn(sub, x)
+    return wrapped
+
+
+registry.register("rs_sr", "xla", "ell", _xla(spmm_rs_sr))
+registry.register("rs_pr", "xla", "ell", _xla(spmm_rs_pr))
+registry.register("nb_sr", "xla", "balanced", _xla(spmm_nb_sr))
+registry.register("nb_pr", "xla", "balanced", _xla(spmm_nb_pr))
 
 
 # ---------------------------------------------------------------------------
-# differentiable front-door: custom VJP so sparse-weight layers train
+# deprecation shim — the trainable front door now lives in core.plan
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _spmm_trainable(shape: tuple, rows, cols, vals, x):
-    bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), shape)
-    return spmm_nb_pr(bal, x)
-
-
-def _spmm_trainable_fwd(shape, rows, cols, vals, x):
-    return _spmm_trainable(shape, rows, cols, vals, x), (rows, cols, vals, x)
-
-
-def _spmm_trainable_bwd(shape, res, g):
-    import numpy as np
-    rows, cols, vals, x = res
-    x2, _ = _as_2d(x)
-    g2, _ = _as_2d(g)
-    r = rows.reshape(-1)
-    c = cols.reshape(-1)
-    # dvals[e] = <g[row_e, :], x[col_e, :]> ; padding rows (== M) → 0
-    g_rows = jnp.take(g2, jnp.minimum(r, shape[0] - 1), axis=0)
-    g_rows = jnp.where((r < shape[0])[:, None], g_rows, 0)
-    x_cols = jnp.take(x2, c, axis=0)
-    dvals = jnp.sum(g_rows * x_cols, axis=-1)
-    # dx[k, :] = sum_{e: col_e == k} vals_e * g[row_e, :]
-    p = vals.reshape(-1)[:, None] * g_rows
-    dx = jax.ops.segment_sum(p, c, num_segments=shape[1])
-    dx = dx.reshape(x.shape).astype(x.dtype)
-    # integer pattern args get symbolic-zero (float0) cotangents
-    zr = np.zeros(rows.shape, jax.dtypes.float0)
-    zc = np.zeros(cols.shape, jax.dtypes.float0)
-    return zr, zc, dvals.reshape(vals.shape).astype(vals.dtype), dx
-
-
-_spmm_trainable.defvjp(_spmm_trainable_fwd, _spmm_trainable_bwd)
-
 
 def spmm_nb_pr_trainable(bal_static: tuple, vals: jax.Array, x: jax.Array) -> jax.Array:
-    """VSR SpMM with gradients to the nonzero values and the dense matrix.
-    ``bal_static`` = (rows, cols, shape); rows/cols may be traced (scanned
-    per-layer patterns) — they are real args with float0 cotangents."""
+    """Deprecated: use ``repro.core.plan.execute_pattern`` (the unified
+    differentiable front door covering all four logical kernels)."""
+    warnings.warn("spmm_nb_pr_trainable is deprecated; use "
+                  "repro.core.plan.execute_pattern", DeprecationWarning,
+                  stacklevel=2)
+    from .plan import execute_pattern
     rows, cols, shape = bal_static
-    return _spmm_trainable(tuple(shape), rows, cols, vals, x)
+    return execute_pattern(rows, cols, vals, tuple(shape), x, impl="nb_pr")

@@ -1,2 +1,10 @@
-"""Pallas TPU kernels for the paper's SpMV/SpMM space (+ ref oracles)."""
-from .ops import spmm, spmm_bsr, spmm_csc, spmm_vsr, spmv_vsr
+"""Pallas TPU kernels for the paper's SpMV/SpMM space (+ ref oracles).
+
+Importing this package self-registers the "pallas" and "bsr" backends into
+``repro.core.registry`` (each kernel module registers its own entries); the
+registry lazy-imports it on first resolve of a non-XLA backend.
+"""
+from . import bsr as _bsr        # registers the "bsr" backend
+from . import csc as _csc        # registers rs_* under "pallas"
+from . import vsr as _vsr        # registers nb_* under "pallas"
+from .ops import spmm, spmm_bsr, spmm_csc, spmm_vsr, spmv_vsr, use_pallas_default

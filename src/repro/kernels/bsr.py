@@ -23,6 +23,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import registry
 from repro.core.formats import BSR
 
 
@@ -81,18 +82,47 @@ def _bsr_call(bcols_flat, blocks, x, *, wb, bm, bk, tile_n, interpret):
 
 
 def spmm_bsr(bsr: BSR, x: jax.Array, *, tile_n: int = 128,
-             interpret: bool | None = None) -> jax.Array:
+             interpret: bool | None = None,
+             blockell: tuple | None = None) -> jax.Array:
+    """``blockell`` = (blocks, bcols_flat, wb) precomputed by
+    ``bsr_to_blockell`` at plan time (skips the host-side padding pass)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     x2 = x[:, None] if x.ndim == 1 else x
     m, k_logical = bsr.shape
     bm, bk = bsr.block_shape
-    blocks, bcols, wb = bsr_to_blockell(bsr)
+    if blockell is None:
+        blocks, bcols, wb = bsr_to_blockell(bsr)
+        blocks, bcols_flat = jnp.asarray(blocks), jnp.asarray(bcols.reshape(-1))
+    else:
+        blocks, bcols_flat, wb = blockell
     k, n = x2.shape
     kb_pad = -(-k // bk) * bk
     n_pad = -(-n // tile_n) * tile_n
     xp = jnp.pad(x2, ((0, kb_pad - k), (0, n_pad - n)))
-    y = _bsr_call(jnp.asarray(bcols.reshape(-1)), jnp.asarray(blocks), xp,
+    y = _bsr_call(bcols_flat, blocks, xp,
                   wb=wb, bm=bm, bk=bk, tile_n=tile_n, interpret=interpret)
     y = y[:m, :n].astype(x2.dtype)
     return y[:, 0] if x.ndim == 1 else y
+
+
+# ---------------------------------------------------------------------------
+# registry: the block-granule backend.  All four logical kernels resolve to
+# the one MXU block-gather binary — block granularity subsumes both the
+# balancing and the reduction-style axes (DESIGN.md §2).  Values are baked
+# into the dense blocks at plan time, so this backend is forward-only.
+# ---------------------------------------------------------------------------
+
+def _prep_blockell(bsr: BSR) -> dict:
+    blocks, bcols, wb = bsr_to_blockell(bsr)
+    return {"blockell": (jnp.asarray(blocks), jnp.asarray(bcols.reshape(-1)), wb)}
+
+
+def _bsr_entry(bsr: BSR, x, *, interpret: bool | None = None,
+               blockell: tuple | None = None):
+    return spmm_bsr(bsr, x, interpret=interpret, blockell=blockell)
+
+
+for _logical in registry.LOGICAL_KERNELS:
+    registry.register(_logical, "bsr", "bsr", _bsr_entry,
+                      prep=_prep_blockell, differentiable=False)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import registry
 from repro.core.formats import ELL
 
 
@@ -91,3 +92,17 @@ def spmm_csc(ell: ELL, x: jax.Array, *, tm: int = 8, tw: int = 128,
     y = _csc_call(cols, vals, xp, tm=tm, tw=tw, tile_n=tile_n, interpret=interpret)
     y = y[:m, :n].astype(x2.dtype)
     return y[:, 0] if x.ndim == 1 else y
+
+
+# ---------------------------------------------------------------------------
+# registry: the Pallas physical kernel for the row-split logical pair.  The
+# VPU is always parallel across lanes and the W grid axis always sequential,
+# so rs_sr and rs_pr collapse onto the same binary on TPU (DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def _pallas_rs(ell: ELL, x, *, interpret: bool | None = None):
+    return spmm_csc(ell, x, interpret=interpret)
+
+
+registry.register("rs_sr", "pallas", "ell", _pallas_rs)
+registry.register("rs_pr", "pallas", "ell", _pallas_rs)

@@ -1,33 +1,25 @@
-"""Public kernel entry points: backend-aware dispatch.
+"""Deprecated kernel entry point — dispatch now lives in ``repro.core.plan``.
 
-On a TPU backend the Pallas kernels compile natively; on CPU (this container)
-the *production* path is the XLA implementations in ``repro.core.spmm`` —
-Pallas ``interpret=True`` is a correctness harness, not a fast path, so it is
-only selected explicitly (tests) or when ``force_pallas=True``.
+The logical→physical mapping this module used to hard-code is the registry
+(``repro.core.registry``): the Pallas kernel modules (``vsr``, ``csc``,
+``spmv`` via ``vsr``, ``bsr``) self-register under the "pallas"/"bsr"
+backends, the XLA lowerings in ``repro.core.spmm`` under "xla", and
+``execute`` resolves ``(logical_kernel, backend)`` per call.  See DESIGN.md
+§2 for why the GPU 2x2 space collapses to 2x1 on TPU (rs_pr/nb_sr share their
+neighbours' binaries).
 
-The adaptive strategy (paper Fig. 4) lives in ``repro.core.selector``; this
-module maps its four logical kernels onto physical implementations:
-
-  logical     XLA path (core.spmm)     Pallas path (this package)
-  rs_sr       spmm_rs_sr               csc.spmm_csc        (SpMM)
-  rs_pr       spmm_rs_pr               csc.spmm_csc        (PR folds into lanes)
-  nb_sr       spmm_nb_sr               vsr.spmm_vsr        (tile-sequential grid)
-  nb_pr       spmm_nb_pr               vsr.spmm_vsr / spmv.spmv_vsr (N=1)
-
-Note rs_pr/nb_sr map onto the same Pallas binaries as their neighbours: on
-TPU the reduction-style distinction inside a tile collapses (the VPU/MXU is
-always "parallel" across lanes; the grid is always sequential across tiles),
-which is itself a finding recorded in DESIGN.md §2 — the 2x2 space is a GPU
-space; TPU natively exposes a 2x1 (balanced-or-not) space with reduction
-style chosen per-tile by the compiler.
+``spmm`` below survives as a thin deprecation shim so external callers keep
+working one release; new code should ``plan(...)`` once and ``execute`` per
+operand.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
-from repro.core.formats import BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr, csr_to_ell
-from repro.core.selector import PreparedMatrix, SelectorThresholds, select_kernel
-from repro.core import spmm as core_spmm
+from repro.core.registry import default_backend
+from repro.core.selector import PreparedMatrix, SelectorThresholds
 
 from .bsr import spmm_bsr
 from .csc import spmm_csc
@@ -39,20 +31,17 @@ def use_pallas_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def spmm(prep: PreparedMatrix, x: jax.Array, *, impl: str | None = None,
+def spmm(prep, x: jax.Array, *, impl: str | None = None,
          th: SelectorThresholds = SelectorThresholds(),
          force_pallas: bool = False, interpret: bool | None = None) -> jax.Array:
-    """Adaptive SpMV/SpMM front door over a PreparedMatrix."""
-    n = 1 if x.ndim == 1 else x.shape[1]
-    name = impl or select_kernel(prep.stats, n, th)
-    if force_pallas or use_pallas_default():
-        if name in ("nb_pr", "nb_sr"):
-            if n == 1:
-                return spmv_vsr(prep.balanced, x, interpret=interpret)
-            return spmm_vsr(prep.balanced, x, interpret=interpret)
-        return spmm_csc(prep.ell, x, interpret=interpret)
-    fmt = prep.ell if core_spmm.KERNEL_FORMAT[name] == "ell" else prep.balanced
-    return core_spmm.KERNELS[name](fmt, x)
+    """Deprecated: use ``repro.core.plan.plan`` + ``execute``."""
+    warnings.warn("repro.kernels.spmm is deprecated; use repro.core.plan "
+                  "(plan/execute)", DeprecationWarning, stacklevel=2)
+    from repro.core.plan import execute, plan
+    p = prep._plan if isinstance(prep, PreparedMatrix) else plan(prep)
+    backend = "pallas" if force_pallas else default_backend()
+    return execute(p.with_thresholds(th), x, impl=impl, backend=backend,
+                   interpret=interpret)
 
 
 __all__ = [

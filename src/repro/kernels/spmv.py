@@ -81,12 +81,17 @@ def _spmv_call(rows, cols, vals, row_base, x, *, m, win, interpret):
 
 
 def spmv_vsr(bal: BalancedCOO, x: jax.Array, *,
-             interpret: bool | None = None) -> jax.Array:
-    """NB+PR SpMV. ``x``: (K,)."""
+             interpret: bool | None = None,
+             row_base: jax.Array | None = None,
+             win: int | None = None) -> jax.Array:
+    """NB+PR SpMV. ``x``: (K,). ``row_base``/``win`` may be precomputed at
+    plan time (keeps the call traceable with traced values)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert x.ndim == 1, "spmv_vsr is the N=1 path; use spmm_vsr for N>1"
-    row_base, win = plan_windows(bal)
-    y = _spmv_call(bal.rows, bal.cols, bal.vals, jnp.asarray(row_base), x,
+    if row_base is None or win is None:
+        base, win = plan_windows(bal)
+        row_base = jnp.asarray(base)
+    y = _spmv_call(bal.rows, bal.cols, bal.vals, row_base, x,
                    m=bal.shape[0], win=win, interpret=interpret)
     return y.astype(x.dtype)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import registry
 from repro.core.formats import BalancedCOO
 
 
@@ -100,16 +101,46 @@ def _vsr_call(rows, cols, vals, row_base, x, *, m, win, tile_n, interpret):
 
 
 def spmm_vsr(bal: BalancedCOO, x: jax.Array, *, tile_n: int = 128,
-             interpret: bool | None = None) -> jax.Array:
-    """NB+PR SpMM. ``x``: (K, N) — N padded to ``tile_n`` internally."""
+             interpret: bool | None = None,
+             row_base: jax.Array | None = None,
+             win: int | None = None) -> jax.Array:
+    """NB+PR SpMM. ``x``: (K, N) — N padded to ``tile_n`` internally.
+
+    ``row_base``/``win`` may be precomputed (``plan_windows`` at plan time) so
+    the call stays traceable when ``bal`` carries traced values."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     x2 = x[:, None] if x.ndim == 1 else x
     k, n = x2.shape
-    row_base, win = plan_windows(bal)
+    if row_base is None or win is None:
+        base, win = plan_windows(bal)
+        row_base = jnp.asarray(base)
     n_pad = -(-n // tile_n) * tile_n
     xp = jnp.pad(x2, ((0, 0), (0, n_pad - n))) if n_pad != n else x2
-    y = _vsr_call(bal.rows, bal.cols, bal.vals, jnp.asarray(row_base), xp,
+    y = _vsr_call(bal.rows, bal.cols, bal.vals, row_base, xp,
                   m=bal.shape[0], win=win, tile_n=tile_n, interpret=interpret)
     y = y[:, :n].astype(x2.dtype)
     return y[:, 0] if x.ndim == 1 else y
+
+
+# ---------------------------------------------------------------------------
+# registry: the Pallas physical kernels for the nnz-balanced logical pair.
+# On TPU the in-tile reduction-style split collapses (DESIGN.md §2): both
+# nb_sr and nb_pr resolve to this binary; N=1 takes the VPU SpMV variant.
+# ---------------------------------------------------------------------------
+
+def _prep_windows(bal: BalancedCOO) -> dict:
+    base, win = plan_windows(bal)
+    return {"row_base": jnp.asarray(base), "win": win}
+
+
+def _pallas_nb(bal: BalancedCOO, x: jax.Array, *, interpret: bool | None = None,
+               row_base: jax.Array | None = None, win: int | None = None):
+    if x.ndim == 1:
+        from .spmv import spmv_vsr
+        return spmv_vsr(bal, x, interpret=interpret, row_base=row_base, win=win)
+    return spmm_vsr(bal, x, interpret=interpret, row_base=row_base, win=win)
+
+
+registry.register("nb_pr", "pallas", "balanced", _pallas_nb, prep=_prep_windows)
+registry.register("nb_sr", "pallas", "balanced", _pallas_nb, prep=_prep_windows)

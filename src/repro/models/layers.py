@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spmm import spmm_nb_pr_trainable
+from repro.core.plan import execute_pattern
 from .sharding_ctx import constrain, constrain_gemm
 
 
@@ -231,11 +231,11 @@ class SparsePattern:
 
 
 def sparse_matmul(pattern: SparsePattern, vals: jax.Array, x: jax.Array) -> jax.Array:
-    """x @ W^T with W (m, k) sparse: computed as SpMM W · x^T via the
-    adaptive library (differentiable w.r.t. vals and x)."""
-    static = (pattern.rows, pattern.cols, pattern.shape)
+    """x @ W^T with W (m, k) sparse: computed as SpMM W · x^T through the
+    unified plan/execute front door (differentiable w.r.t. vals and x)."""
     flat = x.reshape(-1, x.shape[-1])                           # (T, k)
-    y = spmm_nb_pr_trainable(static, vals, flat.T)              # (m, T)
+    y = execute_pattern(pattern.rows, pattern.cols, vals,
+                        tuple(pattern.shape), flat.T)           # (m, T)
     return y.T.reshape(x.shape[:-1] + (pattern.shape[0],)).astype(x.dtype)
 
 

@@ -1,0 +1,66 @@
+"""``hypothesis`` when installed, else a minimal seeded fallback.
+
+The seed suite must run on a bare interpreter (the CI/container image ships
+only jax+numpy+pytest).  When hypothesis is absent we degrade the property
+tests to a deterministic sampler: ``@given`` draws ``max_examples`` example
+dicts from a fixed-seed RNG and loops the test body over them.  Shrinking,
+the example database, and rich strategies are lost — but the properties still
+execute, which beats skipping them entirely.
+
+Only the strategy combinators this repo uses are implemented
+(``integers``, ``floats``, ``sampled_from``); extend as tests grow.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            # hypothesis bounds are inclusive
+            return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[int(r.integers(0, len(elements)))])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                # bare signature on purpose: the drawn parameters must not
+                # look like pytest fixtures (no functools.wraps — pytest
+                # follows __wrapped__ when resolving fixture names)
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

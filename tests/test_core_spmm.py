@@ -1,58 +1,59 @@
-"""The 2x2 kernel space: all four implementations agree with the oracle and
-each other; the trainable wrapper has correct gradients; the selector obeys
-the paper's decision tree."""
+"""The 2x2 kernel space through the unified plan/execute front door: all four
+implementations agree with the oracle and each other; the selector obeys the
+paper's decision tree."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (KERNELS, PreparedMatrix, SelectorThresholds,
-                        adaptive_spmm, csr_from_dense, matrix_stats, rmat,
-                        select_kernel, spmm_as_n_spmv, spmm_nb_pr_trainable)
+from repro.core import (LOGICAL_KERNELS, SelectorThresholds, csr_from_dense,
+                        execute, execute_pattern, matrix_stats, plan, rmat,
+                        select_kernel, spmm_as_n_spmv)
 from repro.kernels.ref import ref_spmm_csr
 
+from _hypothesis_compat import given, settings, st
 from conftest import random_csr
 
 
 @pytest.mark.parametrize("n", [1, 2, 4, 7, 32])
-@pytest.mark.parametrize("impl", list(KERNELS))
+@pytest.mark.parametrize("impl", LOGICAL_KERNELS)
 def test_all_kernels_match_oracle(rng, n, impl):
     csr, a = random_csr(rng, 61, 47, 0.12)
-    prep = PreparedMatrix.from_csr(csr, tile=64)
+    p = plan(csr, tile=64)
     x = rng.standard_normal((47, n)).astype(np.float32)
-    got = np.asarray(adaptive_spmm(prep, jnp.asarray(x), impl=impl))
+    got = np.asarray(execute(p, jnp.asarray(x), impl=impl))
     ref = np.asarray(ref_spmm_csr(csr, jnp.asarray(x)))
     np.testing.assert_allclose(got, ref, atol=1e-4)
 
 
 def test_spmv_1d_path(rng):
     csr, a = random_csr(rng, 30, 40, 0.2)
-    prep = PreparedMatrix.from_csr(csr, tile=32)
+    p = plan(csr, tile=32)
     x = rng.standard_normal(40).astype(np.float32)
-    for impl in KERNELS:
-        got = np.asarray(adaptive_spmm(prep, jnp.asarray(x), impl=impl))
+    for impl in LOGICAL_KERNELS:
+        got = np.asarray(execute(p, jnp.asarray(x), impl=impl))
         assert got.shape == (30,)
         np.testing.assert_allclose(got, a @ x, atol=1e-4)
 
 
 def test_n_spmv_baseline(rng):
     csr, a = random_csr(rng, 30, 40, 0.2)
-    prep = PreparedMatrix.from_csr(csr, tile=32)
+    p = plan(csr, tile=32)
     x = rng.standard_normal((40, 2)).astype(np.float32)
-    got = np.asarray(spmm_as_n_spmv(prep.balanced, jnp.asarray(x)))
+    got = np.asarray(spmm_as_n_spmv(p.substrate("balanced"), jnp.asarray(x)))
     np.testing.assert_allclose(got, a @ x, atol=1e-4)
 
 
-def test_trainable_grads(rng):
+def test_pattern_grads(rng):
+    """The training entry: gradients to values and dense operand, finite-
+    difference checked (full four-kernel grad coverage is in test_grads.py)."""
     csr, a = random_csr(rng, 24, 18, 0.25)
-    prep = PreparedMatrix.from_csr(csr, tile=16)
-    bal = prep.balanced
+    p = plan(csr, tile=16)
+    bal = p.substrate("balanced")
     x = jnp.asarray(rng.standard_normal((18, 5)).astype(np.float32))
-    static = (bal.rows, bal.cols, bal.shape)
 
     def f(v, x):
-        return (spmm_nb_pr_trainable(static, v, x) ** 2).sum()
+        return (execute_pattern(bal.rows, bal.cols, v, bal.shape, x) ** 2).sum()
 
     gv, gx = jax.grad(f, argnums=(0, 1))(bal.vals, x)
     # finite differences on random entries
@@ -69,10 +70,10 @@ def test_trainable_grads(rng):
 def test_empty_rows_and_matrix():
     a = np.zeros((5, 6), np.float32)
     a[2, 3] = 2.0
-    prep = PreparedMatrix.from_csr(csr_from_dense(a), tile=8)
+    p = plan(csr_from_dense(a), tile=8)
     x = jnp.ones((6, 3), jnp.float32)
-    for impl in KERNELS:
-        y = np.asarray(adaptive_spmm(prep, x, impl=impl))
+    for impl in LOGICAL_KERNELS:
+        y = np.asarray(execute(p, x, impl=impl))
         assert y[2, 0] == 2.0 and np.all(y[[0, 1, 3, 4]] == 0)
 
 
@@ -96,10 +97,9 @@ def test_property_kernels_agree(seed, n, density):
     rng = np.random.default_rng(seed)
     m, k = int(rng.integers(4, 64)), int(rng.integers(4, 64))
     a = (rng.random((m, k)) * (rng.random((m, k)) < density)).astype(np.float32)
-    csr = csr_from_dense(a)
-    prep = PreparedMatrix.from_csr(csr, tile=32)
+    p = plan(csr_from_dense(a), tile=32)
     x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
-    outs = [np.asarray(adaptive_spmm(prep, x, impl=i)) for i in KERNELS]
+    outs = [np.asarray(execute(p, x, impl=i)) for i in LOGICAL_KERNELS]
     for o in outs[1:]:
         np.testing.assert_allclose(o, outs[0], atol=1e-3)
 
@@ -107,11 +107,11 @@ def test_property_kernels_agree(seed, n, density):
 def test_linearity_property(rng):
     """SpMM is linear: A(x+y) == Ax + Ay, A(cx) == c Ax."""
     csr, _ = random_csr(rng, 40, 40, 0.15)
-    prep = PreparedMatrix.from_csr(csr, tile=32)
+    p = plan(csr, tile=32)
     x = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
     y = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
-    for impl in KERNELS:
-        f = lambda v: adaptive_spmm(prep, v, impl=impl)
+    for impl in LOGICAL_KERNELS:
+        f = lambda v: execute(p, v, impl=impl)
         np.testing.assert_allclose(np.asarray(f(x + y)),
                                    np.asarray(f(x) + f(y)), atol=1e-3)
         np.testing.assert_allclose(np.asarray(f(3.0 * x)),

@@ -1,8 +1,10 @@
-"""Format construction/roundtrip tests + hypothesis property tests."""
+"""Format construction/roundtrip tests + hypothesis property tests (seeded
+fallback sampler when hypothesis is not installed)."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CSR, csr_from_coo, csr_from_dense, csr_to_balanced,
                         csr_to_bsr, csr_to_ell, bsr_to_dense, matrix_stats,

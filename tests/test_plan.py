@@ -1,0 +1,224 @@
+"""Plan/execute subsystem: lazy substrates, registry resolution, threshold
+persistence, jit-ability, backend override, and the deprecation shims."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LOGICAL_KERNELS, SelectorThresholds, available,
+                        backends_for, csr_from_dense, execute,
+                        load_thresholds, plan, resolve, save_thresholds)
+from repro.core import formats
+from repro.core.selector import THRESHOLDS_ENV, default_thresholds
+
+from conftest import random_csr
+
+
+# ---------------------------------------------------------------------------
+# laziness: only the substrate the selected kernel consumes is ever built
+# ---------------------------------------------------------------------------
+
+def test_plan_builds_nothing_eagerly(rng):
+    csr, _ = random_csr(rng, 32, 32, 0.2)
+    formats.reset_build_counts()
+    p = plan(csr)
+    assert p.built_substrates == ()
+    assert formats.BUILD_COUNTS == {"ell": 0, "balanced": 0, "bsr": 0}
+
+
+def test_execute_builds_only_selected_substrate(rng):
+    csr, a = random_csr(rng, 32, 32, 0.2)
+    formats.reset_build_counts()
+    p = plan(csr)
+    x = jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))
+    name = p.select(32)
+    execute(p, x)                       # rules pick one kernel...
+    want = resolve(name, p.backend).substrate
+    assert p.built_substrates == (want,)          # ...only its format exists
+    other = "balanced" if want == "ell" else "ell"
+    assert formats.BUILD_COUNTS[want] == 1
+    assert formats.BUILD_COUNTS[other] == 0
+    execute(p, x)                       # second call: cache hit, no rebuild
+    assert formats.BUILD_COUNTS[want] == 1
+
+
+def test_n_hint_prewarms_selected_substrate(rng):
+    csr, _ = random_csr(rng, 32, 32, 0.2)
+    formats.reset_build_counts()
+    p = plan(csr, n_hint=32)
+    want = resolve(p.select(32), p.backend).substrate
+    assert p.built_substrates == (want,)
+    assert sum(formats.BUILD_COUNTS.values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_the_2x2_space_per_backend():
+    for backend in ("xla", "pallas"):
+        for name in LOGICAL_KERNELS:
+            e = resolve(name, backend)
+            assert e.logical == name and e.backend == backend
+            assert e.substrate in ("ell", "balanced")
+    # the block-granule backend registers too (the formerly-orphaned path)
+    assert resolve("nb_pr", "bsr").substrate == "bsr"
+    assert len(available("xla")) == 4
+
+
+def test_registry_unknown_lookups():
+    with pytest.raises(KeyError, match="no kernel registered"):
+        resolve("nb_pr", "cuda")
+    with pytest.raises(ValueError, match="unknown logical kernel"):
+        from repro.core import register
+        register("bogus", "xla", "ell", lambda s, x: x)
+    assert set(backends_for("nb_pr")) >= {"xla", "pallas", "bsr"}
+
+
+def test_backend_override_and_bsr_forward(rng):
+    csr, a = random_csr(rng, 40, 50, 0.15)
+    p = plan(csr)
+    x = jnp.asarray(rng.standard_normal((50, 8)).astype(np.float32))
+    ref = a @ np.asarray(x)
+    for backend in ("pallas", "bsr"):
+        got = np.asarray(execute(p, x, backend=backend, interpret=True))
+        np.testing.assert_allclose(got, ref, atol=2e-3)
+    # forward-only backends refuse live value streams instead of silently
+    # ignoring them
+    with pytest.raises(ValueError, match="live value streams"):
+        execute(p, x, vals=csr.data, backend="bsr", interpret=True)
+
+
+def test_execute_is_jittable(rng):
+    csr, a = random_csr(rng, 24, 24, 0.2)
+    p = plan(csr)
+    f = jax.jit(lambda x: execute(p, x))
+    x = jnp.asarray(rng.standard_normal((24, 6)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(f(x)), a @ np.asarray(x), atol=1e-4)
+    # pallas backend under jit (windows precomputed at plan time)
+    pp = plan(csr, backend="pallas")
+    g = jax.jit(lambda x: execute(pp, x, impl="nb_pr", interpret=True))
+    np.testing.assert_allclose(np.asarray(g(x)), a @ np.asarray(x), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# threshold persistence (calibrate → JSON → auto-load)
+# ---------------------------------------------------------------------------
+
+def test_thresholds_json_roundtrip(tmp_path):
+    th = SelectorThresholds(n_threshold=8, pr_avg_row=16.0, sr_cv=1.0)
+    path = str(tmp_path / "th.json")
+    save_thresholds(th, path)
+    assert load_thresholds(path) == th
+
+
+def test_thresholds_autoload_env(rng, tmp_path, monkeypatch):
+    th = SelectorThresholds(n_threshold=1, pr_avg_row=99.0, sr_cv=9.9)
+    path = str(tmp_path / "calibrated.json")
+    save_thresholds(th, path)
+    monkeypatch.setenv(THRESHOLDS_ENV, path)
+    assert default_thresholds() == th
+    csr, _ = random_csr(rng, 16, 16, 0.3)
+    p = plan(csr)                     # auto-loads the persisted calibration
+    assert p.thresholds == th
+    # n=2 > n_threshold=1 → sequential side, cv below 9.9 → rs_sr
+    assert p.select(2).endswith("sr")
+    monkeypatch.setenv(THRESHOLDS_ENV, str(tmp_path / "missing.json"))
+    with pytest.warns(UserWarning, match="could not load"):
+        assert default_thresholds() == SelectorThresholds()
+
+
+def test_calibrate_save_to(rng, tmp_path):
+    csr, _ = random_csr(rng, 16, 16, 0.3)
+    from repro.core import calibrate
+    times = {("m", n, k): 1.0 + (k != "nb_pr")
+             for n in (1, 8) for k in LOGICAL_KERNELS}
+    path = str(tmp_path / "cal.json")
+    th, report = calibrate({"m": csr}, (1, 8), times=times, save_to=path)
+    assert load_thresholds(path) == th
+    assert report["geomean_slowdown_vs_oracle"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old front doors still answer, loudly
+# ---------------------------------------------------------------------------
+
+def test_prepared_matrix_shim_is_lazy_and_warns(rng):
+    from repro.core import PreparedMatrix, adaptive_spmm
+    csr, a = random_csr(rng, 20, 20, 0.2)
+    with pytest.warns(DeprecationWarning):
+        prep = PreparedMatrix.from_csr(csr, tile=16)
+    assert prep._plan.built_substrates == ()          # no eager double-build
+    x = jnp.asarray(rng.standard_normal((20, 3)).astype(np.float32))
+    with pytest.warns(DeprecationWarning):
+        y = adaptive_spmm(prep, x, impl="nb_sr")
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=1e-4)
+    assert prep.balanced is prep._plan.substrate("balanced")
+
+
+def test_kernels_spmm_shim(rng):
+    from repro.kernels import spmm
+    from repro.core import PreparedMatrix
+    csr, a = random_csr(rng, 20, 20, 0.2)
+    with pytest.warns(DeprecationWarning):
+        prep = PreparedMatrix.from_csr(csr, tile=16)
+    x = jnp.asarray(rng.standard_normal((20, 3)).astype(np.float32))
+    with pytest.warns(DeprecationWarning):
+        y = spmm(prep, x, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=2e-3)
+
+
+def test_pattern_cache_not_confused_by_id_reuse(rng):
+    """Regression: the execute_pattern prep cache is keyed by pattern
+    *content*; an id()-keyed cache served stale row windows when a freed
+    rows array's id was reused by a different pattern."""
+    import gc
+    from repro.core import execute_pattern
+
+    def run_one(m, tile):
+        csr, a = random_csr(rng, m, 40, 0.25)
+        bal = plan(csr, tile=tile).substrate("balanced")
+        x = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
+        y = execute_pattern(bal.rows, bal.cols, bal.vals, bal.shape, x,
+                            backend="pallas", interpret=True)
+        np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=2e-3)
+
+    run_one(56, 16)
+    gc.collect()                # encourage id reuse for the next pattern
+    for m in (128, 24, 72):
+        run_one(m, 16)
+        gc.collect()
+
+
+def test_registry_lazy_import_survives_pre_registration():
+    """Regression: registering a custom entry for a lazy backend before its
+    module ever imported must not suppress the import of the built-ins."""
+    import sys
+    from repro.core import registry as reg
+
+    saved_entries = {k: v for k, v in reg._REGISTRY.items()
+                     if k[1] in ("pallas", "bsr")}
+    saved_loaded = "repro.kernels" in reg._LOADED_MODULES
+    try:
+        for k in list(saved_entries):
+            reg._REGISTRY.pop(k, None)
+        reg._LOADED_MODULES.discard("repro.kernels")
+        for m in [m for m in sys.modules if m.startswith("repro.kernels")]:
+            del sys.modules[m]
+        reg.register("nb_pr", "pallas", "balanced", lambda s, x, **kw: x)
+        assert reg.resolve("rs_sr", "pallas").backend == "pallas"
+    finally:
+        reg._REGISTRY.update(saved_entries)
+        if saved_loaded:
+            reg._LOADED_MODULES.add("repro.kernels")
+
+
+def test_spmm_nb_pr_trainable_shim(rng):
+    from repro.core import spmm_nb_pr_trainable
+    csr, a = random_csr(rng, 20, 20, 0.2)
+    p = plan(csr, tile=16)
+    bal = p.substrate("balanced")
+    x = jnp.asarray(rng.standard_normal((20, 3)).astype(np.float32))
+    with pytest.warns(DeprecationWarning):
+        y = spmm_nb_pr_trainable((bal.rows, bal.cols, bal.shape), bal.vals, x)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=1e-4)
