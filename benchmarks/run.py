@@ -16,16 +16,20 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (adaptive_strategy, csc_ablation, fig6_kernel_perf,
-                   moe_dispatch, roofline, vdl_ablation, vsr_ablation)
+                   moe_dispatch, roofline, sharded_spmm, vdl_ablation,
+                   vsr_ablation)
 
     benches = {
         "vsr_ablation": lambda: vsr_ablation.run(args.full),
         "vdl_ablation": lambda: vdl_ablation.run(args.full),
+        "vdl_ablation_pallas": lambda: vdl_ablation.run(args.full,
+                                                        backend="pallas"),
         "csc_ablation": lambda: csc_ablation.run(args.full),
         "fig6_kernel_perf": lambda: fig6_kernel_perf.run(args.full),
         "adaptive_strategy": lambda: adaptive_strategy.run(args.full),
         "moe_dispatch": moe_dispatch.run,
         "roofline": roofline.run,
+        "sharded_spmm": lambda: sharded_spmm.run(args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -1,0 +1,60 @@
+"""Sharded-SpMM sweep: single-device vs row-split vs nnz-balanced across
+R-MAT skew levels, on a mesh over the host's local devices.
+
+Run with virtual devices to see real partitioning behaviour on CPU::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.run --only sharded_spmm
+
+Columns: time per call for each strategy plus which partitioner the
+stats-driven rule (``SelectorThresholds.partition_cv``) would pick — on a
+single real device all three collapse to the same math, so the interesting
+output there is the *choice*, not the timing."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import execute, matrix_stats, plan, rmat, select_partition
+from repro.launch.mesh import make_local_mesh
+from .common import csv_row, time_fn
+
+SKEWS = {"uniform": (0.25, 0.25, 0.25), "mild": (0.45, 0.22, 0.22),
+         "skewed": (0.57, 0.19, 0.19)}
+
+
+def run(full: bool = False, n: int = 8):
+    scale, ef = (12, 16) if full else (8, 8)
+    mesh = make_local_mesh(jax.device_count(), 1)
+    rng = np.random.default_rng(0)
+    rows = [csv_row(f"sharded_spmm/devices", float(jax.device_count()), "")]
+    for skew_name, (a, b, c) in SKEWS.items():
+        csr = rmat(scale, ef, a, b, c, seed=17)
+        x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
+        stats = matrix_stats(csr)
+        chosen = select_partition(stats)
+        p_one = plan(csr, n_hint=n)
+        t_one = time_fn(lambda: execute(p_one, x))
+        times = {}
+        for kind in ("row", "nnz"):
+            p_sh = plan(csr, backend="sharded", mesh=mesh, shard_kind=kind,
+                        n_hint=n)
+            times[kind] = time_fn(lambda: execute(p_sh, x))
+        name = f"sharded_spmm/rmat_s{scale}_e{ef}_{skew_name}"
+        rows.append(csv_row(
+            f"{name}/single", t_one * 1e6, f"cv={stats.cv:.2f}"))
+        for kind in ("row", "nnz"):
+            mark = " (chosen)" if kind == chosen else ""
+            rows.append(csv_row(f"{name}/{kind}", times[kind] * 1e6,
+                                f"vs_single={t_one/times[kind]:.2f}x{mark}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

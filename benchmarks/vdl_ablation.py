@@ -3,7 +3,12 @@ SpMVs, at N=2 on the 27-matrix R-MAT micro-benchmark.  Paper claim: 1.89x.
 
 Mapping: ``spmm_nb_pr`` gathers X[k, 0:N] per nonzero (the V→N limit of
 float2/float4 loading); ``spmm_as_n_spmv`` re-gathers the sparse stream per
-column (the paper's two-SpMV strawman)."""
+column (the paper's two-SpMV strawman).
+
+``backend="pallas"`` runs the like-for-like pair — the VSR Pallas SpMM
+against N launches of the VSR Pallas SpMV (``spmm_as_n_spmv_pallas``) — so
+the ablation isolates VDL rather than a backend difference (interpret mode
+off-TPU; numbers there are correctness-grade, not perf-grade)."""
 from __future__ import annotations
 
 import numpy as np
@@ -14,20 +19,32 @@ from repro.core import (execute, plan, rmat_suite, rmat_suite_small,
 from .common import csv_row, geomean, time_fn
 
 
-def run(full: bool = False, n: int = 2):
+def run(full: bool = False, n: int = 2, backend: str = "xla"):
     suite = rmat_suite() if full else rmat_suite_small()
     rng = np.random.default_rng(0)
     rows, speedups = [], []
     for name, csr in suite.items():
-        p = plan(csr, tile=512, n_hint=n)
+        # force the named backend (a None default would pick pallas on TPU
+        # and reintroduce the backend confound this split exists to remove)
+        p = plan(csr, tile=512, n_hint=n, backend=backend)
         bal = p.substrate("balanced")
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
-        t_vdl = time_fn(lambda: execute(p, x, impl="nb_pr"))
-        t_nspmv = time_fn(lambda: spmm_as_n_spmv(bal, x))
+        if backend == "pallas":
+            from repro.kernels import spmm_as_n_spmv_pallas
+            from repro.kernels.vsr import plan_windows
+            base, win = plan_windows(bal)
+            base = jnp.asarray(base)
+            t_vdl = time_fn(lambda: execute(p, x, impl="nb_pr",
+                                            backend="pallas"))
+            t_nspmv = time_fn(lambda: spmm_as_n_spmv_pallas(
+                bal, x, row_base=base, win=win))
+        else:
+            t_vdl = time_fn(lambda: execute(p, x, impl="nb_pr"))
+            t_nspmv = time_fn(lambda: spmm_as_n_spmv(bal, x))
         speedups.append(t_nspmv / t_vdl)
-        rows.append(csv_row(f"vdl_ablation/{name}", t_vdl * 1e6,
+        rows.append(csv_row(f"vdl_ablation[{backend}]/{name}", t_vdl * 1e6,
                             f"speedup={t_nspmv/t_vdl:.2f}"))
-    rows.append(csv_row(f"vdl_ablation/geomean_speedup_n{n}", 0.0,
+    rows.append(csv_row(f"vdl_ablation[{backend}]/geomean_speedup_n{n}", 0.0,
                         f"{geomean(speedups):.2f}"))
     return rows
 

@@ -41,8 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import registry
-from .formats import (CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
-                      csr_to_ell)
+from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
+                      csr_to_ell, row_ids_from_indptr)
 from .selector import SelectorThresholds, default_thresholds, select_kernel
 from .stats import MatrixStats, matrix_stats
 
@@ -64,11 +64,18 @@ class SparsePlan:
     backend: str
     tile: int = 512
     bsr_block: tuple = (8, 128)
+    # sharded backend (core/shard.py): the mesh, the stats-chosen partition
+    # spec, and the single-device backend whose kernels run per shard
+    mesh: Any = None
+    shard_spec: Any = None
+    inner_backend: str | None = None
     _substrates: dict = dataclasses.field(default_factory=dict, repr=False)
     _opts: dict = dataclasses.field(default_factory=dict, repr=False)
     _bound: dict = dataclasses.field(default_factory=dict, repr=False)
     _ell_lens: Any = dataclasses.field(default=None, repr=False)
     _ell_src: Any = dataclasses.field(default=None, repr=False)
+    _bsr_map: Any = dataclasses.field(default=None, repr=False)
+    _bsr_brow: Any = dataclasses.field(default=None, repr=False)
 
     # -- substrates ---------------------------------------------------------
     def substrate(self, kind: str):
@@ -85,6 +92,17 @@ class SparsePlan:
                     sub = csr_to_balanced(self.csr, tile=self.tile)
                 elif kind == "bsr":
                     sub = csr_to_bsr(self.csr, *self.bsr_block)
+                elif kind in ("shard_ell", "shard_balanced"):
+                    if self.mesh is None or self.shard_spec is None:
+                        raise ValueError(
+                            "sharded substrates need a plan built with "
+                            "mesh=... (plan(csr, backend='sharded', mesh=m))")
+                    from . import shard as shard_mod
+                    sub = shard_mod.build_sharded_substrate(
+                        self.csr, self.shard_spec, self.mesh,
+                        inner_kind=kind[len("shard_"):], tile=self.tile,
+                        inner_backend=(self.inner_backend
+                                       or registry.default_backend()))
                 else:
                     raise ValueError(f"unknown substrate {kind!r}")
             self._substrates[kind] = sub
@@ -159,11 +177,42 @@ class SparsePlan:
                 self._ell_src = jnp.asarray(src.astype(np.int32))
         return self._ell_src
 
+    # -- BSR value-override / gradient support ------------------------------
+    def bsr_map(self):
+        """(3, nnz) scatter map from the CSR nonzero stream into block slots
+        (block id, in-block row, in-block col) — same block ordering as
+        ``csr_to_bsr`` (sorted unique block keys).  Lets a live value stream
+        rebuild the dense blocks differentiably."""
+        if self._bsr_map is None:
+            with jax.ensure_compile_time_eval():
+                indptr = np.asarray(self.csr.indptr)
+                indices = np.asarray(self.csr.indices)
+                bm, bk = self.bsr_block
+                kb = -(-self.csr.shape[1] // bk)
+                rows = row_ids_from_indptr(indptr, self.csr.nnz)
+                key = (rows // bm).astype(np.int64) * kb + indices // bk
+                _, inv = np.unique(key, return_inverse=True)
+                self._bsr_map = jnp.asarray(np.stack(
+                    [inv.astype(np.int32), (rows % bm).astype(np.int32),
+                     (indices % bk).astype(np.int32)]))
+        return self._bsr_map
+
+    def bsr_brow(self):
+        """(nblocks,) block-row id per materialized block."""
+        if self._bsr_brow is None:
+            bsr = self.substrate("bsr")
+            with jax.ensure_compile_time_eval():
+                self._bsr_brow = jnp.asarray(row_ids_from_indptr(
+                    np.asarray(bsr.indptr), bsr.nblocks))
+        return self._bsr_brow
+
 
 def plan(csr: CSR, *, n_hint: int | None = None,
          thresholds: SelectorThresholds | None = None,
          backend: str | None = None, tile: int = 512,
-         bsr_block: tuple = (8, 128)) -> SparsePlan:
+         bsr_block: tuple = (8, 128), mesh: Any = None,
+         shard_axis: str | None = None, shard_kind: str | None = None,
+         inner_backend: str | None = None) -> SparsePlan:
     """Offline planning front door.
 
     ``n_hint``: anticipated N of the dense operand; when given, the substrate
@@ -171,14 +220,36 @@ def plan(csr: CSR, *, n_hint: int | None = None,
     path), everything else stays lazy.  ``thresholds=None`` auto-loads a
     persisted calibration (``$REPRO_THRESHOLDS``) or falls back to defaults;
     ``backend=None`` picks the platform default (Pallas on TPU, XLA
-    elsewhere)."""
+    elsewhere) — or ``"sharded"`` when a ``mesh`` is given.
+
+    Sharded backend: ``mesh`` (required) names the device mesh; the
+    partitioner is chosen from the matrix stats (``cv`` vs.
+    ``thresholds.partition_cv`` — row-split below, nnz-balanced above) unless
+    ``shard_kind`` forces one; ``shard_axis`` defaults to the largest mesh
+    axis and ``inner_backend`` to the platform default single-device
+    backend whose kernels run per shard."""
+    if mesh is not None and backend is None:
+        backend = "sharded"
+    th = thresholds if thresholds is not None else default_thresholds()
+    stats = matrix_stats(csr)
+    spec = None
+    if backend == "sharded":
+        if mesh is None:
+            raise ValueError("backend='sharded' needs mesh=... "
+                             "(e.g. repro.launch.mesh.make_local_mesh)")
+        from . import shard as shard_mod
+        spec = shard_mod.make_shard_spec(stats, mesh, axis=shard_axis,
+                                         kind=shard_kind, thresholds=th)
     p = SparsePlan(
         csr=csr,
-        stats=matrix_stats(csr),
-        thresholds=thresholds if thresholds is not None else default_thresholds(),
+        stats=stats,
+        thresholds=th,
         backend=backend or registry.default_backend(),
         tile=tile,
         bsr_block=tuple(bsr_block),
+        mesh=mesh,
+        shard_spec=spec,
+        inner_backend=inner_backend,
     )
     if n_hint is not None:
         entry = p.entry(p.select(n_hint))
@@ -217,23 +288,28 @@ def _float0(a):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _exec_balanced(static, rows, cols, vals, x):
+def _exec_balanced(static, rows, cols, vals, x, *extra):
+    """``extra``: integer per-matrix prep artifacts forwarded positionally to
+    the bound kernel (float0 cotangents) — the sharded backend threads
+    per-shard prep (VSR row windows) through here, since inside shard_map
+    those are traced values and must not be baked into the static."""
     bound_fn, shape = static
     bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), tuple(shape))
-    return bound_fn(bal, x)
+    return bound_fn(bal, x, *extra)
 
 
-def _exec_balanced_fwd(static, rows, cols, vals, x):
-    return _exec_balanced(static, rows, cols, vals, x), (rows, cols, vals, x)
+def _exec_balanced_fwd(static, rows, cols, vals, x, *extra):
+    return _exec_balanced(static, rows, cols, vals, x, *extra), (rows, cols, vals, x, extra)
 
 
 def _exec_balanced_bwd(static, res, g):
     _, shape = static
-    rows, cols, vals, x = res
+    rows, cols, vals, x, extra = res
     r, c, v = rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
     dvals, dx = _coo_bwd(r, c, r < shape[0], v, x, g, shape)
     return (_float0(rows), _float0(cols),
-            dvals.reshape(vals.shape).astype(vals.dtype), dx)
+            dvals.reshape(vals.shape).astype(vals.dtype), dx,
+            *(_float0(e) for e in extra))
 
 
 _exec_balanced.defvjp(_exec_balanced_fwd, _exec_balanced_bwd)
@@ -265,6 +341,44 @@ def _exec_ell_bwd(static, res, g):
 _exec_ell.defvjp(_exec_ell_fwd, _exec_ell_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_bsr(static, indptr, bcol, brow, blocks, x):
+    """Block-granule family (DESIGN.md §3 rule 3): forward is the physical
+    BSR kernel; backward is block-level — dA restricted to the *materialized
+    blocks* (a superset of the CSR pattern; the stream gather in ``execute``
+    masks it back down) and dX as a block-transpose segment reduction."""
+    bound_fn, shape, block_shape = static
+    return bound_fn(BSR(indptr, bcol, blocks, tuple(shape),
+                        tuple(block_shape)), x)
+
+
+def _exec_bsr_fwd(static, indptr, bcol, brow, blocks, x):
+    return (_exec_bsr(static, indptr, bcol, brow, blocks, x),
+            (indptr, bcol, brow, blocks, x))
+
+
+def _exec_bsr_bwd(static, res, g):
+    _, (m, k), (bm, bk) = static
+    indptr, bcol, brow, blocks, x = res
+    mb, kb = -(-m // bm), -(-k // bk)
+    g2, _ = _as_2d(g)
+    x2, _ = _as_2d(x)
+    g3 = jnp.pad(g2.astype(jnp.float32),
+                 ((0, mb * bm - m), (0, 0))).reshape(mb, bm, -1)
+    x3 = jnp.pad(x2.astype(jnp.float32),
+                 ((0, kb * bk - k), (0, 0))).reshape(kb, bk, -1)
+    gb = jnp.take(g3, brow, axis=0)                     # (nb, bm, N)
+    xb = jnp.take(x3, bcol, axis=0)                     # (nb, bk, N)
+    dblocks = jnp.einsum("bmn,bkn->bmk", gb, xb).astype(blocks.dtype)
+    p = jnp.einsum("bmk,bmn->bkn", blocks.astype(jnp.float32), gb)
+    dx = jax.ops.segment_sum(p, bcol, num_segments=kb)
+    dx = dx.reshape(kb * bk, -1)[:k].reshape(x.shape).astype(x.dtype)
+    return (_float0(indptr), _float0(bcol), _float0(brow), dblocks, dx)
+
+
+_exec_bsr.defvjp(_exec_bsr_fwd, _exec_bsr_bwd)
+
+
 # ---------------------------------------------------------------------------
 # online front doors
 # ---------------------------------------------------------------------------
@@ -290,12 +404,44 @@ def execute(p: SparsePlan, x: jax.Array, *, vals: jax.Array | None = None,
     bound = p.bound_kernel(entry, interpret)
 
     if not entry.differentiable:
-        # forward-only physical path (e.g. the BSR block-granule backend):
-        # values stay baked, gradients are not defined through it.
+        # forward-only physical path: values stay baked, gradients are not
+        # defined through it.
         if vals is not None:
             raise ValueError(f"backend {entry.backend!r} does not support "
                              "live value streams; use xla/pallas")
         return bound(sub, x)
+
+    if entry.substrate in ("shard_ell", "shard_balanced"):
+        # shard_map wrapper (core/shard.py): the per-substrate-family VJPs
+        # run per shard inside; a live stream scatters into the per-shard
+        # value slabs through the substrate's src map (each nonzero lands in
+        # exactly one shard slot, so the gather transpose partitions dvals).
+        if vals is not None:
+            if p.csr.nnz == 0:
+                v = jnp.zeros(sub.vals.shape, sub.vals.dtype)
+            else:
+                v = jnp.where(sub.src >= 0,
+                              jnp.take(vals.reshape(-1),
+                                       jnp.clip(sub.src, 0, p.csr.nnz - 1)),
+                              0).astype(sub.vals.dtype)
+            sub = dataclasses.replace(sub, vals=v)
+        return bound(sub, x)
+
+    if entry.substrate == "bsr":
+        # block-granule family: live streams rebuild the dense blocks via the
+        # plan's scatter map (live=True re-pads them through the pattern-only
+        # gather; baked values ride the prep-time blockell for free);
+        # _exec_bsr carries the block-level custom VJP either way.
+        if vals is None:
+            blocks = sub.blocks
+        else:
+            bmap = p.bsr_map()
+            blocks = jnp.zeros(sub.blocks.shape, sub.blocks.dtype).at[
+                bmap[0], bmap[1], bmap[2]].add(
+                vals.reshape(-1).astype(sub.blocks.dtype))
+            bound = functools.partial(bound, live=True)
+        return _exec_bsr((bound, sub.shape, sub.block_shape), sub.indptr,
+                         sub.indices, p.bsr_brow(), blocks, x)
 
     if entry.substrate == "balanced":
         v = sub.vals if vals is None else _stream_to_balanced(vals, sub)
@@ -330,12 +476,25 @@ _PATTERN_BOUND: dict = {}
 def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
                     shape: tuple, x: jax.Array, *, impl: str = "nb_pr",
                     backend: str | None = None,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    mesh: Any = None,
+                    shard_axis: str | None = None) -> jax.Array:
     """Differentiable SpMM over a bare BalancedCOO-layout pattern — the
     training entry for sparse-weight layers (no CSR, values are live params).
     rows/cols may be traced (scanned per-layer patterns); they are real args
     with float0 cotangents, but traced patterns restrict you to backends whose
-    kernels need no host-side prep (the XLA reference backend)."""
+    kernels need no host-side prep (the XLA reference backend).
+
+    ``mesh`` (or ``backend="sharded"``) routes through the sharded backend:
+    the pattern's tiles — already fixed-nnz quotas — split evenly across
+    ``shard_axis`` and partials psum (core/shard.py)."""
+    if mesh is not None or backend == "sharded":
+        if mesh is None:
+            raise ValueError("backend='sharded' needs mesh=...")
+        from . import shard as shard_mod
+        return shard_mod.execute_pattern_sharded(
+            rows, cols, vals, tuple(shape), x, mesh=mesh, axis=shard_axis,
+            impl=impl, interpret=interpret)
     explicit = backend is not None
     backend = backend or registry.default_backend()
     entry = registry.resolve(impl, backend)

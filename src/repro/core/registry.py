@@ -33,8 +33,10 @@ import jax
 LOGICAL_KERNELS: tuple[str, ...] = ("rs_sr", "rs_pr", "nb_sr", "nb_pr")
 
 #: substrate format each *logical* kernel consumes on the reference (XLA)
-#: backend; physical backends may substitute their own (BSR does).
-SUBSTRATES: tuple[str, ...] = ("ell", "balanced", "bsr")
+#: backend; physical backends may substitute their own (BSR does, and the
+#: sharded backend consumes per-shard stacks of the inner format).
+SUBSTRATES: tuple[str, ...] = ("ell", "balanced", "bsr",
+                               "shard_ell", "shard_balanced")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +56,7 @@ _LAZY_BACKENDS: dict[str, str] = {
     "xla": "repro.core.spmm",
     "pallas": "repro.kernels",
     "bsr": "repro.kernels",
+    "sharded": "repro.core.shard",
 }
 
 

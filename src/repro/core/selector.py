@@ -43,6 +43,10 @@ class SelectorThresholds:
     n_threshold: int = 4        # N <= this → parallel reduction (paper: 4)
     pr_avg_row: float = 32.0    # PR side: avg_row < this → workload-balance
     sr_cv: float = 0.5          # SR side: cv > this → workload-balance
+    # sharded backend (DESIGN.md §4.1): cv > this → nnz-balanced tile-split
+    # partitioning, else row-split by M.  Same CV signal as Insight 2, one
+    # level up: skewed rows make equal-row shards unequal-work shards.
+    partition_cv: float = 1.0
 
     PAPER_GPU = None  # filled below
 
@@ -51,7 +55,8 @@ class SelectorThresholds:
         return json.dumps({"version": 1,
                            "n_threshold": int(self.n_threshold),
                            "pr_avg_row": float(self.pr_avg_row),
-                           "sr_cv": float(self.sr_cv)}, indent=2)
+                           "sr_cv": float(self.sr_cv),
+                           "partition_cv": float(self.partition_cv)}, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "SelectorThresholds":
@@ -60,7 +65,9 @@ class SelectorThresholds:
             raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
         return cls(n_threshold=int(d["n_threshold"]),
                    pr_avg_row=float(d["pr_avg_row"]),
-                   sr_cv=float(d["sr_cv"]))
+                   sr_cv=float(d["sr_cv"]),
+                   # absent in pre-sharding calibrations; default keeps them valid
+                   partition_cv=float(d.get("partition_cv", 1.0)))
 
 
 SelectorThresholds.PAPER_GPU = SelectorThresholds(n_threshold=4, pr_avg_row=32.0, sr_cv=0.5)
@@ -99,6 +106,14 @@ def select_kernel(stats: MatrixStats, n: int,
     # sequential reduction; WB when row lengths are skewed relative to the
     # mean (Insights 2+3 combined into the CV metric)
     return "nb_sr" if stats.cv > th.sr_cv else "rs_sr"
+
+
+def select_partition(stats: MatrixStats,
+                     th: SelectorThresholds = SelectorThresholds()) -> str:
+    """Partitioner for the sharded backend (DESIGN.md §4.1): the CV rule one
+    level up — uniform rows shard by rows ("row"), skewed rows shard by
+    nonzeros ("nnz", the BalancedCOO tile split)."""
+    return "nnz" if stats.cv > th.partition_cv else "row"
 
 
 # ---------------------------------------------------------------------------

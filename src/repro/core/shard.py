@@ -1,0 +1,377 @@
+"""Sharded execution backend: partition-aware SpMM over shard_map.
+
+The paper's adaptive story — pick workload-balancing vs. parallel-reduction
+from cheap matrix statistics — extends one level up (Bharadwaj et al. and
+Dai et al., PAPERS.md): the same ``MatrixStats`` that select a *kernel*
+select a *partitioning* of the matrix across devices.
+
+Two partitioners produce a ``ShardSpec``:
+
+* **row-split** (``kind="row"``): shard s owns an equal slice of rows.  The
+  cheap choice for uniform matrices — every shard's output rows are disjoint,
+  so the cross-shard reduction is a **concat** (expressed as the shard_map
+  ``out_specs`` along the shard axis; no collective at all).
+* **nnz-balanced** (``kind="nnz"``): the BalancedCOO principle applied across
+  devices — the row-major nonzero stream is cut into per-device quotas that
+  differ by at most one nonzero, then each quota is tiled exactly like
+  ``csr_to_balanced`` (same ``row == M`` sentinel padding).  Shards span row
+  boundaries, so every shard computes a partial over the full output and the
+  reduction is a **psum**.
+
+The selection rule is the CV threshold one level up: ``cv > partition_cv`` →
+nnz-balanced (skewed rows make equal-row shards unequal-work shards), else
+row-split (``SelectorThresholds.partition_cv``, persisted with the rest of
+the calibration — DESIGN.md §4.1).
+
+Registry entries under backend ``"sharded"`` wrap the existing xla/pallas
+kernels: each shard rebuilds its local inner substrate (ELL for ``rs_*``,
+BalancedCOO for ``nb_*``) inside ``shard_map`` and runs it through the same
+per-substrate-family custom VJPs as the single-device path, so the whole
+thing stays jit-able and differentiable (the transpose of the replicated
+dense operand is the ``psum`` of per-shard ``Aᵀ·g`` cotangents, which
+shard_map derives automatically).  ``execute`` remains the single
+interception point; per-shard substrates build lazily through the plan's
+substrate cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from . import registry
+from .formats import BUILD_COUNTS, CSR, BalancedCOO, row_ids_from_indptr
+from .selector import SelectorThresholds, default_thresholds, select_partition
+from .stats import MatrixStats
+
+
+# ---------------------------------------------------------------------------
+# the partition spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Static description of one partitioning of a sparse matrix.
+
+    ``bounds`` are row boundaries for ``kind="row"`` and nonzero-stream
+    boundaries for ``kind="nnz"`` (length ``n_shards + 1``); ``m_pad`` is the
+    per-shard padded row count for row-split (shards stack only when equal)."""
+
+    kind: str            # "row" | "nnz"
+    axis: str            # mesh axis the shards map onto
+    n_shards: int
+    reduction: str       # "concat" (disjoint output rows) | "psum" (partials)
+    bounds: Tuple[int, ...]
+    m_pad: int = 0
+
+
+def default_shard_axis(mesh) -> str:
+    """The mesh axis with the most devices (ties → first in mesh order)."""
+    names = list(mesh.axis_names)
+    return max(names, key=lambda a: (mesh.shape[a], -names.index(a)))
+
+
+def make_shard_spec(stats: MatrixStats, mesh, *, axis: str | None = None,
+                    kind: str | None = None,
+                    thresholds: SelectorThresholds | None = None) -> ShardSpec:
+    """Stats-driven partitioner choice (the Fig. 4 shape, one level up)."""
+    axis = axis or default_shard_axis(mesh)
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}; axes: {mesh.axis_names}")
+    n = int(mesh.shape[axis])
+    kind = kind or select_partition(stats, thresholds or default_thresholds())
+    if kind == "row":
+        m_pad = max(1, -(-stats.m // n))
+        bounds = tuple(min(s * m_pad, stats.m) for s in range(n + 1))
+        return ShardSpec("row", axis, n, "concat", bounds, m_pad)
+    if kind == "nnz":
+        bounds = tuple((s * stats.nnz) // n for s in range(n + 1))
+        return ShardSpec("nnz", axis, n, "psum", bounds, 0)
+    raise ValueError(f"unknown partitioner kind {kind!r}; expected row|nnz")
+
+
+# ---------------------------------------------------------------------------
+# the sharded substrate: stacked per-shard inner formats + stream gather map
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSubstrate:
+    """Per-shard inner substrates stacked on a leading shard dim.
+
+    ``src`` maps every value slot back into the global CSR nonzero stream
+    (-1 for padding) — the hook that lets live value streams (trainable
+    sparse weights) ride the sharded backend differentiably."""
+
+    _meta_fields = ("spec", "mesh", "inner_backend", "inner_kind",
+                    "inner_shape", "shape")
+
+    rows: Any            # (n, T, tile) for balanced; None for ell
+    cols: Any            # (n, T, tile) balanced | (n, Ms, w) ell
+    vals: Any
+    lens: Any            # (n, Ms) for ell; None for balanced
+    src: Any             # int32, same shape as vals; -1 = padding
+    spec: ShardSpec
+    mesh: Any
+    inner_backend: str
+    inner_kind: str      # "ell" | "balanced"
+    inner_shape: Tuple[int, int]
+    shape: Tuple[int, int]
+
+
+jax.tree_util.register_dataclass(
+    ShardedSubstrate,
+    data_fields=["rows", "cols", "vals", "lens", "src"],
+    meta_fields=list(ShardedSubstrate._meta_fields))
+
+
+def _ell_slab(starts, lens, w, indices, data, nnz):
+    """One shard's ELL arrays from per-row global stream starts + lengths."""
+    j = np.arange(w, dtype=np.int64)[None, :]
+    src = starts[:, None].astype(np.int64) + j
+    valid = j < lens[:, None]
+    if nnz:
+        idx = np.clip(src, 0, nnz - 1)
+        cols = np.where(valid, indices[idx], 0).astype(np.int32)
+        vals = np.where(valid, data[idx], 0).astype(data.dtype)
+    else:
+        cols = np.zeros(src.shape, np.int32)
+        vals = np.zeros(src.shape, data.dtype)
+    return cols, vals, np.where(valid, src, -1).astype(np.int32)
+
+
+def _bal_slab(b0, b1, row_off, sentinel, n_tiles, tile, rows_g, indices, data):
+    """One shard's BalancedCOO arrays from a nonzero-stream slice [b0, b1) —
+    the same tiling rule as ``csr_to_balanced`` (fixed quota, sentinel pad)."""
+    q = b1 - b0
+    pad = n_tiles * tile - q
+    rows = np.concatenate([rows_g[b0:b1] - row_off,
+                           np.full(pad, sentinel, np.int32)]).astype(np.int32)
+    cols = np.concatenate([indices[b0:b1], np.zeros(pad, np.int32)]).astype(np.int32)
+    vals = np.concatenate([data[b0:b1], np.zeros(pad, data.dtype)])
+    src = np.concatenate([np.arange(b0, b1, dtype=np.int32),
+                          np.full(pad, -1, np.int32)])
+    shp = (n_tiles, tile)
+    return rows.reshape(shp), cols.reshape(shp), vals.reshape(shp), src.reshape(shp)
+
+
+def build_sharded_substrate(csr: CSR, spec: ShardSpec, mesh, *,
+                            inner_kind: str, tile: int,
+                            inner_backend: str) -> ShardedSubstrate:
+    """Host-side construction of all per-shard substrates, stacked."""
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    data = np.asarray(csr.data)
+    m, k = csr.shape
+    nnz = len(data)
+    n = spec.n_shards
+    BUILD_COUNTS[inner_kind] += n
+
+    rows_s = cols_s = vals_s = lens_s = src_s = None
+    if spec.kind == "row":
+        inner_shape = (spec.m_pad, k)
+        if inner_kind == "ell":
+            w = max(1, int(np.diff(indptr).max()) if m else 1)
+            cs, vs, ss, ls = [], [], [], []
+            for s in range(n):
+                r0, r1 = spec.bounds[s], spec.bounds[s + 1]
+                starts = np.concatenate([indptr[r0:r1],
+                                         np.full(spec.m_pad - (r1 - r0), nnz)])
+                lens = np.concatenate([np.diff(indptr[r0:r1 + 1]),
+                                       np.zeros(spec.m_pad - (r1 - r0), np.int64)])
+                c, v, sr = _ell_slab(starts, lens, w, indices, data, nnz)
+                cs.append(c); vs.append(v); ss.append(sr)
+                ls.append(lens.astype(np.int32))
+            cols_s, vals_s, src_s = np.stack(cs), np.stack(vs), np.stack(ss)
+            lens_s = np.stack(ls)
+        else:
+            quotas = [int(indptr[spec.bounds[s + 1]] - indptr[spec.bounds[s]])
+                      for s in range(n)]
+            n_tiles = max(1, -(-max(quotas) // tile)) if quotas else 1
+            rows_g = row_ids_from_indptr(indptr, nnz)
+            rs, cs, vs, ss = [], [], [], []
+            for s in range(n):
+                b0, b1 = int(indptr[spec.bounds[s]]), int(indptr[spec.bounds[s + 1]])
+                r, c, v, sr = _bal_slab(b0, b1, spec.bounds[s], spec.m_pad,
+                                        n_tiles, tile, rows_g, indices, data)
+                rs.append(r); cs.append(c); vs.append(v); ss.append(sr)
+            rows_s, cols_s, vals_s, src_s = map(np.stack, (rs, cs, vs, ss))
+    else:  # nnz-balanced
+        inner_shape = (m, k)
+        if inner_kind == "ell":
+            ws, per = [], []
+            for s in range(n):
+                b0, b1 = spec.bounds[s], spec.bounds[s + 1]
+                starts = np.clip(indptr[:-1], b0, b1)
+                lens = np.clip(indptr[1:], b0, b1) - starts
+                per.append((starts, lens))
+                ws.append(int(lens.max()) if m else 0)
+            w = max(1, max(ws) if ws else 1)
+            cs, vs, ss, ls = [], [], [], []
+            for starts, lens in per:
+                c, v, sr = _ell_slab(starts, lens, w, indices, data, nnz)
+                cs.append(c); vs.append(v); ss.append(sr)
+                ls.append(lens.astype(np.int32))
+            cols_s, vals_s, src_s = np.stack(cs), np.stack(vs), np.stack(ss)
+            lens_s = np.stack(ls)
+        else:
+            quotas = [spec.bounds[s + 1] - spec.bounds[s] for s in range(n)]
+            n_tiles = max(1, -(-max(quotas) // tile)) if quotas else 1
+            rows_g = row_ids_from_indptr(indptr, nnz)
+            rs, cs, vs, ss = [], [], [], []
+            for s in range(n):
+                r, c, v, sr = _bal_slab(spec.bounds[s], spec.bounds[s + 1], 0, m,
+                                        n_tiles, tile, rows_g, indices, data)
+                rs.append(r); cs.append(c); vs.append(v); ss.append(sr)
+            rows_s, cols_s, vals_s, src_s = map(np.stack, (rs, cs, vs, ss))
+
+    as_j = lambda a: None if a is None else jnp.asarray(a)
+    return ShardedSubstrate(
+        rows=as_j(rows_s), cols=as_j(cols_s), vals=as_j(vals_s),
+        lens=as_j(lens_s), src=as_j(src_s),
+        spec=spec, mesh=mesh, inner_backend=inner_backend,
+        inner_kind=inner_kind, inner_shape=tuple(inner_shape),
+        shape=tuple(csr.shape))
+
+
+# ---------------------------------------------------------------------------
+# shard_map kernel wrappers (the "sharded" backend entries)
+# ---------------------------------------------------------------------------
+
+# stable inner-kernel callables: the custom VJPs key retraces on the identity
+# of their static (bound_fn, shape) tuple, so bind per (entry, interpret, win)
+_INNER_BOUND: dict = {}
+
+
+def _make_inner(entry: registry.KernelEntry, interpret, win):
+    key = (entry, interpret, win)
+    fn = _INNER_BOUND.get(key)
+    if fn is None:
+        if entry.prep is None:
+            fn = functools.partial(entry.fn, interpret=interpret)
+        else:
+            # preppy inner kernels (Pallas VSR) take their per-shard prep
+            # artifact as a trailing *tensor* argument — it is sliced inside
+            # shard_map and must not be baked into the (static) partial.
+            def fn(sub, x, row_base, *, _f=entry.fn):
+                return _f(sub, x, interpret=interpret, row_base=row_base,
+                          win=win)
+        _INNER_BOUND[key] = fn
+    return fn
+
+
+def _sharded_prep(sub: ShardedSubstrate, *, _logical: str) -> dict:
+    """Run the inner entry's host-side prep per shard; stack the artifacts."""
+    inner = registry.resolve(_logical, sub.inner_backend)
+    if inner.prep is None:
+        return {}
+    bases, wins = [], []
+    for s in range(sub.spec.n_shards):
+        local = BalancedCOO(np.asarray(sub.rows)[s], np.asarray(sub.cols)[s],
+                            np.asarray(sub.vals)[s], sub.inner_shape)
+        opts = dict(inner.prep(local))
+        if set(opts) != {"row_base", "win"}:
+            raise ValueError(f"sharded backend cannot stack prep opts "
+                             f"{sorted(opts)} of ({_logical!r}, "
+                             f"{sub.inner_backend!r})")
+        bases.append(np.asarray(opts["row_base"]))
+        wins.append(int(opts["win"]))
+    return {"row_base": jnp.asarray(np.stack(bases)), "win": max(wins)}
+
+
+def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
+                  interpret=None, row_base=None, win=None):
+    """Run the inner kernel per shard under shard_map; reduce per the spec."""
+    # late import (plan imports registry, not shard); the package re-exports
+    # the plan() *function* under the same name, so pull the privates directly
+    from .plan import _exec_balanced, _exec_ell
+
+    spec = sub.spec
+    inner = registry.resolve(_logical, sub.inner_backend)
+    bound = _make_inner(inner, interpret, win)
+
+    if sub.inner_kind == "balanced":
+        ops = [sub.rows, sub.cols, sub.vals]
+    else:
+        ops = [sub.cols, sub.lens, sub.vals]
+    if row_base is not None:
+        ops.append(row_base)
+    in_specs = (P(spec.axis),) * len(ops) + (P(),)
+    out_specs = P(spec.axis) if spec.reduction == "concat" else P()
+
+    def local(*args):
+        *shard_args, xx = args
+        shard_args = [a[0] for a in shard_args]  # drop the leading shard dim
+        if sub.inner_kind == "balanced":
+            rows, cols, vals = shard_args[:3]
+            extra = tuple(shard_args[3:])
+            y = _exec_balanced((bound, sub.inner_shape), rows, cols,
+                               vals.reshape(-1), xx, *extra)
+        else:
+            cols, lens, vals = shard_args[:3]
+            y = _exec_ell((bound, sub.inner_shape), cols, lens, vals, xx)
+        if spec.reduction == "psum":
+            y = jax.lax.psum(y, spec.axis)
+        return y
+
+    y = shard_map(local, mesh=sub.mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_rep=False)(*ops, x)
+    if spec.reduction == "concat":
+        y = y[: sub.shape[0]]  # strip the per-shard row padding
+    return y
+
+
+for _logical in registry.LOGICAL_KERNELS:
+    _sub_kind = "shard_ell" if _logical.startswith("rs") else "shard_balanced"
+    registry.register(_logical, "sharded", _sub_kind,
+                      functools.partial(_sharded_exec, _logical=_logical),
+                      prep=functools.partial(_sharded_prep, _logical=_logical))
+
+
+# ---------------------------------------------------------------------------
+# plan-free sharded entry for trainable patterns (sparse-weight layers)
+# ---------------------------------------------------------------------------
+
+def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
+                            axis: str | None = None, impl: str = "nb_pr",
+                            interpret=None):
+    """Tile-split a bare BalancedCOO-layout pattern across ``axis``.
+
+    The pattern is already nnz-balanced (fixed quota per tile), so an equal
+    share of tiles per device IS the nnz partitioner; partials psum.  Rows and
+    cols may be traced (scanned per-layer patterns) — the inner kernel is the
+    prep-free XLA reference, same as ``execute_pattern``'s traced fallback."""
+    from .plan import _exec_balanced
+
+    axis = axis or default_shard_axis(mesh)
+    n = int(mesh.shape[axis])
+    entry = registry.resolve(impl, "xla")
+    if entry.substrate != "balanced":
+        raise ValueError(f"execute_pattern_sharded needs a balanced-substrate "
+                         f"kernel; {impl!r} consumes {entry.substrate!r}")
+    t, tile = rows.shape
+    v2 = vals.reshape(t, tile)
+    per = -(-t // n)
+    pad = per * n - t
+    m = int(shape[0])
+    if pad:
+        rows = jnp.concatenate([rows, jnp.full((pad, tile), m, rows.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros((pad, tile), cols.dtype)])
+        v2 = jnp.concatenate([v2, jnp.zeros((pad, tile), v2.dtype)])
+    rs = rows.reshape(n, per, tile)
+    cs = cols.reshape(n, per, tile)
+    vs = v2.reshape(n, per, tile)
+    bound = _make_inner(entry, interpret, None)
+
+    def local(r, c, v, xx):
+        y = _exec_balanced((bound, tuple(shape)), r[0], c[0],
+                           v[0].reshape(-1), xx)
+        return jax.lax.psum(y, axis)
+
+    return shard_map(local, mesh=mesh, in_specs=(P(axis),) * 3 + (P(),),
+                     out_specs=P(), check_rep=False)(rs, cs, vs, x)

@@ -110,19 +110,51 @@ def spmm_bsr(bsr: BSR, x: jax.Array, *, tile_n: int = 128,
 # registry: the block-granule backend.  All four logical kernels resolve to
 # the one MXU block-gather binary — block granularity subsumes both the
 # balancing and the reduction-style axes (DESIGN.md §2).  Values are baked
-# into the dense blocks at plan time, so this backend is forward-only.
+# into the dense blocks at plan time.  The prep hook bakes only the
+# *arrangement* (a block-ELL gather map over the pattern); block values flow
+# through a traceable gather, so live value streams and the block-level
+# custom VJP in ``core/plan`` work (DESIGN.md §3 rule 3).
 # ---------------------------------------------------------------------------
 
-def _prep_blockell(bsr: BSR) -> dict:
-    blocks, bcols, wb = bsr_to_blockell(bsr)
-    return {"blockell": (jnp.asarray(blocks), jnp.asarray(bcols.reshape(-1)), wb)}
+def _prep_bell(bsr: BSR) -> dict:
+    """Block-ELL prep, two artifacts: the fully-baked padded blockell (the
+    zero-cost forward for plan-baked values) and the pattern-only gather map
+    (per-(block-row, slot) source block index + validity) that re-pads *live*
+    block values traceably."""
+    indptr = np.asarray(bsr.indptr)
+    bcol = np.asarray(bsr.indices)
+    mb = len(indptr) - 1
+    wb = max(1, int(np.diff(indptr).max()) if mb else 1)
+    slot = np.arange(wb)[None, :]
+    src = indptr[:-1, None] + slot
+    valid = slot < np.diff(indptr)[:, None]
+    src = np.where(valid, src, 0)
+    bcols = np.zeros((mb, wb), np.int32)
+    bcols[valid] = bcol[src[valid]]
+    baked, _, _ = bsr_to_blockell(bsr)
+    return {"blockell": (jnp.asarray(baked), jnp.asarray(bcols.reshape(-1)), wb),
+            "bell_src": jnp.asarray(src.astype(np.int32)),
+            "bell_valid": jnp.asarray(valid)}
 
 
 def _bsr_entry(bsr: BSR, x, *, interpret: bool | None = None,
-               blockell: tuple | None = None):
-    return spmm_bsr(bsr, x, interpret=interpret, blockell=blockell)
+               blockell: tuple | None = None, bell_src=None, bell_valid=None,
+               live: bool = False):
+    if blockell is None:
+        return spmm_bsr(bsr, x, interpret=interpret)
+    if not live:
+        return spmm_bsr(bsr, x, interpret=interpret, blockell=blockell)
+    # live block values (stream override / grads): re-pad through the
+    # pattern-only gather map instead of the baked arrangement
+    if bsr.nblocks == 0:
+        shape = (bsr.shape[0],) if x.ndim == 1 else (bsr.shape[0], x.shape[1])
+        return jnp.zeros(shape, x.dtype)
+    _, bcols_flat, wb = blockell
+    blocks = jnp.take(bsr.blocks, bell_src, axis=0)     # (Mb, WB, bm, bk)
+    blocks = jnp.where(bell_valid[..., None, None], blocks, 0)
+    return spmm_bsr(bsr, x, interpret=interpret,
+                    blockell=(blocks, bcols_flat, wb))
 
 
 for _logical in registry.LOGICAL_KERNELS:
-    registry.register(_logical, "bsr", "bsr", _bsr_entry,
-                      prep=_prep_blockell, differentiable=False)
+    registry.register(_logical, "bsr", "bsr", _bsr_entry, prep=_prep_bell)

@@ -123,6 +123,28 @@ def spmm_vsr(bal: BalancedCOO, x: jax.Array, *, tile_n: int = 128,
     return y[:, 0] if x.ndim == 1 else y
 
 
+def spmm_as_n_spmv_pallas(bal: BalancedCOO, x: jax.Array, *,
+                          interpret: bool | None = None,
+                          row_base: jax.Array | None = None,
+                          win: int | None = None) -> jax.Array:
+    """Paper §2.1.2 strawman on the *Pallas* backend: N column-by-column VSR
+    SpMVs, each re-gathering the sparse stream — the redundant loads VDL
+    eliminates, implemented with the same physical kernel family as
+    ``spmm_vsr`` so the ablation compares like-for-like backends."""
+    from .spmv import spmv_vsr
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2 = x[:, None] if x.ndim == 1 else x
+    if row_base is None or win is None:
+        base, win = plan_windows(bal)
+        row_base = jnp.asarray(base)
+    out = jax.lax.map(
+        lambda col: spmv_vsr(bal, col, interpret=interpret,
+                             row_base=row_base, win=win),
+        x2.T).T                          # sequential over columns, like N launches
+    return out[:, 0] if x.ndim == 1 else out
+
+
 # ---------------------------------------------------------------------------
 # registry: the Pallas physical kernels for the nnz-balanced logical pair.
 # On TPU the in-tile reduction-style split collapses (DESIGN.md §2): both

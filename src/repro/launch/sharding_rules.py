@@ -50,6 +50,22 @@ LONG_CTX_OVERRIDES: dict[str, tuple] = {
     "cache_seq": ("data", "model"),
 }
 
+# Sparse-weight partition rules (opt-in overrides; see core/shard.py): the
+# BalancedCOO value streams of pruned-FFN layers, logical ("tiles", "nnz"),
+# shard their *tile* axis over the DP/FSDP axes — every tile is a fixed-nnz
+# quota, so equal tile counts are equal nonzero counts (the paper's
+# workload-balancing invariant carried up to parameter sharding).  The
+# intra-tile nnz axis stays contiguous (a tile is one kernel work unit).
+# Kept out of TRAIN_RULES because arbitrary tile counts need the
+# check_divisibility fallback (train.step.sparse_weight_shardings applies
+# it); the __sparse_shard_axis__ marker opts activations into the sharded
+# SpMM backend on the same axis.
+SPARSE_WEIGHT_RULES: dict[str, tuple] = {
+    "tiles": ("pod", "data"),
+    "nnz": (),
+    "__sparse_shard_axis__": "data",
+}
+
 
 def resolve_rules(base: Mapping[str, tuple] = TRAIN_RULES,
                   overrides: Optional[Mapping[str, tuple]] = None) -> dict:

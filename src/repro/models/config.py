@@ -17,8 +17,10 @@ class MoEConfig:
     d_ff_expert: int
     capacity_factor: float = 1.25
     # dispatch path: "auto" applies the paper's selection logic
-    # (tokens-per-expert small → one-hot/PR; large → sort-based/SR)
-    dispatch: str = "auto"          # "auto" | "onehot" | "sort"
+    # (tokens-per-expert small → one-hot/PR; large → sort-based/SR; "spmm"
+    # forces the token→expert matrix through the plan/execute subsystem —
+    # the ungrouped sort path routes there by itself)
+    dispatch: str = "auto"          # "auto" | "onehot" | "sort" | "spmm"
     router_aux_weight: float = 0.01
 
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import execute_pattern
-from .sharding_ctx import constrain, constrain_gemm
+from .sharding_ctx import constrain, constrain_gemm, sparse_shard
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
@@ -230,12 +230,21 @@ class SparsePattern:
                              jnp.asarray(cols.reshape(n_tiles, tile)), (m, k))
 
 
-def sparse_matmul(pattern: SparsePattern, vals: jax.Array, x: jax.Array) -> jax.Array:
+def sparse_matmul(pattern: SparsePattern, vals: jax.Array, x: jax.Array, *,
+                  mesh=None, shard_axis: str | None = None) -> jax.Array:
     """x @ W^T with W (m, k) sparse: computed as SpMM W · x^T through the
-    unified plan/execute front door (differentiable w.r.t. vals and x)."""
+    unified plan/execute front door (differentiable w.r.t. vals and x).
+
+    With a ``mesh`` (passed, or installed via the sharding ctx's
+    ``__sparse_shard_axis__`` marker) the SpMM runs on the sharded backend:
+    the pattern's tiles — fixed-nnz quotas — split across the axis and the
+    partial products psum (core/shard.py)."""
+    if mesh is None:
+        mesh, shard_axis = sparse_shard()
     flat = x.reshape(-1, x.shape[-1])                           # (T, k)
     y = execute_pattern(pattern.rows, pattern.cols, vals,
-                        tuple(pattern.shape), flat.T)           # (m, T)
+                        tuple(pattern.shape), flat.T,
+                        mesh=mesh, shard_axis=shard_axis)       # (m, T)
     return y.T.reshape(x.shape[:-1] + (pattern.shape[0],)).astype(x.dtype)
 
 

@@ -315,11 +315,17 @@ class Model:
         return logits[:, 0], caches
 
     def decode_step(self, params, caches, tokens):
-        """tokens (B, 1) → (logits (B, V), caches)."""
+        """tokens (B, 1) → (logits (B, V), caches).
+
+        ``caches["length"]`` may be a scalar (all lanes in lockstep) or a
+        (B,) vector (batched serving: each slot at its own position, masked
+        to its own length in attention)."""
         cfg = self.cfg
         b = tokens.shape[0]
         x = self._embed(params, tokens)
-        positions = jnp.broadcast_to(caches["length"][None, None], (b, 1))
+        lens = caches["length"]
+        positions = (jnp.broadcast_to(lens[None, None], (b, 1))
+                     if jnp.ndim(lens) == 0 else lens[:, None])
         memory = caches.get("memory") if cfg.family == "audio" else None
         h, caches, _ = self._backbone(params, x, positions, caches=caches,
                                       memory=memory)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import execute_pattern
+
 from .config import MoEConfig
 from .layers import dot
 from .sharding_ctx import constrain
@@ -101,7 +103,11 @@ def moe_sort(p: dict, x: jax.Array, cfg: MoEConfig, groups: int | None = None):
 
     §Perf iteration 4: the ungrouped global argsort/scatter made GSPMD
     replicate the (T·k, d) token stream per layer (f32 all-reduces of
-    240 GB tensors on kimi-k2); grouping removes all of it.  x: (T, d)."""
+    240 GB tensors on kimi-k2); grouping removes all of it.  x: (T, d).
+
+    The ungrouped case (g == 1: tests, CPU serving, single-shard cells)
+    routes the token→expert matrix through the plan/execute subsystem
+    (``moe_spmm``) — the ROADMAP serve item; same slotting, same output."""
     from .sharding_ctx import moe_groups
     t, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
@@ -109,6 +115,8 @@ def moe_sort(p: dict, x: jax.Array, cfg: MoEConfig, groups: int | None = None):
     g = max(1, min(g, t))
     while t % g:
         g //= 2
+    if g <= 1:
+        return moe_spmm(p, x, cfg)
     tg = t // g
     cap = capacity(tg, cfg)
 
@@ -179,6 +187,53 @@ def _expert_ffn_grouped(p: dict, h: jax.Array) -> jax.Array:
                       preferred_element_type=jnp.float32).astype(h.dtype)
 
 
+def moe_spmm(p: dict, x: jax.Array, cfg: MoEConfig):
+    """Dispatch/combine as SpMM through the unified plan/execute subsystem.
+
+    The token→expert dispatch matrix IS the paper's skewed short-row regime
+    (rows = expert·capacity slots, ≤1 nonzero each; hot experts = long row
+    runs): dispatch is ``D @ X`` with ``D (E·C, T)``, combine is ``G @ H``
+    with ``G (T, E·C+1)`` carrying the gates — both BalancedCOO-layout
+    patterns executed by ``execute_pattern`` (registry + unified VJP, the
+    same door the sparse-weight layers use).  Patterns are traced (router
+    output), so the XLA reference backend runs them; slotting and capacity
+    semantics match ``moe_sort`` exactly."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = capacity(t, cfg)
+    gate, idx, aux = router(p, x, cfg)                         # (T, k) each
+
+    tk = t * k
+    flat_e = idx.reshape(tk)
+    flat_j = jnp.arange(tk, dtype=jnp.int32)
+    # rank tokens within their expert: one int-only sort (as in moe_sort)
+    se, sj = jax.lax.sort((flat_e, flat_j), dimension=0, num_keys=1,
+                          is_stable=True)
+    first = jnp.searchsorted(se, jnp.arange(e))
+    pos = flat_j - jnp.take(first, se)
+    slot_s = jnp.where(pos < cap, se * cap + pos, e * cap)     # overflow → drop
+    slot_u = jnp.zeros((tk,), jnp.int32).at[sj].set(slot_s)    # token order
+    tok = flat_j // k
+
+    tile = max(1, min(512, tk))
+    pad = -(-tk // tile) * tile - tk
+    as_tiles = lambda a, fill: jnp.concatenate(
+        [a, jnp.full((pad,), fill, a.dtype)]).reshape(-1, tile)
+
+    # dispatch: rows = slot (E·C sentinel drops overflow), cols = token
+    ein = execute_pattern(as_tiles(slot_u, e * cap), as_tiles(tok, 0),
+                          as_tiles(jnp.ones((tk,), jnp.float32), 0.0),
+                          (e * cap, t), x)                     # (E·C, d)
+    h = _expert_ffn(p, ein.reshape(e, cap, d).astype(x.dtype))
+    # combine: rows = token, cols = slot (dropped → the zero row), vals = gate
+    hpad = jnp.concatenate([h.reshape(e * cap, d),
+                            jnp.zeros((1, d), h.dtype)])
+    y = execute_pattern(as_tiles(tok, t), as_tiles(slot_u, 0),
+                        as_tiles(gate.reshape(tk).astype(jnp.float32), 0.0),
+                        (t, e * cap + 1), hpad)                # (T, d)
+    return y.astype(x.dtype), aux
+
+
 def moe_onehot(p: dict, x: jax.Array, cfg: MoEConfig):
     """One-hot-einsum (parallel-reduction) dispatch — the GShard form.
     Only sane for small T (the selector guards this)."""
@@ -207,5 +262,6 @@ def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig):
     lead = x.shape[:-1]
     flat = x.reshape(-1, x.shape[-1])
     path = select_dispatch(flat.shape[0], cfg)
-    y, aux = (moe_onehot if path == "onehot" else moe_sort)(p, flat, cfg)
+    fn = {"onehot": moe_onehot, "spmm": moe_spmm}.get(path, moe_sort)
+    y, aux = fn(p, flat, cfg)
     return y.reshape(*lead, x.shape[-1]), aux

@@ -54,6 +54,21 @@ def constrain_gemm(w: jax.Array | None = None, out: jax.Array | None = None):
     return constrain(out, ("batch",) + (None,) * (out.ndim - 1))
 
 
+def sparse_shard():
+    """(mesh, axis) for routing sparse-weight SpMMs through the sharded
+    backend (core/shard.py): rules carrying the ``__sparse_shard_axis__``
+    marker opt a cell into shard_map'd sparse layers; ``(None, None)``
+    otherwise (single-device plan/execute path)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return None, None
+    mesh, rules = ctx
+    axis = rules.get("__sparse_shard_axis__")
+    if not axis or axis not in mesh.axis_names:
+        return None, None
+    return mesh, axis
+
+
 def moe_groups() -> int:
     """§Perf iteration 4: number of dispatch groups for the GShard-style
     grouped MoE (one group per DP shard → group-local sort/scatter, the only

@@ -250,8 +250,17 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, positions,
         lmax = cache["k"].shape[2]
         if s == 1:  # decode: rolling write for window caches
             idx = cache["length"] % lmax if window > 0 else cache["length"]
-            newk = jax.lax.dynamic_update_slice_in_dim(cache["k"], kt.astype(cache["k"].dtype), idx, axis=2)
-            newv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vt.astype(cache["v"].dtype), idx, axis=2)
+            if jnp.ndim(idx) == 0:
+                newk = jax.lax.dynamic_update_slice_in_dim(cache["k"], kt.astype(cache["k"].dtype), idx, axis=2)
+                newv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vt.astype(cache["v"].dtype), idx, axis=2)
+            else:
+                # per-slot lengths (batched serving): each lane writes at its
+                # own position; decode_attention masks each lane to its own
+                # valid length below
+                upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=1))
+                newk = upd(cache["k"], kt.astype(cache["k"].dtype), idx)
+                newv = upd(cache["v"], vt.astype(cache["v"].dtype), idx)
             length = cache["length"] + 1
             valid = jnp.minimum(length, lmax) if window > 0 else length
             out = decode_attention(qt, newk, newv, length=valid, window=0)

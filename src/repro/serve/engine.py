@@ -4,10 +4,11 @@ prefill/decode), greedy sampling, EOS eviction.
 Scheduling model: a fixed pool of ``slots`` decode lanes share one KV cache.
 New requests are prefilled one-at-a-time into a free slot (prefill and
 decode are separate compiled functions, as in disaggregated serving); every
-engine tick runs one batched decode step over all active slots.  Slots
-advance in lockstep positions-wise per slot via the per-slot offset kept by
-the engine (the model cache length is global; per-slot validity is tracked
-by masking finished lanes).
+engine tick runs one batched decode step over all active slots.  Slot caches
+stack on the model's batch axis for the step and ``length`` stacks to a
+per-slot vector, so each lane writes at — and attends up to — its *own*
+request's length (the per-slot length mask; a lane never reads another
+lane's longer cache region).
 
 This is the 'serve a small model with batched requests' deliverable; the
 32k/500k shape cells lower the same decode_step through pjit in the dry-run.
@@ -32,6 +33,38 @@ class Request:
     done: bool = False
 
 
+def _batch_axes(c1, c2):
+    """Structural diff of two cache skeletons (batch=1 vs batch=2): the axis
+    whose extent tracks the prefill batch is where slots stack; extent-
+    invariant leaves (the ``length`` scalar) are per-slot values that stack
+    into a leading vector (marked -1)."""
+    if isinstance(c1, dict):
+        return {k: _batch_axes(c1[k], c2[k]) for k in c1}
+    for i, (a, b) in enumerate(zip(c1.shape, c2.shape)):
+        if a != b:
+            return i
+    return -1
+
+
+def _stack_slots(caches, axes):
+    if isinstance(axes, dict):
+        # keys absent from the skeleton (e.g. audio "memory", added by
+        # prefill) batch on their leading axis
+        return {k: _stack_slots([c[k] for c in caches], axes.get(k, 0))
+                for k in caches[0]}
+    if axes < 0:
+        return jnp.stack([jnp.asarray(c) for c in caches])
+    return jnp.concatenate(caches, axis=axes)
+
+
+def _slice_slot(cache, axes, i):
+    if isinstance(axes, dict):
+        return {k: _slice_slot(v, axes.get(k, 0), i) for k, v in cache.items()}
+    if axes < 0:
+        return cache[i]
+    return jax.lax.slice_in_dim(cache, i, i + 1, axis=axes)
+
+
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256):
         self.model = model
@@ -43,6 +76,9 @@ class ServeEngine:
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
         self._decode = jax.jit(model.decode_step)
         self._caches: list = [None] * slots
+        self._axes = _batch_axes(
+            jax.eval_shape(lambda: model.init_cache(1, max_len)),
+            jax.eval_shape(lambda: model.init_cache(2, max_len)))
         self.ticks = 0
         self._all: list[Request] = []
 
@@ -66,16 +102,22 @@ class ServeEngine:
         self._caches[slot] = None
 
     def tick(self):
-        """One engine iteration: admit, batched decode, evict."""
+        """One engine iteration: admit, one batched decode step, evict."""
         self._admit()
         self.ticks += 1
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, cache = self._decode(self.params, self._caches[slot], tok)
-            self._caches[slot] = cache
-            nxt = int(jnp.argmax(logits[0]))
+        live = [(s, r) for s, r in enumerate(self.active) if r is not None]
+        if not live:
+            return
+        # pad to the fixed slot count so decode compiles exactly once (a
+        # live-count-sized batch would retrace per occupancy level): dummy
+        # lanes cycle the live caches/tokens and their outputs are discarded
+        lanes = [live[i % len(live)] for i in range(self.slots)]
+        batched = _stack_slots([self._caches[s] for s, _ in lanes], self._axes)
+        toks = jnp.asarray([[r.out[-1]] for _, r in lanes], jnp.int32)
+        logits, new_cache = self._decode(self.params, batched, toks)
+        for i, (slot, req) in enumerate(live):
+            self._caches[slot] = _slice_slot(new_cache, self._axes, i)
+            nxt = int(jnp.argmax(logits[i]))
             req.out.append(nxt)
             if nxt == req.eos or len(req.out) >= req.max_new:
                 req.done = True

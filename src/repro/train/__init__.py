@@ -1,2 +1,3 @@
 from .optim import OptConfig, adamw_update, init_opt_state, schedule
-from .step import TrainConfig, init_state, make_train_step
+from .step import (TrainConfig, init_state, make_train_step,
+                   sparse_weight_shardings)

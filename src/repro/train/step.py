@@ -70,3 +70,32 @@ def make_train_step(loss_fn: Callable, tcfg: TrainConfig) -> Callable:
 
 def init_state(params: Any, tcfg: TrainConfig) -> dict:
     return {"params": params, "opt": init_opt_state(params, tcfg.opt)}
+
+
+def sparse_weight_shardings(params: Any, mesh, rules=None) -> Any:
+    """NamedShardings for the sparse-FFN value streams (``v_gate``/``v_up``/
+    ``v_down`` BalancedCOO tile stacks): tiles over the DP axes, nnz
+    contiguous — the partition the sharded SpMM backend assumes
+    (``launch.sharding_rules.SPARSE_WEIGHT_RULES``).  Dense leaves map to
+    ``None`` (caller's layout); non-dividing tile counts fall back to
+    replicated.  Feed to ``jax.device_put`` / pjit ``in_shardings`` for the
+    train state's param subtree."""
+    from jax.sharding import NamedSharding
+    from repro.launch.sharding_rules import (SPARSE_WEIGHT_RULES,
+                                             check_divisibility,
+                                             partition_spec)
+    rules = rules or SPARSE_WEIGHT_RULES
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if not name.startswith("v_"):
+            return None
+        # value stream leaves are (..., tiles, nnz); leading axes (layer
+        # stacking) stay unsharded
+        logical = (None,) * (leaf.ndim - 2) + ("tiles", "nnz")
+        spec = partition_spec(logical, rules, mesh)
+        if not check_divisibility(leaf.shape, spec, mesh):
+            return NamedSharding(mesh, partition_spec((), rules, mesh))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)

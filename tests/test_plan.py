@@ -83,10 +83,11 @@ def test_backend_override_and_bsr_forward(rng):
     for backend in ("pallas", "bsr"):
         got = np.asarray(execute(p, x, backend=backend, interpret=True))
         np.testing.assert_allclose(got, ref, atol=2e-3)
-    # forward-only backends refuse live value streams instead of silently
-    # ignoring them
-    with pytest.raises(ValueError, match="live value streams"):
-        execute(p, x, vals=csr.data, backend="bsr", interpret=True)
+    # the block-granule backend takes live value streams now (block-level
+    # custom VJP, DESIGN.md §3 rule 3): stream overrides the baked blocks
+    got2 = np.asarray(execute(p, x, vals=csr.data * 2, backend="bsr",
+                              interpret=True))
+    np.testing.assert_allclose(got2, 2 * ref, atol=4e-3)
 
 
 def test_execute_is_jittable(rng):

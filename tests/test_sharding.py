@@ -170,6 +170,37 @@ def test_constrain_divisibility_fallback():
         assert out.shape == (2, 24, 8)
 
 
+def test_sparse_weight_shardings():
+    """train.sparse_weight_shardings: v_* BalancedCOO value streams shard
+    tiles over the DP axis; dense leaves map to None; non-dividing tile
+    counts fall back to replicated."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.train import sparse_weight_shardings
+
+    n = jax.device_count()
+    mesh = make_local_mesh(n, 1)
+    params = {"blocks": {"v_gate": jnp.ones((4, n * 2, 16)),
+                         "v_up": jnp.ones((n * 2, 16)),
+                         "v_odd": jnp.ones((max(n + 1, 3), 16)) if n > 1
+                         else jnp.ones((3, 16)),
+                         "w_up": jnp.ones((8, 8))}}
+    sh = sparse_weight_shardings(params, mesh)
+    assert sh["blocks"]["w_up"] is None
+    assert sh["blocks"]["v_gate"].spec == P(None, "data", None)
+    assert sh["blocks"]["v_up"].spec == P("data", None)
+    if n > 1:  # n+1 tiles don't divide n → replicated fallback
+        assert sh["blocks"]["v_odd"].spec == P()
+    # the shardings place: device_put of the sparse leaves succeeds
+    leaf = jax.device_put(params["blocks"]["v_gate"], sh["blocks"]["v_gate"])
+    assert leaf.sharding == sh["blocks"]["v_gate"]
+
+
+def test_sparse_weight_rules_marker():
+    from repro.launch.sharding_rules import SPARSE_WEIGHT_RULES
+    assert SPARSE_WEIGHT_RULES["tiles"] == ("pod", "data")
+    assert SPARSE_WEIGHT_RULES["__sparse_shard_axis__"] == "data"
+
+
 def test_topk_rows_matches_lax():
     from repro.models.moe import _topk_rows
     rng = np.random.default_rng(0)
