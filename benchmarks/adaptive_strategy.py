@@ -9,9 +9,9 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (LOGICAL_KERNELS, SelectorThresholds, calibrate,
-                        execute, plan, rmat_suite, rmat_suite_small,
-                        select_kernel)
+from repro.api import SelectorThresholds, calibrate, sparse
+from repro.core import LOGICAL_KERNELS, rmat_suite, rmat_suite_small
+from repro.core.selector import select_kernel
 from .common import csv_row, geomean, time_fn
 
 NS = (1, 2, 4, 8, 32, 128)
@@ -20,24 +20,24 @@ NS = (1, 2, 4, 8, 32, 128)
 def run(full: bool = False, save_thresholds_to: str | None = None):
     suite = rmat_suite() if full else rmat_suite_small()
     rng = np.random.default_rng(0)
-    plans = {k: plan(v, tile=512) for k, v in suite.items()}
-    xs = {(m, n): jnp.asarray(rng.standard_normal((p.csr.shape[1], n)).astype(np.float32))
-          for m, p in plans.items() for n in NS}
+    mats = {k: sparse(v, tile=512) for k, v in suite.items()}
+    xs = {(name, n): jnp.asarray(rng.standard_normal((m.shape[1], n)).astype(np.float32))
+          for name, m in mats.items() for n in NS}
 
     times: dict = {}
-    for mname, p in plans.items():
+    for mname, m in mats.items():
         for n in NS:
             x = xs[(mname, n)]
             xv = x[:, 0] if n == 1 else x
             for kname in LOGICAL_KERNELS:
                 times[(mname, n, kname)] = time_fn(
-                    lambda kn=kname: execute(p, xv, impl=kn))
+                    lambda kn=kname: m.matmul(xv, impl=kn))
 
     def loss_of(select_fn):
         ratios = []
-        for mname, p in plans.items():
+        for mname, m in mats.items():
             for n in NS:
-                choice = select_fn(p, n)
+                choice = select_fn(m, n)
                 oracle = min(times[(mname, n, k)] for k in LOGICAL_KERNELS)
                 ratios.append(times[(mname, n, choice)] / oracle)
         return geomean(ratios) - 1.0
@@ -49,12 +49,12 @@ def run(full: bool = False, save_thresholds_to: str | None = None):
     rows.append(csv_row("adaptive/calibrated_thresholds", 0.0,
                         f"n={th.n_threshold}_avg={th.pr_avg_row}_cv={th.sr_cv}"))
 
-    rule_loss = loss_of(lambda p, n: select_kernel(p.stats, n, th))
-    paper_loss = loss_of(lambda p, n: select_kernel(p.stats, n, SelectorThresholds.PAPER_GPU))
+    rule_loss = loss_of(lambda m, n: select_kernel(m.stats, n, th))
+    paper_loss = loss_of(lambda m, n: select_kernel(m.stats, n, SelectorThresholds.PAPER_GPU))
     rows.append(csv_row("adaptive/rule_loss_vs_oracle", 0.0, f"{rule_loss:.3f}"))
     rows.append(csv_row("adaptive/paperGPU_rule_loss", 0.0, f"{paper_loss:.3f}"))
     for kname in LOGICAL_KERNELS:
-        single = loss_of(lambda p, n, k=kname: k)
+        single = loss_of(lambda m, n, k=kname: k)
         rows.append(csv_row(f"adaptive/single_{kname}_loss", 0.0, f"{single:.3f}"))
     return rows
 

@@ -14,7 +14,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import execute, plan, rmat_suite, rmat_suite_small
+from repro.api import sparse
+from repro.core import rmat_suite, rmat_suite_small
 from .common import csv_row, geomean, time_fn
 
 
@@ -23,10 +24,10 @@ def run(full: bool = False, n: int = 128):
     rng = np.random.default_rng(0)
     rows, speedups = [], []
     for name, csr in suite.items():
-        p = plan(csr, tile=512)
+        m = sparse(csr, tile=512)
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
-        t_csc = time_fn(lambda: execute(p, x, impl="rs_sr"))
-        t_seq = time_fn(lambda: execute(p, x, impl="nb_sr"))
+        t_csc = time_fn(lambda: m.matmul(x, impl="rs_sr"))
+        t_seq = time_fn(lambda: m.matmul(x, impl="nb_sr"))
         speedups.append(t_seq / t_csc)
         rows.append(csv_row(f"csc_ablation/{name}", t_csc * 1e6,
                             f"speedup={t_seq/t_csc:.2f}"))

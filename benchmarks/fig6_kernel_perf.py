@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import sparse as jsparse
 
-from repro.core import LOGICAL_KERNELS, execute, plan, rmat_suite, rmat_suite_small
+from repro.api import sparse
+from repro.core import LOGICAL_KERNELS, rmat_suite, rmat_suite_small
 from .common import csv_row, geomean, time_fn
 
 NS = (1, 2, 4, 8, 32, 128)
@@ -23,14 +24,14 @@ def run(full: bool = False):
     per_n_speedup = {n: [] for n in NS}
     per_n_speedup_dense = {n: [] for n in NS}
     for name, csr in suite.items():
-        p = plan(csr, tile=512)
+        m = sparse(csr, tile=512)
         bcoo = jsparse.BCOO.fromdense(np.asarray(csr.to_dense()))
         dense = jnp.asarray(csr.to_dense())
         for n in NS:
             x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
             xs = x[:, 0] if n == 1 else x
             ours = min(
-                time_fn(lambda kn=kn: execute(p, xs, impl=kn))
+                time_fn(lambda kn=kn: m.matmul(xs, impl=kn))
                 for kn in LOGICAL_KERNELS)
             t_bcoo = time_fn(lambda: bcoo @ xs)
             t_dense = time_fn(lambda: dense @ xs)

@@ -16,10 +16,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (adaptive_strategy, csc_ablation, fig6_kernel_perf,
-                   moe_dispatch, roofline, sharded_spmm, vdl_ablation,
-                   vsr_ablation)
+                   moe_dispatch, plan_cache, roofline, sharded_spmm,
+                   vdl_ablation, vsr_ablation)
 
     benches = {
+        "plan_cache": lambda: plan_cache.run(args.full),
         "vsr_ablation": lambda: vsr_ablation.run(args.full),
         "vdl_ablation": lambda: vdl_ablation.run(args.full),
         "vdl_ablation_pallas": lambda: vdl_ablation.run(args.full,

@@ -16,7 +16,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import execute, matrix_stats, plan, rmat, select_partition
+from repro.api import sparse
+from repro.core import matrix_stats, rmat
+from repro.core.selector import select_partition
 from repro.launch.mesh import make_local_mesh
 from .common import csv_row, time_fn
 
@@ -34,13 +36,12 @@ def run(full: bool = False, n: int = 8):
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
         stats = matrix_stats(csr)
         chosen = select_partition(stats)
-        p_one = plan(csr, n_hint=n)
-        t_one = time_fn(lambda: execute(p_one, x))
+        m_one = sparse(csr, n_hint=n)
+        t_one = time_fn(lambda: m_one @ x)
         times = {}
         for kind in ("row", "nnz"):
-            p_sh = plan(csr, backend="sharded", mesh=mesh, shard_kind=kind,
-                        n_hint=n)
-            times[kind] = time_fn(lambda: execute(p_sh, x))
+            m_sh = m_one.shard(mesh, kind=kind)
+            times[kind] = time_fn(lambda: m_sh @ x)
         name = f"sharded_spmm/rmat_s{scale}_e{ef}_{skew_name}"
         rows.append(csv_row(
             f"{name}/single", t_one * 1e6, f"cv={stats.cv:.2f}"))

@@ -14,8 +14,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (execute, plan, rmat_suite, rmat_suite_small,
-                        spmm_as_n_spmv)
+from repro.api import sparse
+from repro.core import rmat_suite, rmat_suite_small, spmm_as_n_spmv
 from .common import csv_row, geomean, time_fn
 
 
@@ -26,20 +26,20 @@ def run(full: bool = False, n: int = 2, backend: str = "xla"):
     for name, csr in suite.items():
         # force the named backend (a None default would pick pallas on TPU
         # and reintroduce the backend confound this split exists to remove)
-        p = plan(csr, tile=512, n_hint=n, backend=backend)
-        bal = p.substrate("balanced")
+        m = sparse(csr, tile=512, n_hint=n, backend=backend)
+        bal = m.plan.substrate("balanced")
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
         if backend == "pallas":
             from repro.kernels import spmm_as_n_spmv_pallas
             from repro.kernels.vsr import plan_windows
             base, win = plan_windows(bal)
             base = jnp.asarray(base)
-            t_vdl = time_fn(lambda: execute(p, x, impl="nb_pr",
-                                            backend="pallas"))
+            t_vdl = time_fn(lambda: m.matmul(x, impl="nb_pr",
+                                             backend="pallas"))
             t_nspmv = time_fn(lambda: spmm_as_n_spmv_pallas(
                 bal, x, row_base=base, win=win))
         else:
-            t_vdl = time_fn(lambda: execute(p, x, impl="nb_pr"))
+            t_vdl = time_fn(lambda: m.matmul(x, impl="nb_pr"))
             t_nspmv = time_fn(lambda: spmm_as_n_spmv(bal, x))
         speedups.append(t_nspmv / t_vdl)
         rows.append(csv_row(f"vdl_ablation[{backend}]/{name}", t_vdl * 1e6,

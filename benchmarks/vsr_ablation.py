@@ -7,7 +7,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import LOGICAL_KERNELS, execute, plan, rmat_suite_small, rmat_suite
+from repro.api import sparse
+from repro.core import LOGICAL_KERNELS, rmat_suite, rmat_suite_small
 from .common import csv_row, time_fn
 
 
@@ -18,14 +19,14 @@ def run(full: bool = False):
     win_stats = []
     rng = np.random.default_rng(0)
     for name, csr in suite.items():
-        p = plan(csr, tile=512)
+        m = sparse(csr, tile=512)
         x = jnp.asarray(rng.standard_normal(csr.shape[1]).astype(np.float32))
         times = {}
         for kname in LOGICAL_KERNELS:
-            times[kname] = time_fn(lambda kn=kname: execute(p, x, impl=kn))
+            times[kname] = time_fn(lambda kn=kname: m.matmul(x, impl=kn))
         best = min(times, key=times.get)
         wins[best] += 1
-        s = p.stats
+        s = m.stats
         win_stats.append((best, s.avg_row, s.cv))
         rows.append(csv_row(f"vsr_ablation/{name}/{best}",
                             times[best] * 1e6,

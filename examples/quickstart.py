@@ -2,18 +2,22 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a skewed R-MAT matrix, plans it once (stats + Fig. 4 selector; the
-kernel substrate is built lazily on first execute), runs all four kernels of
-the 2x2 design space through the one ``execute`` front door, and cross-checks
-the Pallas backend in interpret mode via the same door."""
+Builds a skewed R-MAT matrix, wraps it in a first-class sparse operand
+(``repro.sparse``: stats + Fig. 4 selector, plan cached by topology, kernel
+substrates built lazily on first use), runs all four kernels of the 2x2
+design space through ``A @ x`` / ``A.matmul``, cross-checks the Pallas
+backend in interpret mode via the same door, and freezes a jit-safe
+``PlanArtifact``."""
 import sys
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, "src")
 
-from repro.core import LOGICAL_KERNELS, execute, plan
+import repro
+from repro.core import LOGICAL_KERNELS
 
 
 def main():
@@ -21,35 +25,50 @@ def main():
     from repro.core import rmat
     csr = rmat(scale=10, edge_factor=16, seed=0)
 
-    # 2. offline plan: statistics + thresholds once; substrates built lazily,
-    #    only for the kernels that actually run (paper's offline/online split)
-    p = plan(csr, tile=512)
-    s = p.stats
-    print(f"matrix: {csr.shape}, nnz={csr.nnz}, avg_row={s.avg_row:.1f}, "
-          f"cv={s.cv:.2f} (skewed={s.skewed}); backend={p.backend}")
+    # 2. the first-class operand: statistics + thresholds once; the plan is
+    #    cached by sparsity topology and substrates build lazily, only for
+    #    the kernels that actually run (paper's offline/online split)
+    A = repro.sparse(csr, tile=512)
+    s = A.stats
+    print(f"matrix: {A.shape}, nnz={A.nnz}, avg_row={s.avg_row:.1f}, "
+          f"cv={s.cv:.2f} (skewed={s.skewed}); backend={A.backend}")
     rng = np.random.default_rng(0)
 
-    # 3. the 2x2 space, SpMV and SpMM, all through execute()
+    # 3. the 2x2 space, SpMV and SpMM, all through the one operand
     for n in (1, 4, 64):
-        x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((A.shape[1], n)).astype(np.float32))
         xv = x[:, 0] if n == 1 else x
-        picked = p.select(n)
-        outs = {k: np.asarray(execute(p, xv, impl=k)) for k in LOGICAL_KERNELS}
+        picked = A.plan.select(n)
+        outs = {k: np.asarray(A.matmul(xv, impl=k)) for k in LOGICAL_KERNELS}
         ref = outs["nb_pr"]
         agree = all(np.allclose(o, ref, atol=1e-3) for o in outs.values())
         print(f"N={n:3d}: rules pick {picked}; all four kernels agree: {agree} "
-              f"(substrates built so far: {p.built_substrates})")
+              f"(substrates built so far: {A.plan.built_substrates})")
 
     # 4. the Pallas TPU backend through the same front door (interpret mode
     #    on CPU = correctness harness) — just a different registry column
-    x = jnp.asarray(rng.standard_normal((csr.shape[1], 16)).astype(np.float32))
-    ref = np.asarray(execute(p, x, impl="nb_pr"))
+    x = jnp.asarray(rng.standard_normal((A.shape[1], 16)).astype(np.float32))
+    ref = np.asarray(A.matmul(x, impl="nb_pr"))
     for k in ("nb_pr", "rs_sr"):
-        y = np.asarray(execute(p, x, impl=k, backend="pallas", interpret=True))
+        y = np.asarray(A.matmul(x, impl=k, backend="pallas", interpret=True))
         print(f"pallas {k} maxerr: {np.abs(y - ref).max():.2e}")
-    y1 = np.asarray(execute(p, x[:, 0], impl="nb_pr", backend="pallas",
-                            interpret=True))
+    y1 = np.asarray(A.matmul(x[:, 0], impl="nb_pr", backend="pallas",
+                             interpret=True))
     print(f"pallas spmv maxerr: {np.abs(y1 - ref[:, 0]).max():.2e}")
+
+    # 5. value streams are live: same pattern + cached plan, new values —
+    #    differentiable, so trainable sparse weights ride the same dispatch
+    A2 = A.with_values(A.values * 2.0)
+    print(f"live values: ||2A@x - 2(A@x)|| = "
+          f"{np.abs(np.asarray(A2 @ x) - 2 * ref).max():.2e}")
+
+    # 6. freeze to a jit-safe pytree artifact: passes through jit/scan as an
+    #    argument, same compiled executable for equal-topology artifacts
+    art = A.finalize(n=16)
+    f = jax.jit(lambda a, xx: repro.api.execute(a, xx))
+    y = np.asarray(f(art, x))
+    print(f"PlanArtifact through jit maxerr: {np.abs(y - ref).max():.2e}")
+    print(f"plan cache: {repro.cache_stats()}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,9 @@
 """Serving example: batched requests against a small MoE model whose expert
 dispatch uses the paper's workload-balancing selection (sort-based row
-binning vs one-hot, chosen by tokens-per-expert).
+binning vs one-hot, chosen by tokens-per-expert), plus topology-pinned
+decoding: requests carrying a pinned expert topology decode through
+dispatch plans cached per topology (``engine.plan_cache``) — repeated
+routing patterns pay zero re-planning per tick.
 
     PYTHONPATH=src python examples/serve_moe.py
 """
@@ -36,6 +39,18 @@ def main():
     assert all(r.done for r in done)
     print(f"served {len(done)} requests in {engine.ticks} engine ticks "
           f"({len(prompts)} reqs on 3 slots → continuous batching)")
+
+    # --- topology-pinned decode: the offline-plan/online-execute split -----
+    engine2 = ServeEngine(model, params, slots=3, max_len=64)
+    for i, p in enumerate(prompts):
+        # pin each request to a (here: shared) expert pair; in production the
+        # topology comes from prefill routing or a per-tenant profile
+        engine2.submit(Request(rid=i, prompt=p, max_new=8, topology=(0, 3)))
+    done2 = engine2.run_until_done()
+    assert all(r.done for r in done2)
+    s = engine2.plan_cache.stats()
+    print(f"pinned decode: {engine2.ticks} ticks, dispatch plans built "
+          f"{s['builds']}x, reused {s['hits']}x (topology-keyed PlanCache)")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--density", type=float, default=0.15)
+    ap.add_argument("--sparse-backend", default=None,
+                    help="pin the sparse kernels' backend for the whole step "
+                         "(repro.api.use_backend scope; default: platform)")
+    ap.add_argument("--calibrate-to", default=None,
+                    help="background-calibrate selector thresholds to this "
+                         "JSON on first run (auto-loads via $REPRO_THRESHOLDS)")
     args = ap.parse_args()
 
     cfg = get("llama3.2-1b").scaled(
@@ -41,7 +47,8 @@ def main():
           f"(FFN density {args.density})")
 
     tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=20,
-                                     total_steps=args.steps))
+                                     total_steps=args.steps),
+                       sparse_backend=args.sparse_backend)
     data = SyntheticLM(DataConfig(seed=0, vocab_size=cfg.vocab_size,
                                   seq_len=args.seq, global_batch=args.batch))
     step = jax.jit(make_train_step(model.loss_fn, tcfg), donate_argnums=(0,))
@@ -49,7 +56,8 @@ def main():
 
     driver = TrainDriver(
         DriverConfig(total_steps=args.steps, checkpoint_every=50,
-                     checkpoint_dir="/tmp/repro_sparse_lm_ckpt"),
+                     checkpoint_dir="/tmp/repro_sparse_lm_ckpt",
+                     calibrate_to=args.calibrate_to),
         step, lambda i: {k: jnp.asarray(v) for k, v in data.batch(i).items()})
     driver.run(state)
     losses = [e.metrics["loss"] for e in driver.events]

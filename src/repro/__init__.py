@@ -1,0 +1,26 @@
+"""Adaptive sparse matrix kernels (workload-balancing + parallel-reduction)
+on JAX/Pallas, grown into a production-shaped serving/training stack.
+
+The supported public surface is the ``repro.api`` facade, re-exported here::
+
+    import repro
+
+    A = repro.sparse(dense_or_csr)     # first-class sparse operand
+    y = A @ x                          # adaptive, jit/grad-friendly SpMM
+
+Subpackages (``repro.core``, ``repro.models``, ``repro.serve``, ...) are the
+implementation; code outside this package should not import
+``repro.core.plan`` directly (CI enforces the boundary).
+"""
+from repro import api
+from repro.api import (PlanArtifact, PlanBuilder, PlanCache, SelectorThresholds,
+                       SparseMatrix, cache_stats, calibrate, calibrate_backend,
+                       clear_cache, pattern_matmul, sparse, use_backend,
+                       use_mesh)
+
+__all__ = [
+    "api", "sparse", "SparseMatrix", "pattern_matmul", "use_backend",
+    "use_mesh", "calibrate", "calibrate_backend", "cache_stats",
+    "clear_cache", "PlanArtifact", "PlanBuilder", "PlanCache",
+    "SelectorThresholds",
+]

@@ -1,0 +1,332 @@
+"""The public facade: first-class sparse operands over plan/execute.
+
+One front door for every consumer in the repo (models, serving, training,
+benchmarks, examples) and for external users::
+
+    from repro import api
+
+    A = api.sparse(dense_or_csr)          # plan once (cached by topology)
+    y = A @ x                             # adaptive SpMM, jit/grad friendly
+    y = A.with_values(stream) @ x         # live (trainable) value stream
+    y = A.shard(mesh) @ x                 # partition-aware shard_map backend
+    art = A.finalize(n=x.shape[1])        # frozen pytree PlanArtifact
+
+    with api.use_backend("pallas"):       # scoped defaults, no kwarg threading
+        y = api.sparse(dense) @ x
+
+Internals (``repro.core.plan``) stay importable for the library itself and
+its tests, but everything outside ``src/repro`` and ``tests`` must come
+through here — CI enforces the boundary (``tools/check_api_boundary.py``).
+
+Planning is cached in a topology-keyed bounded LRU (``PlanCache``): two
+``sparse()`` calls over matrices sharing a sparsity pattern share one plan
+(substrates, prep artifacts, compiled executables), and only the value
+stream differs per call.  That is the paper's offline-profile /
+online-dispatch split made ambient.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time as _time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import (DEFAULT_CACHE, PlanCache, cached_plan,
+                              pattern_fingerprint, plan_key)
+from repro.core.formats import CSR, csr_from_dense
+from repro.core.plan import (PlanArtifact, PlanBuilder, execute,
+                             execute_pattern, plan)
+from repro.core.registry import backend_scope, default_backend
+from repro.core.selector import (SelectorThresholds, load_thresholds,
+                                 save_thresholds)
+from repro.core.selector import calibrate as calibrate  # noqa: F401 (re-export)
+from repro.core.stats import MatrixStats
+
+__all__ = [
+    "SparseMatrix", "sparse", "pattern_matmul", "use_backend", "use_mesh",
+    "calibrate", "calibrate_backend", "cache_stats", "clear_cache",
+    "PlanArtifact", "PlanBuilder", "PlanCache", "SelectorThresholds",
+    "execute", "save_thresholds", "load_thresholds",
+]
+
+
+# ---------------------------------------------------------------------------
+# scoped defaults
+# ---------------------------------------------------------------------------
+
+#: the training/pattern entry of the facade: differentiable SpMM over a bare
+#: BalancedCOO-layout pattern with live values (no CSR, no plan object).
+pattern_matmul = execute_pattern
+
+use_backend = backend_scope
+
+_MESH = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, axis: str | None = None):
+    """Make ``mesh`` the default for ``sparse()`` in the dynamic extent —
+    matrices plan onto the sharded backend without threading ``mesh=``
+    through every call site.  ``axis`` optionally pins the shard axis."""
+    stack = getattr(_MESH, "stack", None)
+    if stack is None:
+        stack = _MESH.stack = []
+    stack.append((mesh, axis))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def scoped_mesh() -> tuple:
+    stack = getattr(_MESH, "stack", None)
+    return stack[-1] if stack else (None, None)
+
+
+# ---------------------------------------------------------------------------
+# the operand
+# ---------------------------------------------------------------------------
+
+class SparseMatrix:
+    """First-class sparse operand: a (possibly cache-shared) plan plus this
+    matrix's value stream.
+
+    The plan is keyed by *topology* — pattern, shape, backend, mesh,
+    thresholds — so matrices that differ only in values share substrates,
+    prep artifacts, and compiled executables; ``_values`` (when set) rides
+    ``execute(vals=...)`` as a live, differentiable stream.  Instances are
+    immutable: ``with_values`` / ``with_thresholds`` / ``shard`` return new
+    handles."""
+
+    def __init__(self, plan_obj: PlanBuilder,
+                 values: jax.Array | None = None,
+                 cache: PlanCache | None = None):
+        self._plan = plan_obj
+        self._values = values
+        self._cache = cache
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def plan(self) -> PlanBuilder:
+        return self._plan
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self._plan.csr.shape)
+
+    @property
+    def nnz(self) -> int:
+        return self._plan.csr.nnz
+
+    @property
+    def stats(self) -> MatrixStats:
+        return self._plan.stats
+
+    @property
+    def backend(self) -> str:
+        return self._plan.backend
+
+    @property
+    def values(self) -> jax.Array:
+        """The effective CSR-ordered nonzero value stream."""
+        return self._values if self._values is not None else self._plan.csr.data
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def topology_key(self) -> str:
+        return self._plan.topology_key()
+
+    def __repr__(self) -> str:
+        m, k = self.shape
+        live = "live" if self._values is not None else "baked"
+        return (f"SparseMatrix({m}x{k}, nnz={self.nnz}, "
+                f"backend={self.backend!r}, values={live})")
+
+    # -- execution ----------------------------------------------------------
+    def matmul(self, x: jax.Array, *, impl: str | None = None,
+               backend: str | None = None,
+               interpret: bool | None = None) -> jax.Array:
+        """``A @ x`` with per-call overrides (oracle/ablation mode)."""
+        return execute(self._plan, x, vals=self._values, impl=impl,
+                       backend=backend, interpret=interpret)
+
+    def __matmul__(self, x: jax.Array) -> jax.Array:
+        return self.matmul(x)
+
+    # -- derived operands ---------------------------------------------------
+    def with_values(self, stream: jax.Array) -> "SparseMatrix":
+        """Same pattern and plan, new CSR-ordered nonzero values.  The stream
+        is a live tensor — differentiate through ``(A.with_values(v) @ x)``
+        w.r.t. ``v`` and it flows like any other parameter."""
+        stream = jnp.asarray(stream)
+        if stream.size != self.nnz:
+            raise ValueError(f"value stream has {stream.size} entries but "
+                             f"the pattern has {self.nnz} nonzeros")
+        return SparseMatrix(self._plan, values=stream.reshape(-1),
+                            cache=self._cache)
+
+    def with_thresholds(self, th: SelectorThresholds) -> "SparseMatrix":
+        return SparseMatrix(self._plan.with_thresholds(th),
+                            values=self._values, cache=self._cache)
+
+    def shard(self, mesh=None, *, axis: str | None = None,
+              kind: str | None = None,
+              inner_backend: str | None = None) -> "SparseMatrix":
+        """Re-plan this operand onto the partition-aware sharded backend
+        (``core/shard.py``): the stats-driven partitioner picks row-split or
+        nnz-balanced per the CV rule.  ``mesh`` defaults to the ``use_mesh``
+        scope."""
+        if mesh is None:
+            mesh, scoped_axis = scoped_mesh()
+            axis = axis or scoped_axis
+        if mesh is None:
+            raise ValueError("shard() needs a mesh (argument or use_mesh scope)")
+        p = _plan_maybe_cached(self._plan.csr, cache=self._cache,
+                               backend="sharded", mesh=mesh,
+                               thresholds=self._plan.thresholds,
+                               tile=self._plan.tile,
+                               bsr_block=self._plan.bsr_block,
+                               shard_axis=axis, shard_kind=kind,
+                               inner_backend=inner_backend)
+        return SparseMatrix(p, values=self._values, cache=self._cache)
+
+    def finalize(self, n: int | None = None, *, impl: str | None = None,
+                 kernels: tuple | None = None) -> PlanArtifact:
+        """Freeze into a jit-safe pytree ``PlanArtifact``.
+
+        The artifact bakes *this handle's* values: a live stream (cache-hit
+        handle, ``with_values``) re-plans off the shared builder first, so
+        ``execute(art, x)`` is value-correct without the caller streaming
+        ``vals=`` — freezing is eager by contract, the rebuild is the cost
+        of the bake."""
+        p = self._plan
+        if self._values is not None:
+            csr = CSR(p.csr.indptr, p.csr.indices,
+                      jnp.asarray(self._values).reshape(-1), p.csr.shape)
+            spec = p.shard_spec
+            p = plan(csr, thresholds=p.thresholds, backend=p.backend,
+                     tile=p.tile, bsr_block=p.bsr_block, mesh=p.mesh,
+                     shard_axis=spec.axis if spec is not None else None,
+                     shard_kind=spec.kind if spec is not None else None,
+                     inner_backend=p.inner_backend)
+        return p.finalize(n, impl=impl, kernels=kernels)
+
+
+def _as_csr(a) -> tuple[CSR, "jax.Array | None"]:
+    """Normalize sparse() input to (csr, live value stream or None) — a
+    SparseMatrix input keeps its live values across the re-plan."""
+    if isinstance(a, CSR):
+        return a, None
+    if isinstance(a, SparseMatrix):
+        return a.plan.csr, a._values
+    arr = np.asarray(a)
+    if arr.ndim != 2:
+        raise ValueError(f"sparse() takes a CSR or a dense 2-D array; "
+                         f"got shape {arr.shape}")
+    return csr_from_dense(arr), None
+
+
+def _plan_maybe_cached(csr: CSR, *, cache: PlanCache | None, **kw) -> PlanBuilder:
+    if cache is None:
+        return plan(csr, **kw)
+    return cached_plan(csr, cache=cache, **kw)
+
+
+def sparse(a, *, backend: str | None = None, mesh=None,
+           thresholds: SelectorThresholds | None = None, tile: int = 512,
+           bsr_block: tuple = (8, 128), n_hint: int | None = None,
+           shard_axis: str | None = None, shard_kind: str | None = None,
+           cache: "PlanCache | bool | None" = True) -> SparseMatrix:
+    """Build a first-class sparse operand from a CSR or a dense 2-D array.
+
+    Planning goes through the topology-keyed ``PlanCache`` (the process
+    default for ``cache=True``, a specific instance, or ``cache=False`` to
+    re-plan): a hit whose baked values differ from ``a``'s returns a handle
+    that streams its own values at execute time, so reuse is always
+    value-correct.  ``backend``/``mesh`` default to the ``use_backend`` /
+    ``use_mesh`` scopes, then the platform default."""
+    csr, values = _as_csr(a)
+    if mesh is None:
+        mesh, scoped_axis = scoped_mesh()
+        shard_axis = shard_axis or scoped_axis
+    resolved_backend = backend or ("sharded" if mesh is not None
+                                   else default_backend())
+    cache_obj: PlanCache | None
+    if cache is True:
+        cache_obj = DEFAULT_CACHE
+    elif cache is False:
+        cache_obj = None
+    else:
+        cache_obj = cache
+    p = _plan_maybe_cached(csr, cache=cache_obj, backend=resolved_backend,
+                           mesh=mesh, thresholds=thresholds, tile=tile,
+                           bsr_block=tuple(bsr_block), shard_axis=shard_axis,
+                           shard_kind=shard_kind)
+    if values is None and p.csr is not csr:
+        # cache hit from a pattern-equal matrix: keep OUR values live unless
+        # they are bit-identical to the plan's baked stream
+        with jax.ensure_compile_time_eval():
+            same = np.array_equal(np.asarray(p.csr.data), np.asarray(csr.data))
+        if not same:
+            values = csr.data.reshape(-1)
+    if n_hint is not None:
+        entry = p.entry(p.select(n_hint))
+        p.substrate(entry.substrate)
+        p.kernel_opts(entry)
+    return SparseMatrix(p, values=values, cache=cache_obj)
+
+
+# ---------------------------------------------------------------------------
+# cache observability
+# ---------------------------------------------------------------------------
+
+def cache_stats(cache: PlanCache | None = None) -> dict:
+    return (cache or DEFAULT_CACHE).stats()
+
+
+def clear_cache(cache: PlanCache | None = None) -> None:
+    (cache or DEFAULT_CACHE).clear()
+
+
+# ---------------------------------------------------------------------------
+# calibration against this backend (the calibrate-on-first-serve hook)
+# ---------------------------------------------------------------------------
+
+def calibrate_backend(save_to: str | None = None, *,
+                      matrices: dict | None = None,
+                      ns: tuple = (1, 8), repeats: int = 2,
+                      backend: str | None = None,
+                      n_grid: tuple = (2, 4, 8, 1 << 30),
+                      avg_grid: tuple = (8.0, 16.0, 32.0, 64.0),
+                      cv_grid: tuple = (0.25, 0.5, 1.0, 2.0)):
+    """Measure the 2x2 kernel grid on *this* backend and grid-search selector
+    thresholds (paper §2.2/§3.2), optionally persisting the winner where
+    ``$REPRO_THRESHOLDS`` will auto-load it.  The runtime driver runs this as
+    its background calibrate-on-first-serve job; defaults use two small R-MAT
+    matrices (one uniform, one skewed) so the pass costs seconds."""
+    from repro.core.rmat import rmat
+    from repro.core.selector import calibrate as grid_search
+
+    if matrices is None:
+        matrices = {"uniform": rmat(8, 8, a=0.25, b=0.25, c=0.25, seed=0),
+                    "skewed": rmat(8, 8, seed=1)}
+
+    def time_fn(kernel: str, p: PlanBuilder, n: int) -> float:
+        x = jnp.ones((p.csr.shape[1], n) if n > 1 else (p.csr.shape[1],),
+                     jnp.float32)
+        with backend_scope(backend):
+            f = jax.jit(lambda xx: execute(p, xx, impl=kernel,
+                                           backend=backend))
+            jax.block_until_ready(f(x))  # compile outside the timed region
+            t0 = _time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(f(x))
+        return (_time.perf_counter() - t0) / repeats
+
+    return grid_search(matrices, ns, time_fn=time_fn, n_grid=n_grid,
+                       avg_grid=avg_grid, cv_grid=cv_grid, save_to=save_to)

@@ -1,11 +1,16 @@
 """Core sparse library: formats, statistics, the 2x2 kernel space, and the
-plan/execute dispatch subsystem (registry + lazy substrates + unified VJP)."""
+plan/execute dispatch subsystem (registry + builder/artifact plans + unified
+VJP + topology-keyed plan cache).  The public surface is ``repro.api``."""
+from .cache import (DEFAULT_CACHE, PlanCache, cached_plan, mesh_signature,
+                    pattern_fingerprint, plan_key)
 from .formats import (BSR, CSR, ELL, BalancedCOO, bsr_to_dense, csr_from_coo,
                       csr_from_dense, csr_to_balanced, csr_to_bsr, csr_to_ell,
                       reset_build_counts, row_ids_from_indptr)
-from .plan import SparsePlan, execute, execute_pattern, plan
-from .registry import (LOGICAL_KERNELS, KernelEntry, available, backends_for,
-                       default_backend, register, resolve)
+from .plan import (PlanArtifact, PlanBuilder, PlanMeta, SparsePlan, execute,
+                   execute_pattern, plan)
+from .registry import (LOGICAL_KERNELS, KernelEntry, available, backend_scope,
+                       backends_for, default_backend, register, resolve,
+                       scoped_backend)
 from .rmat import rmat, rmat_suite, rmat_suite_small
 from .selector import (PreparedMatrix, SelectorThresholds, adaptive_spmm,
                        calibrate, default_thresholds, load_thresholds,

@@ -2,38 +2,41 @@
 
 The paper's usage mode is offline-profile / online-dispatch; Dai et al.
 (PAPERS.md) name the same split "offline plan, online execute".  This module
-makes that split the architecture:
+makes that split the architecture, in two layers (DESIGN.md §5):
 
-* ``plan(csr, ...)`` is the **offline** step: compute the Fig. 4 statistics
-  once, fix the thresholds (auto-loading a persisted calibration from
-  ``$REPRO_THRESHOLDS``), pick the backend, and hand back a ``SparsePlan``.
-  Substrates (ELL / BalancedCOO / BSR) are built **lazily** — only the format
-  the selected kernel consumes is ever constructed, and it is cached on first
-  touch.  (The old ``PreparedMatrix`` built both eagerly, doubling prep
-  memory; ``tests/test_plan.py`` pins the new behaviour by counting format
-  constructions.)
+* ``PlanBuilder`` (returned by ``plan(csr, ...)``) is the **host side**:
+  compute the Fig. 4 statistics once, fix the thresholds (auto-loading a
+  persisted calibration from ``$REPRO_THRESHOLDS``), pick the backend, build
+  substrates (ELL / BalancedCOO / BSR / sharded stacks) **lazily** and run
+  registry ``prep`` hooks on concrete arrays.  Builders are mutable caches
+  and are *not* pytrees — they are closed over by jitted code, never traced.
 
-* ``execute(plan, x)`` is the **online** step: select the logical kernel from
-  (stats, N), resolve the physical implementation through the backend-aware
-  registry, and run it through a custom VJP that covers all four logical
-  kernels — so ``jax.grad`` works through every kernel, not just ``nb_pr``.
-  ``execute`` is jit-able (close over the plan: ``jax.jit(lambda x:
-  execute(p, x))``); all host-side work happens at plan/trace time.
+* ``PlanArtifact`` (from ``PlanBuilder.finalize(...)``) is the **frozen,
+  jit-safe artifact**: a registered pytree whose leaves are the device
+  arrays (substrates, gather/scatter maps, shard stacks) and whose static
+  aux (``PlanMeta``) carries stats, thresholds, backend, ShardSpec, and the
+  pattern-topology fingerprint.  Artifacts pass through ``jit``, ``scan``
+  carries, donation, and ``shard_map``; two artifacts over the same sparsity
+  topology produce equal treedefs, so they hit the same compiled executable.
+
+* ``execute(plan_or_artifact, x)`` is the **online** step: select the
+  logical kernel from (stats, N), resolve the physical implementation
+  through the backend-aware registry, and run it through a custom VJP
+  (``core/vjp.py``) covering all four logical kernels.
 
 * ``execute_pattern(rows, cols, vals, shape, x)`` is the training entry:
   sparse-weight layers own a static pattern and a live value stream, with no
   CSR in sight — same registry, same VJP.
 
-Gradient math is kernel-independent (the VJP of Y = A·X is dA = G·Xᵀ restricted
-to the pattern, dX = Aᵀ·G), so one backward pair per substrate family serves
-every backend; the forward primal is whatever physical kernel the registry
-resolved.  See DESIGN.md §3.
+The supported front door for library consumers is ``repro.api`` (the
+``sparse()`` facade + ``PlanCache``); this module is the engine room.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import hashlib
+from collections import OrderedDict
 from typing import Any
 
 import jax
@@ -45,18 +48,180 @@ from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
                       csr_to_ell, row_ids_from_indptr)
 from .selector import SelectorThresholds, default_thresholds, select_kernel
 from .stats import MatrixStats, matrix_stats
+from .vjp import (_exec_balanced, _exec_bsr, _exec_ell,  # noqa: F401 (re-export)
+                  _stream_to_balanced)
 
 
 # ---------------------------------------------------------------------------
-# the plan object
+# bound-kernel plumbing: identity-stable callables for the custom-VJP statics
+# ---------------------------------------------------------------------------
+
+#: content-addressed store of host-side prep artifacts.  ``PlanArtifact``
+#: references prep opts by digest (a hashable static) instead of carrying the
+#: bound callable, so two artifacts built from equal-topology matrices
+#: resolve to the *same* partial object — which is what keeps their custom-VJP
+#: statics equal and their jitted executes on one compiled executable.
+#:
+#: Both stores are LRU-bounded so topology churn (e.g. long-running MoE
+#: serving planning fresh dispatch patterns) cannot grow process memory
+#: without bound.  Eviction is safe for kernels already bound (the partial
+#: captured its opts); an artifact whose digest was evicted *and* never
+#: bound for the requested interpret mode raises the re-finalize error in
+#: ``_bound_kernel`` — hot topologies re-touch their entries and stay in.
+_STORE_CAP = 4096
+_OPTS_STORE: "OrderedDict[str, dict]" = OrderedDict()
+_BIND_CACHE: "OrderedDict" = OrderedDict()
+
+
+def _lru_touch(store: OrderedDict, key, value=None):
+    if key in store:
+        store.move_to_end(key)
+        return store[key]
+    if value is not None:
+        store[key] = value
+        while len(store) > _STORE_CAP:
+            store.popitem(last=False)
+    return value
+
+
+def _digest_value(h, v) -> None:
+    """Fold one prep-opt value into the hash; opts may nest tuples of arrays
+    and scalars (the BSR block-ELL bundle does)."""
+    if isinstance(v, (bool, int, float, str, bytes, type(None))):
+        h.update(repr(v).encode())
+    elif isinstance(v, (tuple, list)):
+        h.update(b"(")
+        for item in v:
+            _digest_value(h, item)
+        h.update(b")")
+    elif isinstance(v, dict):
+        h.update(b"{")
+        for k in sorted(v):
+            h.update(str(k).encode())
+            _digest_value(h, v[k])
+        h.update(b"}")
+    else:
+        arr = np.asarray(v)
+        h.update(str(arr.dtype).encode() + repr(arr.shape).encode())
+        h.update(arr.tobytes())
+
+
+def _opts_digest(opts: dict) -> str:
+    h = hashlib.sha1()
+    for k in sorted(opts):
+        h.update(k.encode())
+        _digest_value(h, opts[k])
+    return h.hexdigest()
+
+
+def _register_opts(opts: dict) -> str:
+    digest = _opts_digest(opts)
+    if digest not in _OPTS_STORE:
+        _lru_touch(_OPTS_STORE, digest, dict(opts))
+    else:
+        _OPTS_STORE.move_to_end(digest)
+    return digest
+
+
+def _bound_kernel(entry: registry.KernelEntry, interpret, digest: str | None):
+    """Identity-cached ``partial(entry.fn, interpret=..., **opts)``."""
+    key = (entry, interpret, digest)
+    fn = _lru_touch(_BIND_CACHE, key)
+    if fn is None:
+        opts = {} if digest is None else _lru_touch(_OPTS_STORE, digest)
+        if opts is None:
+            raise KeyError(
+                f"prep artifacts for digest {digest!r} are not in this "
+                "process's opts store; re-finalize the plan to restore them")
+        fn = functools.partial(entry.fn, interpret=interpret, **opts)
+        _lru_touch(_BIND_CACHE, key, fn)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# the frozen artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanMeta:
+    """Hashable static half of a ``PlanArtifact`` (the pytree aux data).
+
+    Everything jit needs to key a compiled executable on: equal metas (plus
+    equal leaf avals) ⇒ equal treedefs ⇒ one trace.  ``topology`` is the
+    pattern fingerprint — matrices sharing a sparsity pattern share it, and
+    since ``MatrixStats`` reads only the pattern, their whole metas match."""
+
+    shape: tuple
+    nnz: int
+    backend: str
+    stats: MatrixStats
+    thresholds: SelectorThresholds
+    tile: int
+    bsr_block: tuple
+    topology: str
+    prep: tuple = ()                 # ((logical, opts digest), ...)
+    shard_spec: Any = None
+    mesh: Any = None
+    inner_backend: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanArtifact:
+    """Immutable, jit-safe plan: device arrays as pytree leaves, ``PlanMeta``
+    as static aux.  Round-trips ``jax.tree_util.tree_flatten``, rides ``jit``
+    arguments, ``scan`` carries, and donation; ``execute(artifact, x)`` does
+    zero host-side work."""
+
+    substrates: dict[str, Any]       # substrate kind -> format pytree
+    aux: dict[str, Any]              # gather/scatter maps (lens/src/bsr maps)
+    meta: PlanMeta
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def shape(self) -> tuple:
+        return self.meta.shape
+
+    @property
+    def backend(self) -> str:
+        return self.meta.backend
+
+    @property
+    def stats(self) -> MatrixStats:
+        return self.meta.stats
+
+    @property
+    def thresholds(self) -> SelectorThresholds:
+        return self.meta.thresholds
+
+    @property
+    def topology(self) -> str:
+        return self.meta.topology
+
+    def select(self, n: int) -> str:
+        return select_kernel(self.meta.stats, n, self.meta.thresholds)
+
+    def __matmul__(self, x):
+        return execute(self, x)
+
+
+jax.tree_util.register_dataclass(PlanArtifact,
+                                 data_fields=["substrates", "aux"],
+                                 meta_fields=["meta"])
+
+
+# ---------------------------------------------------------------------------
+# the host-side builder
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
-class SparsePlan:
-    """Offline artifact: statistics + thresholds + lazily-built substrates.
+class PlanBuilder:
+    """Host-side half of the offline/online split: statistics + thresholds +
+    lazily-built substrates + prep-hook caches.
 
-    Not a pytree — plans live on the host side of the offline/online split and
-    are closed over (not traced) by jitted execute calls."""
+    Not a pytree — builders live on the host side and are closed over (not
+    traced) by jitted execute calls.  ``finalize`` packs the built state into
+    a frozen ``PlanArtifact`` for code that must carry the plan *through*
+    transformations."""
 
     csr: CSR
     stats: MatrixStats
@@ -76,6 +241,7 @@ class SparsePlan:
     _ell_src: Any = dataclasses.field(default=None, repr=False)
     _bsr_map: Any = dataclasses.field(default=None, repr=False)
     _bsr_brow: Any = dataclasses.field(default=None, repr=False)
+    _topology: str | None = dataclasses.field(default=None, repr=False)
 
     # -- substrates ---------------------------------------------------------
     def substrate(self, kind: str):
@@ -116,11 +282,25 @@ class SparsePlan:
     def select(self, n: int) -> str:
         return select_kernel(self.stats, n, self.thresholds)
 
-    def with_thresholds(self, th: SelectorThresholds) -> "SparsePlan":
+    def with_thresholds(self, th: SelectorThresholds) -> "PlanBuilder":
         """Same matrix and caches, different decision thresholds."""
         if th == self.thresholds:
             return self
         return dataclasses.replace(self, thresholds=th, _bound={})
+
+    # -- topology -----------------------------------------------------------
+    def topology_key(self) -> str:
+        """Pattern fingerprint (``core/cache.py``'s, the one definition of
+        "sparsity topology") folded with this plan's layout knobs, values
+        excluded.  The artifact's ``meta.topology``."""
+        if self._topology is None:
+            from .cache import pattern_fingerprint
+            with jax.ensure_compile_time_eval():
+                fp = pattern_fingerprint(self.csr)
+            self._topology = hashlib.sha1(
+                (fp + repr((self.tile, tuple(self.bsr_block)))).encode()
+            ).hexdigest()
+        return self._topology
 
     # -- resolution ---------------------------------------------------------
     def entry(self, name: str, backend: str | None = None) -> registry.KernelEntry:
@@ -206,21 +386,69 @@ class SparsePlan:
                     np.asarray(bsr.indptr), bsr.nblocks))
         return self._bsr_brow
 
+    # -- freezing -----------------------------------------------------------
+    def finalize(self, n: int | None = None, *, impl: str | None = None,
+                 kernels: tuple | None = None) -> PlanArtifact:
+        """Pack the plan into a frozen ``PlanArtifact``.
+
+        The artifact carries the substrates (and gather/scatter aux maps) for
+        the logical kernels named by ``kernels``, or for the single kernel
+        the selector picks at ``n`` (/ forced by ``impl``).  With none of the
+        three, the artifact covers the whole 2x2 space — eager by design:
+        freezing *is* the end of the lazy phase.  Host prep runs here, never
+        at execute time."""
+        if kernels is None:
+            if impl is not None:
+                kernels = (impl,)
+            elif n is not None:
+                kernels = (self.select(n),)
+            else:
+                kernels = registry.LOGICAL_KERNELS
+        subs: dict[str, Any] = {}
+        aux: dict[str, Any] = {}
+        prep: list = []
+        for name in kernels:
+            entry = self.entry(name)
+            subs[entry.substrate] = self.substrate(entry.substrate)
+            opts = self.kernel_opts(entry)
+            if opts:
+                prep.append((entry.logical, _register_opts(opts)))
+            if entry.substrate == "ell":
+                aux["ell_lens"] = self.ell_lens()
+                aux["ell_src"] = self.ell_src()
+            elif entry.substrate == "bsr":
+                aux["bsr_map"] = self.bsr_map()
+                aux["bsr_brow"] = self.bsr_brow()
+        meta = PlanMeta(
+            shape=tuple(self.csr.shape), nnz=self.csr.nnz,
+            backend=self.backend, stats=self.stats,
+            thresholds=self.thresholds, tile=self.tile,
+            bsr_block=tuple(self.bsr_block), topology=self.topology_key(),
+            prep=tuple(sorted(prep)), shard_spec=self.shard_spec,
+            mesh=self.mesh, inner_backend=self.inner_backend)
+        return PlanArtifact(substrates=subs, aux=aux, meta=meta)
+
+
+#: PR-1 name for the builder; kept as an alias so existing call sites and
+#: type checks keep working (the class was renamed, not changed).
+SparsePlan = PlanBuilder
+
 
 def plan(csr: CSR, *, n_hint: int | None = None,
          thresholds: SelectorThresholds | None = None,
          backend: str | None = None, tile: int = 512,
          bsr_block: tuple = (8, 128), mesh: Any = None,
          shard_axis: str | None = None, shard_kind: str | None = None,
-         inner_backend: str | None = None) -> SparsePlan:
+         inner_backend: str | None = None) -> PlanBuilder:
     """Offline planning front door.
 
     ``n_hint``: anticipated N of the dense operand; when given, the substrate
     for the kernel the selector will pick is built eagerly (prep off the hot
     path), everything else stays lazy.  ``thresholds=None`` auto-loads a
     persisted calibration (``$REPRO_THRESHOLDS``) or falls back to defaults;
-    ``backend=None`` picks the platform default (Pallas on TPU, XLA
-    elsewhere) — or ``"sharded"`` when a ``mesh`` is given.
+    ``backend=None`` picks the scoped override (``repro.api.use_backend``)
+    or the platform default (Pallas on TPU, XLA elsewhere) — or ``"sharded"``
+    when a ``mesh`` is given.
 
     Sharded backend: ``mesh`` (required) names the device mesh; the
     partitioner is chosen from the matrix stats (``cv`` vs.
@@ -228,8 +456,8 @@ def plan(csr: CSR, *, n_hint: int | None = None,
     ``shard_kind`` forces one; ``shard_axis`` defaults to the largest mesh
     axis and ``inner_backend`` to the platform default single-device
     backend whose kernels run per shard."""
-    if mesh is not None and backend is None:
-        backend = "sharded"
+    if backend is None:
+        backend = "sharded" if mesh is not None else registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
     stats = matrix_stats(csr)
     spec = None
@@ -240,11 +468,11 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         from . import shard as shard_mod
         spec = shard_mod.make_shard_spec(stats, mesh, axis=shard_axis,
                                          kind=shard_kind, thresholds=th)
-    p = SparsePlan(
+    p = PlanBuilder(
         csr=csr,
         stats=stats,
         thresholds=th,
-        backend=backend or registry.default_backend(),
+        backend=backend,
         tile=tile,
         bsr_block=tuple(bsr_block),
         mesh=mesh,
@@ -259,150 +487,14 @@ def plan(csr: CSR, *, n_hint: int | None = None,
 
 
 # ---------------------------------------------------------------------------
-# the unified custom VJPs — one backward pair per substrate family
-# ---------------------------------------------------------------------------
-
-def _as_2d(a):
-    return (a[:, None], True) if a.ndim == 1 else (a, False)
-
-
-def _coo_bwd(rows, cols, valid, vals, x, g, shape):
-    """Shared cotangent math for any COO-viewable substrate:
-    dvals[e] = <g[row_e,:], x[col_e,:]> (masked), dx = Aᵀ·g."""
-    m, k = shape
-    x2, _ = _as_2d(x)
-    g2, _ = _as_2d(g)
-    g_rows = jnp.take(g2, jnp.minimum(rows, m - 1), axis=0)
-    g_rows = jnp.where(valid[:, None], g_rows, 0)
-    x_cols = jnp.take(x2, cols, axis=0)
-    dvals = jnp.sum(g_rows.astype(jnp.float32) * x_cols.astype(jnp.float32), axis=-1)
-    p = vals.astype(jnp.float32)[:, None] * g_rows.astype(jnp.float32)
-    dx = jax.ops.segment_sum(p, cols, num_segments=k)
-    dx = dx.reshape(x.shape).astype(x.dtype)
-    return dvals, dx
-
-
-def _float0(a):
-    # integer pattern args get symbolic-zero (float0) cotangents
-    return np.zeros(a.shape, jax.dtypes.float0)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _exec_balanced(static, rows, cols, vals, x, *extra):
-    """``extra``: integer per-matrix prep artifacts forwarded positionally to
-    the bound kernel (float0 cotangents) — the sharded backend threads
-    per-shard prep (VSR row windows) through here, since inside shard_map
-    those are traced values and must not be baked into the static."""
-    bound_fn, shape = static
-    bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), tuple(shape))
-    return bound_fn(bal, x, *extra)
-
-
-def _exec_balanced_fwd(static, rows, cols, vals, x, *extra):
-    return _exec_balanced(static, rows, cols, vals, x, *extra), (rows, cols, vals, x, extra)
-
-
-def _exec_balanced_bwd(static, res, g):
-    _, shape = static
-    rows, cols, vals, x, extra = res
-    r, c, v = rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
-    dvals, dx = _coo_bwd(r, c, r < shape[0], v, x, g, shape)
-    return (_float0(rows), _float0(cols),
-            dvals.reshape(vals.shape).astype(vals.dtype), dx,
-            *(_float0(e) for e in extra))
-
-
-_exec_balanced.defvjp(_exec_balanced_fwd, _exec_balanced_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _exec_ell(static, cols, lens, vals, x):
-    bound_fn, shape = static
-    return bound_fn(ELL(cols, vals, tuple(shape)), x)
-
-
-def _exec_ell_fwd(static, cols, lens, vals, x):
-    return _exec_ell(static, cols, lens, vals, x), (cols, lens, vals, x)
-
-
-def _exec_ell_bwd(static, res, g):
-    _, shape = static
-    cols, lens, vals, x = res
-    m, w = cols.shape
-    g2, _ = _as_2d(g)
-    rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), w)
-    valid = (jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]).reshape(-1)
-    dvals, dx = _coo_bwd(rows, cols.reshape(-1), valid, vals.reshape(-1),
-                         x, g2, shape)
-    return (_float0(cols), _float0(lens),
-            dvals.reshape(vals.shape).astype(vals.dtype), dx)
-
-
-_exec_ell.defvjp(_exec_ell_fwd, _exec_ell_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _exec_bsr(static, indptr, bcol, brow, blocks, x):
-    """Block-granule family (DESIGN.md §3 rule 3): forward is the physical
-    BSR kernel; backward is block-level — dA restricted to the *materialized
-    blocks* (a superset of the CSR pattern; the stream gather in ``execute``
-    masks it back down) and dX as a block-transpose segment reduction."""
-    bound_fn, shape, block_shape = static
-    return bound_fn(BSR(indptr, bcol, blocks, tuple(shape),
-                        tuple(block_shape)), x)
-
-
-def _exec_bsr_fwd(static, indptr, bcol, brow, blocks, x):
-    return (_exec_bsr(static, indptr, bcol, brow, blocks, x),
-            (indptr, bcol, brow, blocks, x))
-
-
-def _exec_bsr_bwd(static, res, g):
-    _, (m, k), (bm, bk) = static
-    indptr, bcol, brow, blocks, x = res
-    mb, kb = -(-m // bm), -(-k // bk)
-    g2, _ = _as_2d(g)
-    x2, _ = _as_2d(x)
-    g3 = jnp.pad(g2.astype(jnp.float32),
-                 ((0, mb * bm - m), (0, 0))).reshape(mb, bm, -1)
-    x3 = jnp.pad(x2.astype(jnp.float32),
-                 ((0, kb * bk - k), (0, 0))).reshape(kb, bk, -1)
-    gb = jnp.take(g3, brow, axis=0)                     # (nb, bm, N)
-    xb = jnp.take(x3, bcol, axis=0)                     # (nb, bk, N)
-    dblocks = jnp.einsum("bmn,bkn->bmk", gb, xb).astype(blocks.dtype)
-    p = jnp.einsum("bmk,bmn->bkn", blocks.astype(jnp.float32), gb)
-    dx = jax.ops.segment_sum(p, bcol, num_segments=kb)
-    dx = dx.reshape(kb * bk, -1)[:k].reshape(x.shape).astype(x.dtype)
-    return (_float0(indptr), _float0(bcol), _float0(brow), dblocks, dx)
-
-
-_exec_bsr.defvjp(_exec_bsr_fwd, _exec_bsr_bwd)
-
-
-# ---------------------------------------------------------------------------
 # online front doors
 # ---------------------------------------------------------------------------
 
-def execute(p: SparsePlan, x: jax.Array, *, vals: jax.Array | None = None,
-            impl: str | None = None, backend: str | None = None,
-            interpret: bool | None = None) -> jax.Array:
-    """Run the planned SpMV/SpMM: ``y = A @ x``.
-
-    Differentiable w.r.t. ``x`` and (when given) ``vals`` — a live CSR-ordered
-    nonzero stream overriding the values baked into the plan's substrates,
-    which is how trainable sparse weights ride the adaptive dispatch.  ``impl``
-    forces a logical kernel (oracle / ablation mode); ``backend`` overrides
-    the plan's backend for this call; ``interpret`` is forwarded to Pallas
-    backends."""
-    if vals is not None and vals.size != p.csr.nnz:
-        raise ValueError(f"vals stream has {vals.size} entries but the "
-                         f"matrix has {p.csr.nnz} nonzeros")
-    n = 1 if x.ndim == 1 else x.shape[1]
-    name = impl or p.select(n)
-    entry = p.entry(name, backend)
-    sub = p.substrate(entry.substrate)
-    bound = p.bound_kernel(entry, interpret)
-
+def _run_entry(entry: registry.KernelEntry, sub, bound, x, vals, nnz: int,
+               get_aux):
+    """Family dispatch shared by the builder and artifact execute paths.
+    ``get_aux(name)`` supplies the gather/scatter maps (lazily built on the
+    builder, prebuilt leaves on the artifact)."""
     if not entry.differentiable:
         # forward-only physical path: values stay baked, gradients are not
         # defined through it.
@@ -417,12 +509,12 @@ def execute(p: SparsePlan, x: jax.Array, *, vals: jax.Array | None = None,
         # value slabs through the substrate's src map (each nonzero lands in
         # exactly one shard slot, so the gather transpose partitions dvals).
         if vals is not None:
-            if p.csr.nnz == 0:
+            if nnz == 0:
                 v = jnp.zeros(sub.vals.shape, sub.vals.dtype)
             else:
                 v = jnp.where(sub.src >= 0,
                               jnp.take(vals.reshape(-1),
-                                       jnp.clip(sub.src, 0, p.csr.nnz - 1)),
+                                       jnp.clip(sub.src, 0, nnz - 1)),
                               0).astype(sub.vals.dtype)
             sub = dataclasses.replace(sub, vals=v)
         return bound(sub, x)
@@ -435,38 +527,85 @@ def execute(p: SparsePlan, x: jax.Array, *, vals: jax.Array | None = None,
         if vals is None:
             blocks = sub.blocks
         else:
-            bmap = p.bsr_map()
+            bmap = get_aux("bsr_map")
             blocks = jnp.zeros(sub.blocks.shape, sub.blocks.dtype).at[
                 bmap[0], bmap[1], bmap[2]].add(
                 vals.reshape(-1).astype(sub.blocks.dtype))
             bound = functools.partial(bound, live=True)
         return _exec_bsr((bound, sub.shape, sub.block_shape), sub.indptr,
-                         sub.indices, p.bsr_brow(), blocks, x)
+                         sub.indices, get_aux("bsr_brow"), blocks, x)
 
     if entry.substrate == "balanced":
         v = sub.vals if vals is None else _stream_to_balanced(vals, sub)
         return _exec_balanced((bound, sub.shape), sub.rows, sub.cols,
                               v.reshape(-1), x)
     if entry.substrate == "ell":
-        lens = p.ell_lens()
+        lens = get_aux("ell_lens")
         if vals is None:
             v = sub.vals
-        elif p.csr.nnz == 0:
+        elif nnz == 0:
             v = jnp.zeros(sub.vals.shape, sub.vals.dtype)
         else:
             valid = jnp.arange(sub.width, dtype=jnp.int32)[None, :] < lens[:, None]
-            v = jnp.where(valid, jnp.take(vals.reshape(-1), p.ell_src()), 0)
+            v = jnp.where(valid, jnp.take(vals.reshape(-1), get_aux("ell_src")), 0)
             v = v.astype(sub.vals.dtype)
         return _exec_ell((bound, sub.shape), sub.cols, lens, v, x)
     raise ValueError(f"substrate {entry.substrate!r} has no differentiable path")
 
 
-def _stream_to_balanced(stream: jax.Array, bal: BalancedCOO) -> jax.Array:
-    """Pad the CSR-ordered nonzero stream to the tile grid (row-major order is
-    preserved by construction, so this is a pure pad+reshape)."""
-    flat = stream.reshape(-1)
-    total = bal.n_tiles * bal.tile
-    return jnp.pad(flat, (0, total - flat.shape[0])).reshape(bal.rows.shape)
+def execute(p: "PlanBuilder | PlanArtifact", x: jax.Array, *,
+            vals: jax.Array | None = None, impl: str | None = None,
+            backend: str | None = None,
+            interpret: bool | None = None) -> jax.Array:
+    """Run the planned SpMV/SpMM: ``y = A @ x``.
+
+    Accepts a ``PlanBuilder`` (host object, closed over by jit) or a
+    ``PlanArtifact`` (pytree, may itself be a traced jit/scan argument).
+    Differentiable w.r.t. ``x`` and (when given) ``vals`` — a live CSR-ordered
+    nonzero stream overriding the values baked into the plan's substrates,
+    which is how trainable sparse weights ride the adaptive dispatch.  ``impl``
+    forces a logical kernel (oracle / ablation mode); ``backend`` overrides
+    the plan's backend for this call (builders only — artifacts are frozen
+    per backend); ``interpret`` is forwarded to Pallas backends."""
+    if isinstance(p, PlanArtifact):
+        return _execute_artifact(p, x, vals=vals, impl=impl, backend=backend,
+                                 interpret=interpret)
+    if vals is not None and vals.size != p.csr.nnz:
+        raise ValueError(f"vals stream has {vals.size} entries but the "
+                         f"matrix has {p.csr.nnz} nonzeros")
+    n = 1 if x.ndim == 1 else x.shape[1]
+    name = impl or p.select(n)
+    entry = p.entry(name, backend)
+    sub = p.substrate(entry.substrate)
+    bound = p.bound_kernel(entry, interpret)
+    builder_aux = {"ell_lens": p.ell_lens, "ell_src": p.ell_src,
+                   "bsr_map": p.bsr_map, "bsr_brow": p.bsr_brow}
+    return _run_entry(entry, sub, bound, x, vals, p.csr.nnz,
+                      lambda name: builder_aux[name]())
+
+
+def _execute_artifact(art: PlanArtifact, x, *, vals, impl, backend, interpret):
+    meta = art.meta
+    if backend is not None and backend != meta.backend:
+        raise ValueError(
+            f"PlanArtifact is frozen for backend {meta.backend!r}; "
+            f"finalize a plan built with backend={backend!r} instead")
+    if vals is not None and vals.size != meta.nnz:
+        raise ValueError(f"vals stream has {vals.size} entries but the "
+                         f"matrix has {meta.nnz} nonzeros")
+    n = 1 if x.ndim == 1 else x.shape[1]
+    name = impl or select_kernel(meta.stats, n, meta.thresholds)
+    entry = registry.resolve(name, meta.backend)
+    sub = art.substrates.get(entry.substrate)
+    if sub is None:
+        raise ValueError(
+            f"artifact carries substrates {tuple(art.substrates)} but kernel "
+            f"{name!r} needs {entry.substrate!r}; finalize with n=/impl=/"
+            "kernels= covering it")
+    bound = _bound_kernel(entry, interpret,
+                          dict(meta.prep).get(entry.logical))
+    return _run_entry(entry, sub, bound, x, vals, meta.nnz,
+                      lambda name: art.aux[name])
 
 
 # module-level bound-kernel cache for the plan-free training entry

@@ -24,8 +24,10 @@ traced path so ``execute`` stays jit-able (see DESIGN.md §3).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import importlib
+import threading
 from typing import Callable, Optional
 
 import jax
@@ -112,7 +114,43 @@ def backends_for(logical: str) -> tuple[str, ...]:
     return tuple(b for (l, b) in _REGISTRY if l == logical)
 
 
+# ---------------------------------------------------------------------------
+# scoped backend override (the facade's ``use_backend`` context manager)
+# ---------------------------------------------------------------------------
+
+_SCOPE = threading.local()
+
+
+@contextlib.contextmanager
+def backend_scope(backend: str | None):
+    """Make ``backend`` the default for every resolution in the dynamic
+    extent: ``plan()``, ``execute_pattern``, and ``repro.api.sparse()`` all
+    consult it when no explicit backend is passed.  ``None`` is a no-op scope
+    (handy for plumbing optional config through).  Exposed to users as
+    ``repro.api.use_backend``."""
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    if backend is not None:
+        stack.append(backend)
+    try:
+        yield
+    finally:
+        if backend is not None:
+            stack.pop()
+
+
+def scoped_backend() -> str | None:
+    """Innermost ``backend_scope`` override, or None."""
+    stack = getattr(_SCOPE, "stack", None)
+    return stack[-1] if stack else None
+
+
 def default_backend() -> str:
-    """Pallas compiles natively on TPU; everywhere else the XLA lowerings are
-    the production path (Pallas interpret mode is a correctness harness)."""
+    """The scoped override when inside ``backend_scope``; otherwise Pallas
+    compiles natively on TPU and everywhere else the XLA lowerings are the
+    production path (Pallas interpret mode is a correctness harness)."""
+    scoped = scoped_backend()
+    if scoped is not None:
+        return scoped
     return "pallas" if jax.default_backend() == "tpu" else "xla"

@@ -63,11 +63,28 @@ class SelectorThresholds:
         d = json.loads(text)
         if d.get("version", 1) != 1:
             raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
-        return cls(n_threshold=int(d["n_threshold"]),
-                   pr_avg_row=float(d["pr_avg_row"]),
-                   sr_cv=float(d["sr_cv"]),
-                   # absent in pre-sharding calibrations; default keeps them valid
-                   partition_cv=float(d.get("partition_cv", 1.0)))
+        th = cls(n_threshold=int(d["n_threshold"]),
+                 pr_avg_row=float(d["pr_avg_row"]),
+                 sr_cv=float(d["sr_cv"]),
+                 # absent in pre-sharding calibrations; default keeps them valid
+                 partition_cv=float(d.get("partition_cv", 1.0)))
+        th.validate()
+        return th
+
+    def validate(self) -> "SelectorThresholds":
+        """Reject numerically nonsensical thresholds (negative cutoffs,
+        NaN/inf — JSON happily carries both) with ``ValueError`` so corrupt
+        calibrations get the same warn-and-fallback treatment as corrupt
+        JSON in ``default_thresholds``."""
+        if self.n_threshold < 0:
+            raise ValueError(f"n_threshold must be >= 0, got {self.n_threshold}")
+        for name in ("pr_avg_row", "sr_cv", "partition_cv"):
+            v = float(getattr(self, name))
+            if not np.isfinite(v):
+                raise ValueError(f"{name} must be finite, got {v!r}")
+            if v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v!r}")
+        return self
 
 
 SelectorThresholds.PAPER_GPU = SelectorThresholds(n_threshold=4, pr_avg_row=32.0, sr_cv=0.5)
@@ -117,52 +134,60 @@ def select_partition(stats: MatrixStats,
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims over the plan/execute subsystem (repro.core.plan)
+# deprecation shims: thin aliases over the repro.api facade
 # ---------------------------------------------------------------------------
 
 class PreparedMatrix:
-    """Deprecated: use ``repro.core.plan.plan`` — substrates are now built
-    lazily, per the selected kernel, instead of both eagerly.  This shim wraps
-    a ``SparsePlan`` so legacy ``.ell`` / ``.balanced`` / ``.stats`` accessors
-    keep working (each access builds that substrate on first touch)."""
+    """Deprecated: use ``repro.api.sparse`` — substrates are built lazily,
+    per the selected kernel, instead of both eagerly.  This shim wraps the
+    facade's ``SparseMatrix`` so legacy ``.ell`` / ``.balanced`` / ``.stats``
+    accessors keep working (each access builds that substrate on first
+    touch)."""
 
-    def __init__(self, plan_obj):
-        self._plan = plan_obj
+    def __init__(self, matrix):
+        from repro.api import SparseMatrix
+        if not isinstance(matrix, SparseMatrix):  # a bare PlanBuilder
+            matrix = SparseMatrix(matrix)
+        self._matrix = matrix
 
     @classmethod
     def from_csr(cls, csr: CSR, tile: int = 512) -> "PreparedMatrix":
         warnings.warn("PreparedMatrix.from_csr is deprecated; use "
-                      "repro.core.plan.plan (lazy substrates)",
+                      "repro.api.sparse (lazy substrates, cached plans)",
                       DeprecationWarning, stacklevel=2)
-        from .plan import plan
-        return cls(plan(csr, tile=tile))
+        from repro.api import sparse
+        return cls(sparse(csr, tile=tile))
+
+    @property
+    def _plan(self):
+        return self._matrix.plan
 
     @property
     def csr(self) -> CSR:
-        return self._plan.csr
+        return self._matrix.plan.csr
 
     @property
     def stats(self) -> MatrixStats:
-        return self._plan.stats
+        return self._matrix.stats
 
     @property
     def ell(self):
-        return self._plan.substrate("ell")
+        return self._matrix.plan.substrate("ell")
 
     @property
     def balanced(self):
-        return self._plan.substrate("balanced")
+        return self._matrix.plan.substrate("balanced")
 
 
 def adaptive_spmm(prep, x, th: SelectorThresholds = SelectorThresholds(),
                   impl: str | None = None):
-    """Deprecated front door: route to the selected kernel through the unified
-    ``execute``.  ``impl`` overrides the rule (oracle/ablation mode)."""
-    warnings.warn("adaptive_spmm is deprecated; use repro.core.plan.execute",
-                  DeprecationWarning, stacklevel=2)
-    from .plan import execute, plan
-    p = prep._plan if isinstance(prep, PreparedMatrix) else plan(prep)
-    return execute(p.with_thresholds(th), x, impl=impl)
+    """Deprecated front door: ``repro.api.sparse(csr) @ x`` is the
+    replacement.  ``impl`` overrides the rule (oracle/ablation mode)."""
+    warnings.warn("adaptive_spmm is deprecated; use repro.api.sparse "
+                  "(m = sparse(csr); m @ x)", DeprecationWarning, stacklevel=2)
+    from repro.api import sparse
+    m = prep._matrix if isinstance(prep, PreparedMatrix) else sparse(prep)
+    return m.with_thresholds(th).matmul(x, impl=impl)
 
 
 # ---------------------------------------------------------------------------

@@ -287,9 +287,7 @@ def _sharded_prep(sub: ShardedSubstrate, *, _logical: str) -> dict:
 def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
                   interpret=None, row_base=None, win=None):
     """Run the inner kernel per shard under shard_map; reduce per the spec."""
-    # late import (plan imports registry, not shard); the package re-exports
-    # the plan() *function* under the same name, so pull the privates directly
-    from .plan import _exec_balanced, _exec_ell
+    from .vjp import _exec_balanced, _exec_ell
 
     spec = sub.spec
     inner = registry.resolve(_logical, sub.inner_backend)
@@ -346,7 +344,7 @@ def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
     share of tiles per device IS the nnz partitioner; partials psum.  Rows and
     cols may be traced (scanned per-layer patterns) — the inner kernel is the
     prep-free XLA reference, same as ``execute_pattern``'s traced fallback."""
-    from .plan import _exec_balanced
+    from .vjp import _exec_balanced
 
     axis = axis or default_shard_axis(mesh)
     n = int(mesh.shape[axis])

@@ -1,0 +1,149 @@
+"""The unified custom VJPs — one backward pair per substrate family.
+
+Gradient math is kernel-independent (the VJP of ``Y = A·X`` is ``dA = G·Xᵀ``
+restricted to the pattern, ``dX = Aᵀ·G``), so one backward pair per substrate
+family serves every backend; the forward primal is whatever physical kernel
+the registry resolved (DESIGN.md §3 rule 3).  Split out of ``core/plan.py``
+so both the plan layer and the sharded backend (``core/shard.py``) can reach
+the families without importing each other's front doors.
+
+Each ``_exec_*`` takes a ``static`` tuple whose first element is the *bound*
+physical kernel (prep opts + interpret baked in).  The static rides
+``custom_vjp``'s ``nondiff_argnums``, so callers must pass an
+identity-stable callable (see the bind caches in ``core/plan.py``) or every
+call re-traces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import BSR, ELL, BalancedCOO
+
+
+def _as_2d(a):
+    return (a[:, None], True) if a.ndim == 1 else (a, False)
+
+
+def _coo_bwd(rows, cols, valid, vals, x, g, shape):
+    """Shared cotangent math for any COO-viewable substrate:
+    dvals[e] = <g[row_e,:], x[col_e,:]> (masked), dx = Aᵀ·g."""
+    m, k = shape
+    x2, _ = _as_2d(x)
+    g2, _ = _as_2d(g)
+    g_rows = jnp.take(g2, jnp.minimum(rows, m - 1), axis=0)
+    g_rows = jnp.where(valid[:, None], g_rows, 0)
+    x_cols = jnp.take(x2, cols, axis=0)
+    dvals = jnp.sum(g_rows.astype(jnp.float32) * x_cols.astype(jnp.float32), axis=-1)
+    p = vals.astype(jnp.float32)[:, None] * g_rows.astype(jnp.float32)
+    dx = jax.ops.segment_sum(p, cols, num_segments=k)
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    return dvals, dx
+
+
+def _float0(a):
+    # integer pattern args get symbolic-zero (float0) cotangents
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_balanced(static, rows, cols, vals, x, *extra):
+    """``extra``: integer per-matrix prep artifacts forwarded positionally to
+    the bound kernel (float0 cotangents) — the sharded backend threads
+    per-shard prep (VSR row windows) through here, since inside shard_map
+    those are traced values and must not be baked into the static."""
+    bound_fn, shape = static
+    bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), tuple(shape))
+    return bound_fn(bal, x, *extra)
+
+
+def _exec_balanced_fwd(static, rows, cols, vals, x, *extra):
+    return _exec_balanced(static, rows, cols, vals, x, *extra), (rows, cols, vals, x, extra)
+
+
+def _exec_balanced_bwd(static, res, g):
+    _, shape = static
+    rows, cols, vals, x, extra = res
+    r, c, v = rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
+    dvals, dx = _coo_bwd(r, c, r < shape[0], v, x, g, shape)
+    return (_float0(rows), _float0(cols),
+            dvals.reshape(vals.shape).astype(vals.dtype), dx,
+            *(_float0(e) for e in extra))
+
+
+_exec_balanced.defvjp(_exec_balanced_fwd, _exec_balanced_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_ell(static, cols, lens, vals, x):
+    bound_fn, shape = static
+    return bound_fn(ELL(cols, vals, tuple(shape)), x)
+
+
+def _exec_ell_fwd(static, cols, lens, vals, x):
+    return _exec_ell(static, cols, lens, vals, x), (cols, lens, vals, x)
+
+
+def _exec_ell_bwd(static, res, g):
+    _, shape = static
+    cols, lens, vals, x = res
+    m, w = cols.shape
+    g2, _ = _as_2d(g)
+    rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), w)
+    valid = (jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]).reshape(-1)
+    dvals, dx = _coo_bwd(rows, cols.reshape(-1), valid, vals.reshape(-1),
+                         x, g2, shape)
+    return (_float0(cols), _float0(lens),
+            dvals.reshape(vals.shape).astype(vals.dtype), dx)
+
+
+_exec_ell.defvjp(_exec_ell_fwd, _exec_ell_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_bsr(static, indptr, bcol, brow, blocks, x):
+    """Block-granule family (DESIGN.md §3 rule 3): forward is the physical
+    BSR kernel; backward is block-level — dA restricted to the *materialized
+    blocks* (a superset of the CSR pattern; the stream gather in ``execute``
+    masks it back down) and dX as a block-transpose segment reduction."""
+    bound_fn, shape, block_shape = static
+    return bound_fn(BSR(indptr, bcol, blocks, tuple(shape),
+                        tuple(block_shape)), x)
+
+
+def _exec_bsr_fwd(static, indptr, bcol, brow, blocks, x):
+    return (_exec_bsr(static, indptr, bcol, brow, blocks, x),
+            (indptr, bcol, brow, blocks, x))
+
+
+def _exec_bsr_bwd(static, res, g):
+    _, (m, k), (bm, bk) = static
+    indptr, bcol, brow, blocks, x = res
+    mb, kb = -(-m // bm), -(-k // bk)
+    g2, _ = _as_2d(g)
+    x2, _ = _as_2d(x)
+    g3 = jnp.pad(g2.astype(jnp.float32),
+                 ((0, mb * bm - m), (0, 0))).reshape(mb, bm, -1)
+    x3 = jnp.pad(x2.astype(jnp.float32),
+                 ((0, kb * bk - k), (0, 0))).reshape(kb, bk, -1)
+    gb = jnp.take(g3, brow, axis=0)                     # (nb, bm, N)
+    xb = jnp.take(x3, bcol, axis=0)                     # (nb, bk, N)
+    dblocks = jnp.einsum("bmn,bkn->bmk", gb, xb).astype(blocks.dtype)
+    p = jnp.einsum("bmk,bmn->bkn", blocks.astype(jnp.float32), gb)
+    dx = jax.ops.segment_sum(p, bcol, num_segments=kb)
+    dx = dx.reshape(kb * bk, -1)[:k].reshape(x.shape).astype(x.dtype)
+    return (_float0(indptr), _float0(bcol), _float0(brow), dblocks, dx)
+
+
+_exec_bsr.defvjp(_exec_bsr_fwd, _exec_bsr_bwd)
+
+
+def _stream_to_balanced(stream: jax.Array, bal: BalancedCOO) -> jax.Array:
+    """Pad the CSR-ordered nonzero stream to the tile grid (row-major order is
+    preserved by construction, so this is a pure pad+reshape)."""
+    flat = stream.reshape(-1)
+    total = bal.n_tiles * bal.tile
+    return jnp.pad(flat, (0, total - flat.shape[0])).reshape(bal.rows.shape)

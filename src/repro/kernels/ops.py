@@ -1,15 +1,15 @@
-"""Deprecated kernel entry point — dispatch now lives in ``repro.core.plan``.
+"""Deprecated kernel entry point — dispatch now lives behind ``repro.api``.
 
 The logical→physical mapping this module used to hard-code is the registry
 (``repro.core.registry``): the Pallas kernel modules (``vsr``, ``csc``,
 ``spmv`` via ``vsr``, ``bsr``) self-register under the "pallas"/"bsr"
-backends, the XLA lowerings in ``repro.core.spmm`` under "xla", and
-``execute`` resolves ``(logical_kernel, backend)`` per call.  See DESIGN.md
+backends, the XLA lowerings in ``repro.core.spmm`` under "xla", and the
+facade resolves ``(logical_kernel, backend)`` per call.  See DESIGN.md
 §2 for why the GPU 2x2 space collapses to 2x1 on TPU (rs_pr/nb_sr share their
 neighbours' binaries).
 
 ``spmm`` below survives as a thin deprecation shim so external callers keep
-working one release; new code should ``plan(...)`` once and ``execute`` per
+working one release; new code should ``sparse(...)`` once and ``@`` per
 operand.
 """
 from __future__ import annotations
@@ -34,14 +34,14 @@ def use_pallas_default() -> bool:
 def spmm(prep, x: jax.Array, *, impl: str | None = None,
          th: SelectorThresholds = SelectorThresholds(),
          force_pallas: bool = False, interpret: bool | None = None) -> jax.Array:
-    """Deprecated: use ``repro.core.plan.plan`` + ``execute``."""
-    warnings.warn("repro.kernels.spmm is deprecated; use repro.core.plan "
-                  "(plan/execute)", DeprecationWarning, stacklevel=2)
-    from repro.core.plan import execute, plan
-    p = prep._plan if isinstance(prep, PreparedMatrix) else plan(prep)
+    """Deprecated: use ``repro.api.sparse`` (``m = sparse(csr); m @ x``)."""
+    warnings.warn("repro.kernels.spmm is deprecated; use repro.api.sparse",
+                  DeprecationWarning, stacklevel=2)
+    from repro.api import sparse
+    m = prep._matrix if isinstance(prep, PreparedMatrix) else sparse(prep)
     backend = "pallas" if force_pallas else default_backend()
-    return execute(p.with_thresholds(th), x, impl=impl, backend=backend,
-                   interpret=interpret)
+    return m.with_thresholds(th).matmul(x, impl=impl, backend=backend,
+                                        interpret=interpret)
 
 
 __all__ = [

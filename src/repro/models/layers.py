@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import execute_pattern
+from repro.api import pattern_matmul
 from .sharding_ctx import constrain, constrain_gemm, sparse_shard
 
 
@@ -242,9 +242,9 @@ def sparse_matmul(pattern: SparsePattern, vals: jax.Array, x: jax.Array, *,
     if mesh is None:
         mesh, shard_axis = sparse_shard()
     flat = x.reshape(-1, x.shape[-1])                           # (T, k)
-    y = execute_pattern(pattern.rows, pattern.cols, vals,
-                        tuple(pattern.shape), flat.T,
-                        mesh=mesh, shard_axis=shard_axis)       # (m, T)
+    y = pattern_matmul(pattern.rows, pattern.cols, vals,
+                       tuple(pattern.shape), flat.T,
+                       mesh=mesh, shard_axis=shard_axis)        # (m, T)
     return y.T.reshape(x.shape[:-1] + (pattern.shape[0],)).astype(x.dtype)
 
 

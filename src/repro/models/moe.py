@@ -16,11 +16,16 @@ paper's Fig. 4: small total work → PR path, large → SR path.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import execute_pattern
+from repro.api import execute, pattern_matmul
 
 from .config import MoEConfig
 from .layers import dot
@@ -221,16 +226,16 @@ def moe_spmm(p: dict, x: jax.Array, cfg: MoEConfig):
         [a, jnp.full((pad,), fill, a.dtype)]).reshape(-1, tile)
 
     # dispatch: rows = slot (E·C sentinel drops overflow), cols = token
-    ein = execute_pattern(as_tiles(slot_u, e * cap), as_tiles(tok, 0),
-                          as_tiles(jnp.ones((tk,), jnp.float32), 0.0),
-                          (e * cap, t), x)                     # (E·C, d)
+    ein = pattern_matmul(as_tiles(slot_u, e * cap), as_tiles(tok, 0),
+                         as_tiles(jnp.ones((tk,), jnp.float32), 0.0),
+                         (e * cap, t), x)                      # (E·C, d)
     h = _expert_ffn(p, ein.reshape(e, cap, d).astype(x.dtype))
     # combine: rows = token, cols = slot (dropped → the zero row), vals = gate
     hpad = jnp.concatenate([h.reshape(e * cap, d),
                             jnp.zeros((1, d), h.dtype)])
-    y = execute_pattern(as_tiles(tok, t), as_tiles(slot_u, 0),
-                        as_tiles(gate.reshape(tk).astype(jnp.float32), 0.0),
-                        (t, e * cap + 1), hpad)                # (T, d)
+    y = pattern_matmul(as_tiles(tok, t), as_tiles(slot_u, 0),
+                       as_tiles(gate.reshape(tk).astype(jnp.float32), 0.0),
+                       (t, e * cap + 1), hpad)                 # (T, d)
     return y.astype(x.dtype), aux
 
 
@@ -258,10 +263,163 @@ def moe_onehot(p: dict, x: jax.Array, cfg: MoEConfig):
 
 
 def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig):
-    """x: (..., d) → (..., d), aux. Flattens leading dims into tokens."""
+    """x: (..., d) → (..., d), aux. Flattens leading dims into tokens.
+
+    Inside a ``pinned_dispatch`` scope (serving: the engine pins each lane's
+    expert topology and caches the dispatch plans per topology) the planned
+    path runs instead of the router-driven sort/scatter."""
     lead = x.shape[:-1]
     flat = x.reshape(-1, x.shape[-1])
+    pinned = current_pinned()
+    if pinned is not None and flat.shape[0] == pinned.t:
+        y, aux = moe_spmm_pinned(p, flat, cfg, pinned)
+        return y.reshape(*lead, x.shape[-1]), aux
     path = select_dispatch(flat.shape[0], cfg)
     fn = {"onehot": moe_onehot, "spmm": moe_spmm}.get(path, moe_sort)
     y, aux = fn(p, flat, cfg)
     return y.reshape(*lead, x.shape[-1]), aux
+
+
+# ---------------------------------------------------------------------------
+# topology-pinned dispatch: the offline-plan / online-execute half of MoE
+# serving (ROADMAP item; consumed by serve/engine.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PinnedDispatch:
+    """Frozen MoE dispatch bundle for one concrete token→expert topology.
+
+    ``dispatch``/``combine`` are jit-safe ``PlanArtifact``s over the slotting
+    patterns (values: 1.0 baked / gates streamed live); ``idx`` re-reads the
+    router's gate logits at the pinned experts, ``perm`` reorders the (T, k)
+    gate matrix into the combine pattern's CSR nonzero order."""
+
+    dispatch: Any            # PlanArtifact, (E·C, T), values baked at 1.0
+    combine: Any             # PlanArtifact, (T, E·C), values = live gates
+    idx: jax.Array           # (T, k) pinned expert ids (concrete)
+    perm: jax.Array          # (combine_nnz,) flat t·k+j per CSR slot
+    e: int
+    cap: int
+    t: int
+    k: int
+
+
+_PINNED = threading.local()
+
+
+@contextlib.contextmanager
+def pinned_dispatch(plans: PinnedDispatch):
+    """Route ``moe_apply`` through the pre-planned dispatch for the scope's
+    trace.  The engine wraps each per-topology decode trace in this — the
+    compiled executable closes over the cached artifacts."""
+    prev = getattr(_PINNED, "plans", None)
+    _PINNED.plans = plans
+    try:
+        yield
+    finally:
+        _PINNED.plans = prev
+
+
+def current_pinned() -> Optional[PinnedDispatch]:
+    return getattr(_PINNED, "plans", None)
+
+
+def dispatch_plans(topology, cfg: MoEConfig, *, cache=None,
+                   n_hint: int | None = None,
+                   backend: str | None = None) -> PinnedDispatch:
+    """Build (or fetch) the ``PinnedDispatch`` for a concrete topology.
+
+    ``topology``: per-token tuples of expert ids, e.g. ``((0, 3), (3, 5))``
+    for T=2 tokens with top-2 experts each — per-token ids must be distinct.
+    Slotting (stable expert sort, capacity overflow drop) replicates
+    ``moe_spmm`` exactly, so pinning the router's own top-k reproduces the
+    unpinned output bit-for-close.  Plans are cached in ``cache`` (a
+    ``repro.core.cache.PlanCache``; the process default when None) keyed on
+    the topology itself — cheap to hash, no CSR fingerprinting per tick."""
+    from repro.core.cache import DEFAULT_CACHE
+
+    from repro.core import registry
+    from repro.core.cache import thresholds_version
+    from repro.core.selector import default_thresholds
+
+    topo = tuple(tuple(int(i) for i in row) for row in topology)
+    cache = cache if cache is not None else DEFAULT_CACHE
+    # resolve the backend AND thresholds before keying: the built artifacts
+    # freeze both (use_backend scope; selector decisions baked in), so an
+    # unresolved key would serve one scope's/calibration's artifacts to
+    # another — recalibration must invalidate (DESIGN.md §5.3)
+    backend = backend or registry.default_backend()
+    th = default_thresholds()
+    key = ("moe_pinned", topo, cfg.num_experts, cfg.top_k,
+           float(cfg.capacity_factor), backend, n_hint,
+           thresholds_version(th))
+    return cache.get_or_build(
+        key, lambda: _build_pinned(topo, cfg, n_hint=n_hint, backend=backend,
+                                   thresholds=th))
+
+
+def _build_pinned(topo: tuple, cfg: MoEConfig, *, n_hint, backend,
+                  thresholds=None) -> PinnedDispatch:
+    from repro.api import sparse
+    from repro.core.formats import csr_from_coo
+
+    idx = np.asarray(topo, np.int32)                           # (T, k)
+    t, k = idx.shape
+    e = cfg.num_experts
+    cap = capacity(t, cfg)
+    tk = t * k
+
+    # slotting, exactly as moe_spmm: stable sort by expert, rank-in-expert,
+    # overflow past the capacity drops
+    flat_e = idx.reshape(tk)
+    order = np.argsort(flat_e, kind="stable")
+    se = flat_e[order]
+    first = np.searchsorted(se, np.arange(e))
+    pos = np.arange(tk) - first[se]
+    slot_s = np.where(pos < cap, se.astype(np.int64) * cap + pos, e * cap)
+    slot_u = np.empty(tk, np.int64)
+    slot_u[order] = slot_s
+    tok = np.arange(tk) // k
+    keep = slot_u < e * cap
+
+    d_csr = csr_from_coo(slot_u[keep], tok[keep], np.ones(keep.sum(), np.float32),
+                         (e * cap, t))
+    c_csr = csr_from_coo(tok[keep], slot_u[keep], np.ones(keep.sum(), np.float32),
+                         (t, e * cap))
+    # gate stream position per combine-CSR slot: csr_from_coo sorts kept
+    # entries by (token, slot)
+    flat_keep = np.flatnonzero(keep)
+    perm = flat_keep[np.lexsort((slot_u[keep], tok[keep]))].astype(np.int32)
+
+    fin = dict(n=n_hint) if n_hint is not None else {}
+    d_art = sparse(d_csr, backend=backend, thresholds=thresholds,
+                   cache=False).finalize(**fin)
+    c_art = sparse(c_csr, backend=backend, thresholds=thresholds,
+                   cache=False).finalize(**fin)
+    return PinnedDispatch(dispatch=d_art, combine=c_art,
+                          idx=jnp.asarray(idx), perm=jnp.asarray(perm),
+                          e=e, cap=cap, t=t, k=k)
+
+
+def moe_spmm_pinned(p: dict, x: jax.Array, cfg: MoEConfig,
+                    pinned: PinnedDispatch):
+    """Online half of the pinned dispatch: two planned SpMMs, zero sorting.
+
+    The router runs only to score the *pinned* experts — softmax over the
+    pinned logits equals the full softmax renormalized to that expert set, so
+    when the pinned topology is the router's own top-k this matches
+    ``moe_spmm`` exactly.  Gates ride the combine artifact as a live value
+    stream (differentiable, though serving only runs forward)."""
+    t, d = x.shape
+    if t != pinned.t:
+        raise ValueError(f"pinned dispatch was planned for T={pinned.t} "
+                         f"tokens; got {t}")
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["w_router"].astype(jnp.float32))
+    lg = jnp.take_along_axis(logits, pinned.idx, axis=1)       # (T, k)
+    gate = jax.nn.softmax(lg, axis=-1)
+    ein = execute(pinned.dispatch, x)                          # (E·C, d)
+    h = _expert_ffn(p, ein.reshape(pinned.e, pinned.cap, d).astype(x.dtype))
+    y = execute(pinned.combine, h.reshape(pinned.e * pinned.cap, d),
+                vals=jnp.take(gate.reshape(-1), pinned.perm))  # (T, d)
+    return y.astype(x.dtype), jnp.zeros((), jnp.float32)

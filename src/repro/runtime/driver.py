@@ -11,11 +11,18 @@ Responsibilities (all exercised by tests/test_runtime.py):
   * straggler watchdog — per-step wall-time EMA; steps slower than
     ``straggler_factor`` x EMA are logged as straggler events, and the
     mitigation hook fires (on real fleets: reshard/evict; here: recorded).
+  * calibrate-on-first-run — when ``calibrate_to`` names a thresholds file
+    that does not exist yet, a background thread measures the 2x2 kernel
+    grid on this backend (``repro.api.calibrate_backend``) and persists the
+    winner where ``$REPRO_THRESHOLDS`` auto-loads it, so fleets converge to
+    backend-correct selector thresholds without operator action.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
+import threading
 import time
 from typing import Any, Callable, Optional
 
@@ -33,6 +40,9 @@ class DriverConfig:
     straggler_factor: float = 3.0
     ema_alpha: float = 0.2
     max_restarts: int = 3
+    #: path for the background selector-thresholds calibration (None = off);
+    #: skipped when the file already exists (a fleet calibrates once)
+    calibrate_to: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -60,6 +70,7 @@ class TrainDriver:
         self._preempted = False
         self._ema: Optional[float] = None
         self._measured = 0
+        self._calibrate_thread: Optional[threading.Thread] = None
 
     def _install_sigterm(self):
         def handler(signum, frame):
@@ -69,9 +80,36 @@ class TrainDriver:
         except ValueError:
             pass  # non-main thread (tests)
 
+    def _start_calibration(self):
+        """Fire-and-forget thresholds calibration (facade-level; tiny R-MAT
+        suite, seconds of CPU) — the calibrate-on-first-serve ROADMAP hook."""
+        if (self.cfg.calibrate_to is None
+                or os.path.exists(self.cfg.calibrate_to)
+                or self._calibrate_thread is not None):
+            return
+
+        def job():
+            import warnings
+            from repro import api
+            try:
+                api.calibrate_backend(save_to=self.cfg.calibrate_to)
+            except Exception as e:  # calibration must never take the run down,
+                warnings.warn(      # but a silent no-file is undiagnosable
+                    f"background thresholds calibration to "
+                    f"{self.cfg.calibrate_to!r} failed: {e!r}; continuing "
+                    "on current thresholds", stacklevel=1)
+
+        self._calibrate_thread = threading.Thread(target=job, daemon=True)
+        self._calibrate_thread.start()
+
+    def wait_calibration(self, timeout: float | None = None):
+        if self._calibrate_thread is not None:
+            self._calibrate_thread.join(timeout)
+
     # ------------------------------------------------------------------ run
     def run(self, state: Any, shardings: Any = None) -> Any:
         self._install_sigterm()
+        self._start_calibration()
         start = 0
         latest = self.ckpt.latest_step()
         if latest is not None:

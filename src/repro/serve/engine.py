@@ -1,5 +1,6 @@
 """Batched serving engine: slot-based continuous batching (decoupled
-prefill/decode), greedy sampling, EOS eviction.
+prefill/decode), greedy sampling, EOS eviction, and topology-keyed MoE
+dispatch-plan caching.
 
 Scheduling model: a fixed pool of ``slots`` decode lanes share one KV cache.
 New requests are prefilled one-at-a-time into a free slot (prefill and
@@ -10,17 +11,30 @@ per-slot vector, so each lane writes at — and attends up to — its *own*
 request's length (the per-slot length mask; a lane never reads another
 lane's longer cache region).
 
+MoE plan caching (the offline/online split applied to serving): a request
+may carry a pinned expert ``topology`` (its top-k expert ids, e.g. fixed at
+prefill).  The engine packs lanes by topology key, fetches the pre-planned
+dispatch/combine artifacts from a topology-keyed ``PlanCache``
+(``models.moe.dispatch_plans``), and decodes the batch through a
+per-topology compiled step that closes over those artifacts — so decode
+ticks with a repeated routing pattern perform **zero** new plan
+constructions (``engine.plan_cache`` counters make that assertable) instead
+of re-deriving the dispatch pattern every tick.
+
 This is the 'serve a small model with batched requests' deliverable; the
 32k/500k shape cells lower the same decode_step through pjit in the dry-run.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.cache import PlanCache
 
 
 @dataclasses.dataclass
@@ -29,6 +43,9 @@ class Request:
     prompt: list[int]
     max_new: int = 16
     eos: int = -1
+    #: pinned expert topology (top-k expert ids) for MoE decode; lanes with a
+    #: topology decode through cached dispatch plans, packed by key
+    topology: Optional[tuple] = None
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -66,7 +83,8 @@ def _slice_slot(cache, axes, i):
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256):
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 plan_cache: Optional[PlanCache] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -81,6 +99,36 @@ class ServeEngine:
             jax.eval_shape(lambda: model.init_cache(2, max_len)))
         self.ticks = 0
         self._all: list[Request] = []
+        #: topology-keyed store of MoE dispatch plans (and anything else the
+        #: engine pre-plans); counters expose reuse per decode tick
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache(64)
+        self._moe_cfg = getattr(getattr(model, "cfg", None), "moe", None)
+        self._decode_pinned: OrderedDict = OrderedDict()
+
+    # -------------------------------------------------- MoE topology packing
+    def _pinned_decode(self, batch_topo: tuple):
+        """The compiled decode step for one batch topology: fetch the cached
+        dispatch plans (every tick — reuse is what the counters measure) and
+        trace at most once per distinct topology, with the artifacts closed
+        over."""
+        from repro.models import moe as moe_mod
+
+        plans = moe_mod.dispatch_plans(
+            batch_topo, self._moe_cfg, cache=self.plan_cache,
+            n_hint=getattr(self.model.cfg, "d_model", None))
+        fn = self._decode_pinned.get(batch_topo)
+        if fn is None:
+            def step(params, caches, toks, _plans=plans):
+                with moe_mod.pinned_dispatch(_plans):
+                    return self.model.decode_step(params, caches, toks)
+
+            fn = jax.jit(step)
+            self._decode_pinned[batch_topo] = fn
+            while len(self._decode_pinned) > 32:   # LRU-bound the table:
+                self._decode_pinned.popitem(last=False)   # drop coldest only
+        else:
+            self._decode_pinned.move_to_end(batch_topo)
+        return fn
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -108,13 +156,26 @@ class ServeEngine:
         live = [(s, r) for s, r in enumerate(self.active) if r is not None]
         if not live:
             return
+        pinned = (self._moe_cfg is not None
+                  and all(r.topology is not None for _, r in live))
+        if pinned:
+            # pack lanes by topology key: same-topology requests sit adjacent
+            # and recurring batch topologies hit the same cached plans and
+            # compiled step across ticks
+            live.sort(key=lambda sr: (tuple(sr[1].topology), sr[0]))
         # pad to the fixed slot count so decode compiles exactly once (a
         # live-count-sized batch would retrace per occupancy level): dummy
         # lanes cycle the live caches/tokens and their outputs are discarded
         lanes = [live[i % len(live)] for i in range(self.slots)]
         batched = _stack_slots([self._caches[s] for s, _ in lanes], self._axes)
         toks = jnp.asarray([[r.out[-1]] for _, r in lanes], jnp.int32)
-        logits, new_cache = self._decode(self.params, batched, toks)
+        if pinned:
+            batch_topo = tuple(tuple(int(i) for i in r.topology)
+                               for _, r in lanes)
+            decode = self._pinned_decode(batch_topo)
+        else:
+            decode = self._decode
+        logits, new_cache = decode(self.params, batched, toks)
         for i, (slot, req) in enumerate(live):
             self._caches[slot] = _slice_slot(new_cache, self._axes, i)
             nxt = int(jnp.argmax(logits[i]))

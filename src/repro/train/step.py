@@ -21,13 +21,25 @@ class TrainConfig:
     opt: OptConfig = OptConfig()
     microbatches: int = 1
     accum_dtype: str = "float32"
+    #: scoped backend for the sparse layers' kernels during tracing (the
+    #: facade's ``use_backend``); None keeps the platform default
+    sparse_backend: str | None = None
 
 
 def make_train_step(loss_fn: Callable, tcfg: TrainConfig) -> Callable:
     """loss_fn(params, batch) -> (loss, metrics dict).
 
     Returns train_step(state, batch) -> (state, metrics) where
-    state = {"params": ..., "opt": ...}."""
+    state = {"params": ..., "opt": ...}.  ``tcfg.sparse_backend`` pins the
+    sparse-kernel backend for the whole step's trace through the facade's
+    ``use_backend`` scope — no kwarg threading through model code."""
+    if tcfg.sparse_backend is not None:
+        from repro.api import use_backend
+        inner_loss = loss_fn
+
+        def loss_fn(params, batch):
+            with use_backend(tcfg.sparse_backend):
+                return inner_loss(params, batch)
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

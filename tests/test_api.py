@@ -1,0 +1,322 @@
+"""The repro.api facade: sparse() operands, context-scoped defaults, the
+thin deprecation shims, thresholds-validation hardening, the boundary lint,
+and calibrate_backend."""
+import json
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro import api
+from repro.core import csr_from_dense
+from repro.core.cache import PlanCache
+
+from conftest import random_csr
+
+
+# ---------------------------------------------------------------------------
+# sparse(): construction, matmul, live values, artifacts
+# ---------------------------------------------------------------------------
+
+def test_sparse_from_dense_and_csr(rng):
+    csr, a = random_csr(rng, 24, 30, 0.25)
+    x = jnp.asarray(rng.standard_normal((30, 6)).astype(np.float32))
+    m_dense = api.sparse(a, cache=False)
+    m_csr = api.sparse(csr, cache=False)
+    ref = a @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(m_dense @ x), ref, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m_csr @ x), ref, atol=1e-4)
+    assert m_csr.shape == (24, 30) and m_csr.nnz == csr.nnz
+    assert "SparseMatrix" in repr(m_csr)
+    with pytest.raises(ValueError, match="dense 2-D"):
+        api.sparse(np.ones(3))
+
+
+def test_top_level_reexports():
+    assert repro.sparse is api.sparse
+    assert repro.pattern_matmul is api.pattern_matmul
+    assert repro.api.PlanArtifact is api.PlanArtifact
+
+
+def test_with_values_is_live_and_differentiable(rng):
+    csr, a = random_csr(rng, 20, 24, 0.3)
+    m = api.sparse(csr, cache=False)
+    x = jnp.asarray(rng.standard_normal((24, 4)).astype(np.float32))
+    m2 = m.with_values(csr.data * 2)
+    np.testing.assert_allclose(np.asarray(m2 @ x), 2 * (a @ np.asarray(x)),
+                               atol=1e-3)
+    g = jax.grad(lambda v: ((m.with_values(v) @ x) ** 2).sum())(csr.data)
+    g_ref = jax.grad(
+        lambda v: ((api.execute(m.plan, x, vals=v)) ** 2).sum())(csr.data)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+    with pytest.raises(ValueError, match="nonzeros"):
+        m.with_values(jnp.ones(csr.nnz + 3))
+
+
+def test_sparse_rewrap_keeps_live_values(rng):
+    """Regression: sparse(SparseMatrix) must carry the live value stream —
+    re-planning (e.g. onto another backend) silently reverted to the plan's
+    baked values."""
+    csr, a = random_csr(rng, 20, 24, 0.3)
+    x = jnp.asarray(rng.standard_normal((24, 4)).astype(np.float32))
+    m = api.sparse(csr, cache=False).with_values(csr.data * 3)
+    m2 = api.sparse(m, backend="pallas", cache=False)
+    assert m2.backend == "pallas"
+    np.testing.assert_allclose(np.asarray(m2.matmul(x, interpret=True)),
+                               3 * (a @ np.asarray(x)), atol=2e-3)
+
+
+def test_matmul_impl_and_backend_overrides(rng):
+    csr, a = random_csr(rng, 24, 30, 0.25)
+    m = api.sparse(csr, cache=False)
+    x = jnp.asarray(rng.standard_normal((30, 6)).astype(np.float32))
+    ref = a @ np.asarray(x)
+    for impl in ("rs_sr", "nb_pr"):
+        np.testing.assert_allclose(np.asarray(m.matmul(x, impl=impl)), ref,
+                                   atol=1e-3)
+    got = m.matmul(x, impl="nb_pr", backend="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), ref, atol=2e-3)
+
+
+def test_finalize_returns_artifact(rng):
+    csr, a = random_csr(rng, 24, 30, 0.25)
+    m = api.sparse(csr, cache=False)
+    art = m.finalize(n=6)
+    x = jnp.asarray(rng.standard_normal((30, 6)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(api.execute(art, x)),
+                               a @ np.asarray(x), atol=1e-4)
+
+
+def test_finalize_bakes_live_values(rng):
+    """Regression: finalizing a value-live handle (cache-hit or with_values)
+    must bake THAT handle's values, not the shared plan's."""
+    csr, a = random_csr(rng, 20, 24, 0.3)
+    x = jnp.asarray(rng.standard_normal((24, 6)).astype(np.float32))
+    cache = PlanCache(capacity=8)
+    m1 = api.sparse(csr, cache=cache)
+    csr5 = type(csr)(csr.indptr, csr.indices, csr.data * 5.0, csr.shape)
+    m2 = api.sparse(csr5, cache=cache)          # hit: live values
+    assert m2.plan is m1.plan
+    art = m2.finalize(n=6)
+    np.testing.assert_allclose(np.asarray(api.execute(art, x)),
+                               5 * (a @ np.asarray(x)), atol=1e-3)
+    art3 = m1.with_values(csr.data * 3).finalize(n=6)
+    np.testing.assert_allclose(np.asarray(api.execute(art3, x)),
+                               3 * (a @ np.asarray(x)), atol=1e-3)
+    # the shared builder's own artifact is untouched
+    np.testing.assert_allclose(np.asarray(api.execute(m1.finalize(n=6), x)),
+                               a @ np.asarray(x), atol=1e-4)
+
+
+def test_shard_via_method_and_use_mesh(rng):
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(jax.device_count(), 1)
+    csr, a = random_csr(rng, 32, 30, 0.3)
+    x = jnp.asarray(rng.standard_normal((30, 6)).astype(np.float32))
+    ref = a @ np.asarray(x)
+    cache = PlanCache(capacity=8)
+    m = api.sparse(csr, cache=cache)
+    ms = m.shard(mesh)
+    assert ms.backend == "sharded"
+    np.testing.assert_allclose(np.asarray(ms @ x), ref, atol=1e-3)
+    with api.use_mesh(mesh):
+        m_scoped = api.sparse(csr, cache=cache)
+        assert m_scoped.backend == "sharded"
+        np.testing.assert_allclose(np.asarray(m_scoped @ x), ref, atol=1e-3)
+        # scoped plan and method plan share the cache entry
+        assert m_scoped.plan is ms.plan
+    with pytest.raises(ValueError, match="mesh"):
+        m.shard()
+
+
+def test_use_backend_scope(rng):
+    csr, a = random_csr(rng, 20, 24, 0.3)
+    with api.use_backend("pallas"):
+        m = api.sparse(csr, cache=False)
+        assert m.backend == "pallas"
+    m2 = api.sparse(csr, cache=False)
+    assert m2.backend != "pallas" or jax.default_backend() == "tpu"
+    # the scope also steers execute_pattern's default resolution
+    bal = m2.plan.substrate("balanced")
+    x = jnp.asarray(rng.standard_normal((24, 4)).astype(np.float32))
+    with api.use_backend("xla"):
+        y = api.pattern_matmul(bal.rows, bal.cols, bal.vals, bal.shape, x)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=1e-3)
+
+
+def test_train_step_sparse_backend_scope(rng):
+    """TrainConfig.sparse_backend pins kernels for the whole traced step."""
+    from repro.train import OptConfig, TrainConfig, init_state, make_train_step
+    from repro.core import registry
+
+    seen = []
+
+    def loss_fn(params, batch):
+        seen.append(registry.default_backend())
+        return (params["w"] ** 2).sum(), {}
+
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-2), sparse_backend="xla")
+    step = make_train_step(loss_fn, tcfg)
+    state = init_state({"w": jnp.ones(3)}, tcfg)
+    state, metrics = step(state, {})
+    assert seen and all(b == "xla" for b in seen)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: thin aliases over the facade, loud and parity-true
+# ---------------------------------------------------------------------------
+
+def test_shims_warn_and_match_facade(rng):
+    from repro.core import PreparedMatrix, adaptive_spmm
+    from repro.kernels import spmm as kernels_spmm
+    csr, a = random_csr(rng, 20, 20, 0.25)
+    x = jnp.asarray(rng.standard_normal((20, 3)).astype(np.float32))
+    facade = np.asarray(api.sparse(csr, cache=False).matmul(x, impl="nb_sr"))
+
+    with pytest.warns(DeprecationWarning, match="sparse"):
+        prep = PreparedMatrix.from_csr(csr, tile=16)
+    assert prep._plan.built_substrates == ()         # still lazy
+    with pytest.warns(DeprecationWarning, match="repro.api.sparse"):
+        y = adaptive_spmm(prep, x, impl="nb_sr")
+    np.testing.assert_allclose(np.asarray(y), facade, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=1e-4)
+
+    with pytest.warns(DeprecationWarning, match="repro.api.sparse"):
+        y2 = kernels_spmm(prep, x, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), a @ np.asarray(x), atol=2e-3)
+    # legacy accessors still alive on the wrapper
+    assert prep.stats.nnz == csr.nnz
+    assert prep.balanced is prep._plan.substrate("balanced")
+
+
+# ---------------------------------------------------------------------------
+# thresholds hardening (satellite): numeric bounds get warn-and-fallback
+# ---------------------------------------------------------------------------
+
+def test_thresholds_numeric_validation(tmp_path, monkeypatch):
+    from repro.core.selector import (THRESHOLDS_ENV, SelectorThresholds,
+                                     default_thresholds, load_thresholds)
+    bad_cases = {
+        "negative_cv.json": {"version": 1, "n_threshold": 4,
+                             "pr_avg_row": 32.0, "sr_cv": 0.5,
+                             "partition_cv": -1.0},
+        "nan.json": '{"version": 1, "n_threshold": 4, "pr_avg_row": NaN, '
+                    '"sr_cv": 0.5}',
+        "inf.json": '{"version": 1, "n_threshold": 4, "pr_avg_row": 32.0, '
+                    '"sr_cv": Infinity}',
+        "neg_n.json": {"version": 1, "n_threshold": -2, "pr_avg_row": 32.0,
+                       "sr_cv": 0.5},
+    }
+    for fname, payload in bad_cases.items():
+        path = tmp_path / fname
+        path.write_text(payload if isinstance(payload, str)
+                        else json.dumps(payload))
+        with pytest.raises(ValueError):
+            load_thresholds(str(path))
+        monkeypatch.setenv(THRESHOLDS_ENV, str(path))
+        with pytest.warns(UserWarning, match="could not load"):
+            assert default_thresholds() == SelectorThresholds()
+
+
+def test_thresholds_presharding_roundtrip(tmp_path):
+    """A pre-sharding calibration (no partition_cv) loads with the default,
+    and a save→load round trip preserves it."""
+    from repro.core.selector import (SelectorThresholds, load_thresholds,
+                                     save_thresholds)
+    pre = {"version": 1, "n_threshold": 8, "pr_avg_row": 16.0, "sr_cv": 1.5}
+    path = tmp_path / "pre_sharding.json"
+    path.write_text(json.dumps(pre))
+    th = load_thresholds(str(path))
+    assert th == SelectorThresholds(n_threshold=8, pr_avg_row=16.0, sr_cv=1.5,
+                                    partition_cv=1.0)
+    out = tmp_path / "roundtrip.json"
+    save_thresholds(th, str(out))
+    assert load_thresholds(str(out)) == th
+    assert json.loads(out.read_text())["partition_cv"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# CI boundary lint + calibration
+# ---------------------------------------------------------------------------
+
+def test_api_boundary_lint_is_clean():
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    proc = subprocess.run([sys.executable,
+                           str(root / "tools" / "check_api_boundary.py")],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_api_boundary_lint_catches_violations(tmp_path):
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "tools"))
+    try:
+        import check_api_boundary as lint
+    finally:
+        sys.path.pop(0)
+    (tmp_path / "benchmarks").mkdir()
+    (tmp_path / "benchmarks" / "rogue.py").write_text(
+        "from repro.core.plan import execute\n"
+        "from repro.core import (rmat,\n    plan)\n")
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "ok.py").write_text(
+        "from repro.core.plan import execute\n")
+    violations = lint.check(tmp_path)
+    assert len(violations) == 2                    # both rogue imports, not ok.py
+    assert all("rogue.py" in v for v in violations)
+
+
+def test_calibrate_backend_saves_loadable_thresholds(rng, tmp_path):
+    from repro.core import rmat
+    from repro.core.selector import load_thresholds
+    path = str(tmp_path / "cal.json")
+    mats = {"tiny": rmat(6, 4, seed=0)}
+    th, report = api.calibrate_backend(
+        save_to=path, matrices=mats, ns=(1,), repeats=1,
+        n_grid=(4,), avg_grid=(32.0,), cv_grid=(0.5,))
+    assert load_thresholds(path) == th
+    assert report["geomean_slowdown_vs_oracle"] >= 1.0
+
+
+def test_driver_background_calibration(tmp_path):
+    """DriverConfig.calibrate_to fires the facade job once, in background."""
+    from repro.runtime import DriverConfig, TrainDriver
+
+    calls = []
+
+    def fake_calibrate(save_to=None, **kw):
+        calls.append(save_to)
+        with open(save_to, "w") as f:
+            f.write('{"version": 1, "n_threshold": 4, "pr_avg_row": 32.0, '
+                    '"sr_cv": 0.5}')
+
+    import repro.api as api_mod
+    orig = api_mod.calibrate_backend
+    api_mod.calibrate_backend = fake_calibrate
+    try:
+        cal_path = str(tmp_path / "auto_cal.json")
+        step = lambda state, batch: (state, {"loss": jnp.zeros(())})
+        d = TrainDriver(DriverConfig(total_steps=2, checkpoint_every=10,
+                                     checkpoint_dir=str(tmp_path / "ckpt"),
+                                     calibrate_to=cal_path),
+                        step, lambda i: {})
+        d.run({"x": jnp.zeros(2)})
+        d.wait_calibration(timeout=10)
+        assert calls == [cal_path]
+        # a second run sees the file and does not recalibrate
+        d2 = TrainDriver(DriverConfig(total_steps=2, checkpoint_every=10,
+                                      checkpoint_dir=str(tmp_path / "ckpt2"),
+                                      calibrate_to=cal_path),
+                         step, lambda i: {})
+        d2.run({"x": jnp.zeros(2)})
+        d2.wait_calibration(timeout=10)
+        assert calls == [cal_path]
+    finally:
+        api_mod.calibrate_backend = orig

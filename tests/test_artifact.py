@@ -1,0 +1,180 @@
+"""PlanArtifact acceptance: pytree round-trip, jit/scan transit, execute and
+gradient parity with the eager builder on every backend, and the
+equal-topology → one-compiled-executable contract."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import PlanArtifact, PlanBuilder, csr_from_dense, execute, plan
+from repro.launch.mesh import make_local_mesh
+
+from conftest import random_csr
+
+
+# ---------------------------------------------------------------------------
+# pytree round-trip + transformation transit
+# ---------------------------------------------------------------------------
+
+def test_artifact_tree_flatten_roundtrip(rng):
+    csr, a = random_csr(rng, 24, 30, 0.3)
+    art = plan(csr).finalize(8)
+    leaves, treedef = jax.tree_util.tree_flatten(art)
+    assert len(leaves) >= 1 and all(hasattr(l, "dtype") for l in leaves)
+    art2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert art2.meta == art.meta
+    x = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(execute(art, x)),
+                                  np.asarray(execute(art2, x)))
+
+
+def test_artifact_passes_through_jit_and_scan_unchanged(rng):
+    csr, a = random_csr(rng, 24, 30, 0.3)
+    art = plan(csr).finalize(8)
+    x = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+    ref = a @ np.asarray(x)
+
+    # jit argument
+    f = jax.jit(lambda A, xx: execute(A, xx))
+    np.testing.assert_allclose(np.asarray(f(art, x)), ref, atol=1e-4)
+
+    # identity through jit: leaves come back unchanged
+    ident = jax.jit(lambda A: A)(art)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(art),
+                      jax.tree_util.tree_leaves(ident)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    # scan carry
+    def body(carry, _):
+        A, acc = carry
+        return (A, acc + execute(A, x)), None
+
+    (art_out, acc), _ = jax.lax.scan(body, (art, jnp.zeros((24, 8))), None,
+                                     length=3)
+    np.testing.assert_allclose(np.asarray(acc), 3 * ref, atol=1e-3)
+    assert art_out.meta == art.meta
+
+
+def test_artifact_leaves_are_donatable(rng):
+    """Donating the artifact argument must compose: leaves are plain device
+    arrays, so ``donate_argnums`` accepts them (unused donations warn, not
+    fail) and the result is unaffected."""
+    import warnings
+    csr, a = random_csr(rng, 24, 30, 0.3)
+    x = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+    art = plan(csr).finalize(8)
+    f = jax.jit(lambda A, xx: execute(A, xx), donate_argnums=(0,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")          # "donated buffers not used"
+        y = f(art, x)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=1e-4)
+
+
+def test_equal_topology_artifacts_share_compiled_executable(rng):
+    csr, a = random_csr(rng, 32, 40, 0.2)
+    csr2 = type(csr)(csr.indptr, csr.indices, csr.data * 2.0, csr.shape)
+    art1 = plan(csr).finalize(8)
+    art2 = plan(csr2).finalize(8)
+    assert art1.meta == art2.meta
+    assert (jax.tree_util.tree_structure(art1)
+            == jax.tree_util.tree_structure(art2))
+    f = jax.jit(lambda A, xx: execute(A, xx))
+    x = jnp.asarray(rng.standard_normal((40, 8)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(f(art1, x)), a @ np.asarray(x),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f(art2, x)), 2 * (a @ np.asarray(x)),
+                               atol=1e-4)
+    assert f._cache_size() == 1          # one trace for both topologies
+
+
+def test_different_pattern_artifacts_do_not_collide(rng):
+    csr, _ = random_csr(rng, 32, 40, 0.2)
+    other, _ = random_csr(rng, 32, 40, 0.3)
+    assert plan(csr).finalize(8).meta.topology != plan(other).finalize(8).meta.topology
+
+
+# ---------------------------------------------------------------------------
+# execute + grad parity per backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas", "bsr"])
+def test_artifact_matches_eager_plan_and_grads(rng, backend):
+    csr, a = random_csr(rng, 40, 48, 0.2)
+    p = plan(csr, backend=backend)
+    art = p.finalize(8)
+    x = jnp.asarray(rng.standard_normal((48, 8)).astype(np.float32))
+    y_eager = np.asarray(execute(p, x, interpret=True))
+    y_art = np.asarray(execute(art, x, interpret=True))
+    np.testing.assert_allclose(y_art, y_eager, atol=1e-5)
+    np.testing.assert_allclose(y_art, a @ np.asarray(x), atol=2e-3)
+
+    def loss(fn_target, v, xx):
+        return (execute(fn_target, xx, vals=v, interpret=True) ** 2).sum()
+
+    gv_e, gx_e = jax.grad(lambda v, xx: loss(p, v, xx), argnums=(0, 1))(csr.data, x)
+    gv_a, gx_a = jax.grad(lambda v, xx: loss(art, v, xx), argnums=(0, 1))(csr.data, x)
+    np.testing.assert_allclose(np.asarray(gv_a), np.asarray(gv_e), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx_a), np.asarray(gx_e), atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["row", "nnz"])
+def test_sharded_artifact_matches_eager_plan_and_grads(rng, kind):
+    mesh = make_local_mesh(jax.device_count(), 1)
+    csr, a = random_csr(rng, 33, 40, 0.25)
+    p = plan(csr, backend="sharded", mesh=mesh, shard_kind=kind, tile=16)
+    art = p.finalize(8)
+    x = jnp.asarray(rng.standard_normal((40, 8)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(execute(art, x)),
+                               np.asarray(execute(p, x)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(execute(art, x)), a @ np.asarray(x),
+                               atol=1e-3)
+    gv_e = jax.grad(lambda v: (execute(p, x, vals=v) ** 2).sum())(csr.data)
+    gv_a = jax.grad(lambda v: (execute(art, x, vals=v) ** 2).sum())(csr.data)
+    np.testing.assert_allclose(np.asarray(gv_a), np.asarray(gv_e), atol=1e-4)
+    # and through jit, as a traced argument
+    f = jax.jit(lambda A, xx: execute(A, xx))
+    np.testing.assert_allclose(np.asarray(f(art, x)), a @ np.asarray(x),
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+def test_artifact_missing_substrate_is_a_clear_error(rng):
+    csr, _ = random_csr(rng, 24, 30, 0.3)
+    art = plan(csr).finalize(impl="nb_pr")       # balanced substrate only
+    x = jnp.asarray(rng.standard_normal((30, 64)).astype(np.float32))
+    # N=64 selects a sequential kernel; rs_* needs the ell substrate
+    with pytest.raises(ValueError, match="finalize"):
+        execute(art, x, impl="rs_sr")
+
+
+def test_artifact_backend_is_frozen(rng):
+    csr, _ = random_csr(rng, 24, 30, 0.3)
+    art = plan(csr, backend="xla").finalize(8)
+    x = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="frozen"):
+        execute(art, x, backend="pallas")
+
+
+def test_full_coverage_finalize_serves_all_kernels(rng):
+    csr, a = random_csr(rng, 24, 30, 0.3)
+    art = plan(csr).finalize()                   # no n/impl: whole 2x2 space
+    x = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+    for impl in ("rs_sr", "rs_pr", "nb_sr", "nb_pr"):
+        np.testing.assert_allclose(np.asarray(execute(art, x, impl=impl)),
+                                   a @ np.asarray(x), atol=1e-3)
+
+
+def test_builder_alias_and_finalize_vals_guard(rng):
+    csr, _ = random_csr(rng, 24, 30, 0.3)
+    p = plan(csr)
+    assert isinstance(p, PlanBuilder)
+    from repro.core import SparsePlan
+    assert SparsePlan is PlanBuilder
+    art = p.finalize(8)
+    assert isinstance(art, PlanArtifact)
+    x = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="nonzeros"):
+        execute(art, x, vals=jnp.ones(csr.nnz + 1))

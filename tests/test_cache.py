@@ -1,0 +1,221 @@
+"""PlanCache: LRU bound + counters, topology-key discrimination, facade
+value-correctness on pattern-equal hits, and the serve-engine regression —
+decode ticks with a repeated expert topology build zero new plans."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import csr_from_dense
+from repro.core.cache import (PlanCache, cached_plan, mesh_signature,
+                              pattern_fingerprint, plan_key)
+
+from conftest import random_csr
+
+
+# ---------------------------------------------------------------------------
+# counters under the LRU bound
+# ---------------------------------------------------------------------------
+
+def test_lru_counters_hit_miss_eviction():
+    cache = PlanCache(capacity=2)
+    builds = []
+
+    def build(tag):
+        def fn():
+            builds.append(tag)
+            return tag
+        return fn
+
+    assert cache.get_or_build("a", build("a")) == "a"   # miss + build
+    assert cache.get_or_build("a", build("a!")) == "a"  # hit
+    assert cache.get_or_build("b", build("b")) == "b"   # miss
+    assert cache.get_or_build("c", build("c")) == "c"   # miss → evicts "a"
+    assert cache.stats() == {"hits": 1, "misses": 3, "evictions": 1,
+                             "builds": 3, "size": 2, "capacity": 2}
+    assert "a" not in cache and "b" in cache
+    # touching "b" promotes it: next insert evicts "c", not "b"
+    cache.get_or_build("b", build("b!"))
+    cache.get_or_build("d", build("d"))
+    assert "b" in cache and "c" not in cache
+    assert builds == ["a", "b", "c", "d"]
+    cache.reset_stats()
+    assert cache.stats()["hits"] == 0 and len(cache) == 2
+
+
+def test_capacity_validation_and_clear():
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+    cache = PlanCache(capacity=4)
+    cache.put("k", 1)
+    cache.clear()
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# key discrimination
+# ---------------------------------------------------------------------------
+
+def test_same_shape_different_pattern_misses(rng):
+    """Topology-key collision guard: equal shapes and nnz but different
+    sparsity patterns must produce different keys (and so cache misses)."""
+    a = np.zeros((16, 16), np.float32)
+    b = np.zeros((16, 16), np.float32)
+    a[0, :8] = 1.0
+    b[1, 8:] = 1.0                                   # same shape, same nnz
+    csr_a, csr_b = csr_from_dense(a), csr_from_dense(b)
+    assert pattern_fingerprint(csr_a) != pattern_fingerprint(csr_b)
+    cache = PlanCache(capacity=8)
+    p_a = cached_plan(csr_a, cache=cache, backend="xla")
+    p_b = cached_plan(csr_b, cache=cache, backend="xla")
+    assert p_a is not p_b
+    assert cache.stats()["misses"] == 2 and cache.stats()["hits"] == 0
+
+
+def test_same_pattern_hits_and_key_components(rng):
+    csr, _ = random_csr(rng, 20, 24, 0.3)
+    csr2 = type(csr)(csr.indptr, csr.indices, csr.data * 5.0, csr.shape)
+    cache = PlanCache(capacity=8)
+    p1 = cached_plan(csr, cache=cache, backend="xla")
+    p2 = cached_plan(csr2, cache=cache, backend="xla")   # values ≠, pattern =
+    assert p1 is p2
+    assert cache.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                             "builds": 1, "size": 1, "capacity": 8}
+    # backend is part of the key
+    p3 = cached_plan(csr, cache=cache, backend="pallas")
+    assert p3 is not p1 and cache.stats()["builds"] == 2
+    # thresholds version is part of the key
+    from repro.core import SelectorThresholds
+    p4 = cached_plan(csr, cache=cache, backend="xla",
+                     thresholds=SelectorThresholds(n_threshold=16))
+    assert p4 is not p1 and cache.stats()["builds"] == 3
+    assert mesh_signature(None) is None
+    k1 = plan_key(csr, backend="xla")
+    k2 = plan_key(csr2, backend="xla")
+    assert k1 == k2
+
+
+def test_facade_hit_is_value_correct(rng):
+    """A pattern-equal cache hit must not serve the other matrix's values."""
+    from repro.api import sparse
+    csr, a = random_csr(rng, 20, 24, 0.3)
+    csr2 = type(csr)(csr.indptr, csr.indices, csr.data * 5.0, csr.shape)
+    cache = PlanCache(capacity=8)
+    x = jnp.asarray(rng.standard_normal((24, 6)).astype(np.float32))
+    m1 = sparse(csr, cache=cache)
+    m2 = sparse(csr2, cache=cache)
+    assert m1.plan is m2.plan                        # one plan, shared
+    np.testing.assert_allclose(np.asarray(m1 @ x), a @ np.asarray(x), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m2 @ x), 5 * (a @ np.asarray(x)),
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# serve-engine regression: repeated expert topology ⇒ zero new plans per tick
+# ---------------------------------------------------------------------------
+
+def _moe_engine(slots=3):
+    from repro.configs import get_smoke
+    from repro.models import Model
+    from repro.serve import ServeEngine
+    cfg = get_smoke("olmoe-1b-7b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(model, params, slots=slots, max_len=32)
+
+
+def test_serve_engine_repeated_topology_builds_once():
+    from repro.serve import Request
+    eng = _moe_engine()
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new=6,
+                           topology=(0, 3)))
+    eng.tick()
+    first = eng.plan_cache.stats()
+    assert first["builds"] == 1                      # first tick plans once
+    builds_per_tick = []
+    while any(a is not None for a in eng.active) and eng.ticks < 30:
+        eng.tick()
+        builds_per_tick.append(eng.plan_cache.stats()["builds"])
+    assert eng.ticks > 2
+    # zero new plan constructions after the first tick
+    assert all(b == first["builds"] for b in builds_per_tick)
+    assert eng.plan_cache.stats()["hits"] >= len(builds_per_tick)
+
+
+def test_serve_engine_packs_lanes_by_topology():
+    """Mixed-topology batches canonicalize by sort: the same *set* of lane
+    topologies hits one cached batch plan regardless of arrival order, and
+    outputs still match the per-request greedy oracle shape-wise."""
+    from repro.serve import Request
+    eng = _moe_engine()
+    topos = [(5, 7), (0, 3), (5, 7)]
+    for i, t in enumerate(topos):
+        eng.submit(Request(rid=i, prompt=[4, 5 + i], max_new=5, topology=t))
+    done = eng.run_until_done()
+    assert all(r.done for r in done)
+    s = eng.plan_cache.stats()
+    # all ticks share one packed batch topology → a single build
+    assert s["builds"] == 1, s
+    assert s["hits"] == eng.ticks - 1
+
+
+def test_serve_engine_without_topology_unchanged():
+    """Requests without a pinned topology take the router-driven decode (the
+    pre-PR path) and never touch the plan cache."""
+    from repro.serve import Request
+    eng = _moe_engine(slots=2)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new=4))
+    done = eng.run_until_done()
+    assert all(r.done for r in done)
+    assert eng.plan_cache.stats()["builds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# pinned dispatch parity with the router-driven spmm path
+# ---------------------------------------------------------------------------
+
+def test_pinned_dispatch_matches_moe_spmm(rng):
+    from repro.models import moe
+    from repro.models.config import MoEConfig
+    cfg = MoEConfig(num_experts=8, top_k=2, d_ff_expert=16,
+                    capacity_factor=4.0)
+    t, d = 6, 32
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    p = {k: jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.1)
+         for k, s in [("w_router", (d, 8)), ("w_up", (8, d, 16)),
+                      ("w_gate", (8, d, 16)), ("w_down", (8, 16, d))]}
+    y_ref, _ = moe.moe_spmm(p, x, cfg)
+    _, idx, _ = moe.router(p, x, cfg)
+    topo = tuple(tuple(int(v) for v in row) for row in np.asarray(idx))
+    cache = PlanCache(capacity=8)
+    pinned = moe.dispatch_plans(topo, cfg, cache=cache, n_hint=d)
+    y_pin, _ = moe.moe_spmm_pinned(p, x, cfg, pinned)
+    np.testing.assert_allclose(np.asarray(y_pin), np.asarray(y_ref), atol=1e-5)
+    # repeat fetch: pure cache hit, same bundle object
+    again = moe.dispatch_plans(topo, cfg, cache=cache, n_hint=d)
+    assert again is pinned
+    assert cache.stats()["builds"] == 1 and cache.stats()["hits"] == 1
+
+
+def test_pinned_dispatch_invalidates_on_recalibration(rng, tmp_path,
+                                                     monkeypatch):
+    """Thresholds are part of the dispatch-plan key: a recalibration (the
+    calibrate-on-first-serve flow repoints $REPRO_THRESHOLDS) must rebuild,
+    not serve artifacts baked with stale selector decisions."""
+    from repro.models import moe
+    from repro.models.config import MoEConfig
+    from repro.core.selector import (THRESHOLDS_ENV, SelectorThresholds,
+                                     save_thresholds)
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=8,
+                    capacity_factor=4.0)
+    topo = ((0, 1), (2, 3))
+    cache = PlanCache(capacity=8)
+    first = moe.dispatch_plans(topo, cfg, cache=cache, n_hint=8)
+    path = str(tmp_path / "recal.json")
+    save_thresholds(SelectorThresholds(n_threshold=64), path)
+    monkeypatch.setenv(THRESHOLDS_ENV, path)
+    second = moe.dispatch_plans(topo, cfg, cache=cache, n_hint=8)
+    assert second is not first
+    assert cache.stats()["builds"] == 2

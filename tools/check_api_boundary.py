@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""API-boundary lint: the plan/execute engine room is internal.
+
+Everything outside ``src/repro/`` and ``tests/`` must go through the
+``repro.api`` facade — direct imports of ``repro.core.plan`` (or of its
+front-door names via ``repro.core``) from benchmarks, examples, tools, or
+docs snippets fail CI.  Run from the repo root::
+
+    python tools/check_api_boundary.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+#: directories whose code may reach into the engine room
+ALLOWED_PREFIXES = ("src/repro/", "tests/")
+
+#: imports that pierce the facade
+BANNED = (
+    re.compile(r"^\s*from\s+repro\.core\.plan\s+import\b"),
+    re.compile(r"^\s*import\s+repro\.core\.plan\b"),
+)
+
+
+def check(root: pathlib.Path) -> list[str]:
+    violations = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel.startswith(ALLOWED_PREFIXES) or "/." in f"/{rel}":
+            continue
+        text = path.read_text()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for pat in BANNED:
+                if pat.match(line):
+                    violations.append(f"{rel}:{lineno}: {line.strip()}")
+        # "from repro.core import (...)" lists may span lines; scan the whole
+        # parenthesized statement for the re-exported front-door names
+        for m in re.finditer(
+                r"from\s+repro\.core\s+import\s*(\([^)]*\)|[^\n]*)", text):
+            names = re.split(r"[\s,()]+", m.group(1))
+            bad = sorted({n for n in names if n in (
+                "plan", "execute", "execute_pattern", "PlanBuilder",
+                "SparsePlan")})
+            if bad:
+                lineno = text[:m.start()].count("\n") + 1
+                violations.append(
+                    f"{rel}:{lineno}: imports {', '.join(bad)} from "
+                    "repro.core (use repro.api)")
+    return violations
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    violations = check(root)
+    if violations:
+        print("API-boundary violations (use the repro.api facade):",
+              file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print("api boundary clean: repro.core.plan stays inside src/repro and tests")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
