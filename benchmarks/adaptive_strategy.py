@@ -10,15 +10,15 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api import SelectorThresholds, calibrate, sparse
-from repro.core import LOGICAL_KERNELS, rmat_suite, rmat_suite_small
+from repro.core import LOGICAL_KERNELS
 from repro.core.selector import select_kernel
-from .common import csv_row, geomean, time_fn
+from .common import csv_row, geomean, pick_suite, time_fn
 
 NS = (1, 2, 4, 8, 32, 128)
 
 
 def run(full: bool = False, save_thresholds_to: str | None = None):
-    suite = rmat_suite() if full else rmat_suite_small()
+    suite = pick_suite(full)
     rng = np.random.default_rng(0)
     mats = {k: sparse(v, tile=512) for k, v in suite.items()}
     xs = {(name, n): jnp.asarray(rng.standard_normal((m.shape[1], n)).astype(np.float32))

@@ -1,4 +1,10 @@
-"""Benchmark timing utilities (CPU wall-clock of jit-compiled XLA code)."""
+"""Benchmark timing utilities (CPU wall-clock of jit-compiled XLA code).
+
+``--quick`` mode (``benchmarks.run --quick``, the CI smoke job) flips the
+module-level ``QUICK`` flag: suites shrink to two tiny matrices and timing
+loops to one iteration, so every benchmark entry point executes end-to-end
+in seconds — rot protection, not measurement.
+"""
 from __future__ import annotations
 
 import time
@@ -6,9 +12,29 @@ import time
 import jax
 import numpy as np
 
+#: smoke mode: tiny suites, single-iteration timing (set by benchmarks.run)
+QUICK = False
+
+
+def set_quick(on: bool = True) -> None:
+    global QUICK
+    QUICK = on
+
+
+def pick_suite(full: bool = False) -> dict:
+    """The R-MAT suite at the requested fidelity: paper-sized (``--full``),
+    the reduced CI default, or two tiny matrices under ``--quick``."""
+    from repro.core import rmat, rmat_suite, rmat_suite_small
+    if QUICK:
+        return {"tiny_uniform": rmat(5, 4, a=0.25, b=0.25, c=0.25, seed=0),
+                "tiny_skewed": rmat(5, 4, seed=1)}
+    return rmat_suite() if full else rmat_suite_small()
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median seconds per call of an already-traceable fn(*args)."""
+    if QUICK:
+        warmup, iters = 1, 1
     jitted = jax.jit(fn) if not hasattr(fn, "lower") else fn
     out = jitted(*args)
     jax.block_until_ready(out)
@@ -29,3 +55,18 @@ def geomean(xs) -> float:
 
 def csv_row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def bytes_derived(flops: int, bytes_moved: int, seconds: float | None = None,
+                  extra: str = "") -> str:
+    """Derived-column text reporting modeled traffic next to wall time:
+    bytes moved, arithmetic intensity (flops/byte), and — when a time is
+    given — the implied effective bandwidth.  Kernel wins that are traffic
+    wins show up here as AI movement even when wall time is interpret-mode
+    noise."""
+    parts = [f"bytes={bytes_moved}", f"ai={flops / max(bytes_moved, 1):.3f}"]
+    if seconds is not None and seconds > 0:
+        parts.append(f"gbps={bytes_moved / seconds / 1e9:.2f}")
+    if extra:
+        parts.append(extra)
+    return "_".join(parts)

@@ -15,12 +15,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api import sparse
-from repro.core import rmat_suite, rmat_suite_small
-from .common import csv_row, geomean, time_fn
+from .common import csv_row, geomean, pick_suite, time_fn
 
 
 def run(full: bool = False, n: int = 128):
-    suite = rmat_suite() if full else rmat_suite_small()
+    suite = pick_suite(full)
     rng = np.random.default_rng(0)
     rows, speedups = [], []
     for name, csr in suite.items():

@@ -11,14 +11,14 @@ import jax.numpy as jnp
 from jax.experimental import sparse as jsparse
 
 from repro.api import sparse
-from repro.core import LOGICAL_KERNELS, rmat_suite, rmat_suite_small
-from .common import csv_row, geomean, time_fn
+from repro.core import LOGICAL_KERNELS
+from .common import csv_row, geomean, pick_suite, time_fn
 
 NS = (1, 2, 4, 8, 32, 128)
 
 
 def run(full: bool = False):
-    suite = rmat_suite() if full else rmat_suite_small()
+    suite = pick_suite(full)
     rng = np.random.default_rng(0)
     rows = []
     per_n_speedup = {n: [] for n in NS}

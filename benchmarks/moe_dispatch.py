@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.models.config import MoEConfig
 from repro.models.moe import capacity, moe_onehot, moe_sort, select_dispatch
+from . import common
 from .common import csv_row, time_fn
 
 
@@ -26,7 +27,7 @@ def run():
         "w_up": jnp.asarray(rng.standard_normal((cfg.num_experts, d, cfg.d_ff_expert)).astype(np.float32) * 0.02),
         "w_down": jnp.asarray(rng.standard_normal((cfg.num_experts, cfg.d_ff_expert, d)).astype(np.float32) * 0.02),
     }
-    for t in (64, 256, 1024, 4096):
+    for t in ((64,) if common.QUICK else (64, 256, 1024, 4096)):
         x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
         t_one = time_fn(lambda: moe_onehot(params, x, cfg)[0])
         t_sort = time_fn(lambda: moe_sort(params, x, cfg)[0])

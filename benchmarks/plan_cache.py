@@ -23,6 +23,7 @@ from repro.core import rmat
 from repro.models.config import MoEConfig
 from repro.models.moe import dispatch_plans
 
+from . import common
 from .common import csv_row
 
 
@@ -35,12 +36,12 @@ def _tick_time(fn, ticks: int) -> float:
 
 def run(full: bool = False):
     rows = []
-    ticks = 100 if full else 30
+    ticks = 5 if common.QUICK else (100 if full else 30)
 
     # --- CSR planning: one recurring matrix topology per tick --------------
     # timed region is the *offline* half only (stats + substrate + prep);
     # the online execute is identical either way
-    csr = rmat(10 if full else 8, 8, seed=3)
+    csr = rmat(5 if common.QUICK else (10 if full else 8), 8, seed=3)
 
     t_cold = _tick_time(lambda i: sparse(csr, cache=False, n_hint=8), ticks)
     warm_cache = PlanCache(capacity=16)

@@ -58,9 +58,18 @@ def run():
         for a in ok:
             r = a["roofline"]
             dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            # modeled bytes + arithmetic intensity ride next to the wall-
+            # clock term so traffic regressions (and wins like the fused
+            # NB kernels, DESIGN.md §6) are visible as AI movement
+            derived = f"bottleneck={r['bottleneck']}"
+            flops = r.get("flops_global", 0.0)
+            byts = r.get("bytes_global", 0.0)
+            if byts:
+                derived += (f"_bytes={byts:.3e}"
+                            f"_ai={flops / byts:.2f}")
             rows.append(csv_row(
                 f"roofline/{a['arch']}/{a['cell']}/{mesh}", dom * 1e6,
-                f"bottleneck={r['bottleneck']}"))
+                derived))
         rows.append(csv_row(f"roofline/{mesh}_cells_ok", 0.0, str(len(ok))))
     return rows
 

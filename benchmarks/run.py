@@ -1,6 +1,9 @@
 """Benchmark entry point: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses the paper-sized
-R-MAT suite (slower); default is the reduced CI suite."""
+R-MAT suite (slower); default is the reduced CI suite; ``--quick`` is the
+CI smoke mode — tiny shapes, single-iteration timing, Pallas in interpret
+mode — meant to prove every benchmark entry point still runs, not to
+measure anything."""
 from __future__ import annotations
 
 import argparse
@@ -11,13 +14,19 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: tiny suites, 1 timing iteration")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
+    from . import common
+    if args.quick:
+        common.set_quick(True)
+
     from . import (adaptive_strategy, csc_ablation, fig6_kernel_perf,
                    moe_dispatch, plan_cache, roofline, sharded_spmm,
-                   vdl_ablation, vsr_ablation)
+                   spill_fusion, vdl_ablation, vsr_ablation)
 
     benches = {
         "plan_cache": lambda: plan_cache.run(args.full),
@@ -31,6 +40,7 @@ def main() -> None:
         "moe_dispatch": moe_dispatch.run,
         "roofline": roofline.run,
         "sharded_spmm": lambda: sharded_spmm.run(args.full),
+        "spill_fusion": lambda: spill_fusion.run(args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

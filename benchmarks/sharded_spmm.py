@@ -20,6 +20,7 @@ from repro.api import sparse
 from repro.core import matrix_stats, rmat
 from repro.core.selector import select_partition
 from repro.launch.mesh import make_local_mesh
+from . import common
 from .common import csv_row, time_fn
 
 SKEWS = {"uniform": (0.25, 0.25, 0.25), "mild": (0.45, 0.22, 0.22),
@@ -27,7 +28,7 @@ SKEWS = {"uniform": (0.25, 0.25, 0.25), "mild": (0.45, 0.22, 0.22),
 
 
 def run(full: bool = False, n: int = 8):
-    scale, ef = (12, 16) if full else (8, 8)
+    scale, ef = (5, 4) if common.QUICK else ((12, 16) if full else (8, 8))
     mesh = make_local_mesh(jax.device_count(), 1)
     rng = np.random.default_rng(0)
     rows = [csv_row(f"sharded_spmm/devices", float(jax.device_count()), "")]

@@ -1,0 +1,88 @@
+"""Spill-fusion ablation (DESIGN.md §6): fused vs spill-and-combine NB
+kernels, swept over R-MAT skew and dense width N.
+
+Three things per (matrix, N) cell:
+
+1. wall time of both boundary resolutions (interpret-mode numbers off-TPU
+   are correctness-grade; the modeled columns are the portable signal);
+2. **modeled HBM bytes** for each path (``repro.kernels.tune
+   .modeled_traffic``) and the resulting arithmetic intensity — the fused
+   path deletes the ``2·n_tiles·WIN·N`` partials round-trip at the cost of
+   re-streaming boundary-crossing tiles, so its AI strictly rises wherever
+   skew inflates WIN;
+3. PlanCache visibility of autotuned geometry: distinct geometries must key
+   distinct entries and a repeated geometry must hit.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.api import PlanCache, TileGeometry, sparse
+from repro.kernels import modeled_traffic, spmm_vsr, spmm_vsr_fused
+from . import common
+from .common import bytes_derived, csv_row, geomean, pick_suite, time_fn
+
+NS = (8, 128)
+
+
+def run(full: bool = False):
+    suite = pick_suite(full)
+    ns = (8,) if common.QUICK else NS
+    rng = np.random.default_rng(0)
+    rows = []
+    reductions = []
+    skew_reductions = []
+    for name, csr in suite.items():
+        m = sparse(csr, cache=False, backend="xla")  # plan only for substrate
+        bal = m.plan.substrate("balanced")
+        for n in ns:
+            x = jnp.asarray(rng.standard_normal((csr.shape[1], n))
+                            .astype(np.float32))
+            traffic = modeled_traffic(csr, n, geometry=TileGeometry(
+                tile=m.plan.tile))   # same quota the executing plan uses
+            t_fused = time_fn(lambda: spmm_vsr_fused(bal, x, interpret=True))
+            t_spill = time_fn(lambda: spmm_vsr(bal, x, interpret=True))
+            reductions.append(traffic["bytes_reduction"])
+            if "skew" in name:
+                skew_reductions.append(traffic["bytes_reduction"])
+            rows.append(csv_row(
+                f"spill_fusion/{name}/n{n}/fused", t_fused * 1e6,
+                bytes_derived(traffic["flops"], traffic["fused_bytes"],
+                              t_fused, f"visits={traffic['n_visits']}")))
+            rows.append(csv_row(
+                f"spill_fusion/{name}/n{n}/spill", t_spill * 1e6,
+                bytes_derived(traffic["flops"], traffic["spill_bytes"],
+                              t_spill, f"win={traffic['spill_win']}")))
+            rows.append(csv_row(
+                f"spill_fusion/{name}/n{n}/bytes_reduction", 0.0,
+                f"{traffic['bytes_reduction']:.2f}x"))
+
+    rows.append(csv_row("spill_fusion/geomean_bytes_reduction", 0.0,
+                        f"{geomean(reductions):.2f}"))
+    if skew_reductions:
+        rows.append(csv_row("spill_fusion/geomean_bytes_reduction_skewed", 0.0,
+                            f"{geomean(skew_reductions):.2f}"))
+
+    # --- autotuned geometry is visible in PlanCache keys -------------------
+    cache = PlanCache(capacity=16)
+    csr = next(iter(suite.values()))
+    g1 = TileGeometry(tile=256, wb=32, tile_n=128)
+    g2 = TileGeometry(tile=512, wb=64, tile_n=128)
+    sparse(csr, backend="xla", geometry=g1, cache=cache)
+    sparse(csr, backend="xla", geometry=g2, cache=cache)   # distinct entry
+    sparse(csr, backend="xla", geometry=g1, cache=cache)   # hit
+    s = cache.stats()
+    rows.append(csv_row(
+        "spill_fusion/geometry_cache", 0.0,
+        f"entries={s['size']}_hits={s['hits']}_builds={s['builds']}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

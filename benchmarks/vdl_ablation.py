@@ -15,12 +15,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api import sparse
-from repro.core import rmat_suite, rmat_suite_small, spmm_as_n_spmv
-from .common import csv_row, geomean, time_fn
+from repro.core import spmm_as_n_spmv
+from .common import csv_row, geomean, pick_suite, time_fn
 
 
 def run(full: bool = False, n: int = 2, backend: str = "xla"):
-    suite = rmat_suite() if full else rmat_suite_small()
+    suite = pick_suite(full)
     rng = np.random.default_rng(0)
     rows, speedups = [], []
     for name, csr in suite.items():
@@ -31,13 +31,11 @@ def run(full: bool = False, n: int = 2, backend: str = "xla"):
         x = jnp.asarray(rng.standard_normal((csr.shape[1], n)).astype(np.float32))
         if backend == "pallas":
             from repro.kernels import spmm_as_n_spmv_pallas
-            from repro.kernels.vsr import plan_windows
-            base, win = plan_windows(bal)
-            base = jnp.asarray(base)
+            # both sides run the fused boundary resolution (the registry
+            # default), so the ablation isolates VDL, not spill traffic
             t_vdl = time_fn(lambda: m.matmul(x, impl="nb_pr",
                                              backend="pallas"))
-            t_nspmv = time_fn(lambda: spmm_as_n_spmv_pallas(
-                bal, x, row_base=base, win=win))
+            t_nspmv = time_fn(lambda: spmm_as_n_spmv_pallas(bal, x))
         else:
             t_vdl = time_fn(lambda: m.matmul(x, impl="nb_pr"))
             t_nspmv = time_fn(lambda: spmm_as_n_spmv(bal, x))

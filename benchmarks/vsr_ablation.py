@@ -8,12 +8,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api import sparse
-from repro.core import LOGICAL_KERNELS, rmat_suite, rmat_suite_small
-from .common import csv_row, time_fn
+from repro.core import LOGICAL_KERNELS
+from .common import csv_row, pick_suite, time_fn
 
 
 def run(full: bool = False):
-    suite = rmat_suite() if full else rmat_suite_small()
+    suite = pick_suite(full)
     rows = []
     wins = {k: 0 for k in LOGICAL_KERNELS}
     win_stats = []

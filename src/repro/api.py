@@ -40,15 +40,17 @@ from repro.core.formats import CSR, csr_from_dense
 from repro.core.plan import (PlanArtifact, PlanBuilder, execute,
                              execute_pattern, plan)
 from repro.core.registry import backend_scope, default_backend
-from repro.core.selector import (SelectorThresholds, load_thresholds,
-                                 save_thresholds)
+from repro.core.selector import (SelectorThresholds, TileGeometry,
+                                 default_thresholds, geometry_key,
+                                 load_thresholds, save_thresholds)
 from repro.core.selector import calibrate as calibrate  # noqa: F401 (re-export)
 from repro.core.stats import MatrixStats
 
 __all__ = [
     "SparseMatrix", "sparse", "pattern_matmul", "use_backend", "use_mesh",
-    "calibrate", "calibrate_backend", "cache_stats", "clear_cache",
-    "PlanArtifact", "PlanBuilder", "PlanCache", "SelectorThresholds",
+    "calibrate", "calibrate_backend", "autotune_geometry", "cache_stats",
+    "clear_cache", "PlanArtifact", "PlanBuilder", "PlanCache",
+    "SelectorThresholds", "TileGeometry", "geometry_key",
     "execute", "save_thresholds", "load_thresholds",
 ]
 
@@ -191,6 +193,7 @@ class SparseMatrix:
                                thresholds=self._plan.thresholds,
                                tile=self._plan.tile,
                                bsr_block=self._plan.bsr_block,
+                               geometry=self._plan.geometry,
                                shard_axis=axis, shard_kind=kind,
                                inner_backend=inner_backend)
         return SparseMatrix(p, values=self._values, cache=self._cache)
@@ -211,6 +214,7 @@ class SparseMatrix:
             spec = p.shard_spec
             p = plan(csr, thresholds=p.thresholds, backend=p.backend,
                      tile=p.tile, bsr_block=p.bsr_block, mesh=p.mesh,
+                     geometry=p.geometry,
                      shard_axis=spec.axis if spec is not None else None,
                      shard_kind=spec.kind if spec is not None else None,
                      inner_backend=p.inner_backend)
@@ -238,9 +242,11 @@ def _plan_maybe_cached(csr: CSR, *, cache: PlanCache | None, **kw) -> PlanBuilde
 
 
 def sparse(a, *, backend: str | None = None, mesh=None,
-           thresholds: SelectorThresholds | None = None, tile: int = 512,
+           thresholds: SelectorThresholds | None = None,
+           tile: int | None = None,
            bsr_block: tuple = (8, 128), n_hint: int | None = None,
            shard_axis: str | None = None, shard_kind: str | None = None,
+           geometry: TileGeometry | None = None,
            cache: "PlanCache | bool | None" = True) -> SparseMatrix:
     """Build a first-class sparse operand from a CSR or a dense 2-D array.
 
@@ -249,13 +255,31 @@ def sparse(a, *, backend: str | None = None, mesh=None,
     re-plan): a hit whose baked values differ from ``a``'s returns a handle
     that streams its own values at execute time, so reuse is always
     value-correct.  ``backend``/``mesh`` default to the ``use_backend`` /
-    ``use_mesh`` scopes, then the platform default."""
+    ``use_mesh`` scopes, then the platform default.
+
+    ``geometry`` forces a Pallas ``TileGeometry``; by default the
+    thresholds' autotuned table (``autotune_geometry``) decides, and
+    ``tile=None`` takes the geometry's nnz quota.  Distinct geometries key
+    distinct cache entries (DESIGN.md §6)."""
     csr, values = _as_csr(a)
     if mesh is None:
         mesh, scoped_axis = scoped_mesh()
         shard_axis = shard_axis or scoped_axis
     resolved_backend = backend or ("sharded" if mesh is not None
                                    else default_backend())
+    if geometry is None:
+        # resolve the autotuned geometry here, with the caller's n_hint, so
+        # the cache keys on the *resolved* geometry (same bucket ⇒ same
+        # entry) rather than on the raw hint — plan() would otherwise only
+        # see n_hint=None through cached_plan
+        th_resolved = (thresholds if thresholds is not None
+                       else default_thresholds())
+        if th_resolved.geometries:
+            lookup_backend = (default_backend()
+                              if resolved_backend == "sharded"
+                              else resolved_backend)
+            geometry = th_resolved.geometry_for(
+                pattern_fingerprint(csr), n_hint, lookup_backend)
     cache_obj: PlanCache | None
     if cache is True:
         cache_obj = DEFAULT_CACHE
@@ -266,7 +290,7 @@ def sparse(a, *, backend: str | None = None, mesh=None,
     p = _plan_maybe_cached(csr, cache=cache_obj, backend=resolved_backend,
                            mesh=mesh, thresholds=thresholds, tile=tile,
                            bsr_block=tuple(bsr_block), shard_axis=shard_axis,
-                           shard_kind=shard_kind)
+                           shard_kind=shard_kind, geometry=geometry)
     if values is None and p.csr is not csr:
         # cache hit from a pattern-equal matrix: keep OUR values live unless
         # they are bit-identical to the plan's baked stream
@@ -297,18 +321,36 @@ def clear_cache(cache: PlanCache | None = None) -> None:
 # calibration against this backend (the calibrate-on-first-serve hook)
 # ---------------------------------------------------------------------------
 
+def autotune_geometry(csr_or_matrix, **kwargs) -> SelectorThresholds:
+    """Measured sweep over Pallas tile geometries ``(T, wb, tile_n)`` for one
+    sparsity pattern; returns thresholds whose ``geometries`` table carries
+    the winners per N-bucket (see ``repro.kernels.tune`` for the knobs).
+    Persist with ``save_thresholds`` and later ``sparse()`` calls pick the
+    tuned geometry up automatically — and key cache entries on it."""
+    from repro.kernels.tune import autotune_geometry as _tune
+    csr = (csr_or_matrix.plan.csr if isinstance(csr_or_matrix, SparseMatrix)
+           else csr_or_matrix)
+    return _tune(csr, **kwargs)
+
+
 def calibrate_backend(save_to: str | None = None, *,
                       matrices: dict | None = None,
                       ns: tuple = (1, 8), repeats: int = 2,
                       backend: str | None = None,
                       n_grid: tuple = (2, 4, 8, 1 << 30),
                       avg_grid: tuple = (8.0, 16.0, 32.0, 64.0),
-                      cv_grid: tuple = (0.25, 0.5, 1.0, 2.0)):
+                      cv_grid: tuple = (0.25, 0.5, 1.0, 2.0),
+                      tune_geometry: bool = False,
+                      geometry_candidates: tuple | None = None):
     """Measure the 2x2 kernel grid on *this* backend and grid-search selector
     thresholds (paper §2.2/§3.2), optionally persisting the winner where
     ``$REPRO_THRESHOLDS`` will auto-load it.  The runtime driver runs this as
     its background calibrate-on-first-serve job; defaults use two small R-MAT
-    matrices (one uniform, one skewed) so the pass costs seconds."""
+    matrices (one uniform, one skewed) so the pass costs seconds.
+
+    ``tune_geometry=True`` additionally runs the Pallas tile-geometry sweep
+    (``repro.kernels.tune``) over the same matrices and folds the measured
+    winners into the persisted thresholds' ``geometries`` table."""
     from repro.core.rmat import rmat
     from repro.core.selector import calibrate as grid_search
 
@@ -328,5 +370,15 @@ def calibrate_backend(save_to: str | None = None, *,
                 jax.block_until_ready(f(x))
         return (_time.perf_counter() - t0) / repeats
 
-    return grid_search(matrices, ns, time_fn=time_fn, n_grid=n_grid,
-                       avg_grid=avg_grid, cv_grid=cv_grid, save_to=save_to)
+    best, report = grid_search(matrices, ns, time_fn=time_fn, n_grid=n_grid,
+                               avg_grid=avg_grid, cv_grid=cv_grid)
+    if tune_geometry:
+        from repro.kernels.tune import autotune_geometry as _tune
+        tune_ns = tuple(n for n in ns if n > 1) or (8,)
+        for csr in matrices.values():
+            best = _tune(csr, ns=tune_ns, backend=backend, thresholds=best,
+                         repeats=repeats, candidates=geometry_candidates)
+        report["geometries"] = dict(best.geometries)
+    if save_to is not None:
+        save_thresholds(best, save_to)
+    return best, report

@@ -12,11 +12,12 @@ from .registry import (LOGICAL_KERNELS, KernelEntry, available, backend_scope,
                        backends_for, default_backend, register, resolve,
                        scoped_backend)
 from .rmat import rmat, rmat_suite, rmat_suite_small
-from .selector import (PreparedMatrix, SelectorThresholds, adaptive_spmm,
-                       calibrate, default_thresholds, load_thresholds,
+from .selector import (PreparedMatrix, SelectorThresholds, TileGeometry,
+                       adaptive_spmm, calibrate, default_thresholds,
+                       geometry_key, load_thresholds, n_bucket,
                        save_thresholds, select_kernel, select_partition)
 from .shard import (ShardSpec, ShardedSubstrate, build_sharded_substrate,
                     execute_pattern_sharded, make_shard_spec)
 from .spmm import (spmm_as_n_spmv, spmm_nb_pr, spmm_nb_pr_trainable,
                    spmm_nb_sr, spmm_rs_pr, spmm_rs_sr)
-from .stats import MatrixStats, matrix_stats
+from .stats import MatrixStats, balanced_tile_span, matrix_stats

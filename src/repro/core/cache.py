@@ -64,12 +64,24 @@ def thresholds_version(th: Optional[SelectorThresholds]) -> tuple:
 
 def plan_key(csr: CSR, *, backend: str, mesh=None,
              thresholds: SelectorThresholds | None = None,
-             tile: int = 512, bsr_block: tuple = (8, 128),
+             tile: int | None = None, bsr_block: tuple = (8, 128),
              extra: tuple = ()) -> tuple:
-    """The canonical cache key for a ``plan()`` call."""
+    """The canonical cache key for a ``plan()`` call.
+
+    ``tile=None`` means "resolve from the thresholds' geometry table": with
+    an empty table the resolution is always 512, so it keys as 512 (keeping
+    auto and explicit-default spellings on one entry); with a non-empty
+    table it keys as ``"auto"`` — the resolved quota is then a function of
+    the thresholds, which are already in the key, so two auto-tiled calls
+    with equal thresholds resolve identically.  An explicit geometry rides
+    ``extra`` (``cached_plan`` forwards it with the other plan kwargs):
+    distinct geometries ⇒ distinct entries, same geometry ⇒ a cache hit —
+    the observability contract of the autotuner."""
+    if tile is None and not (thresholds is not None and thresholds.geometries):
+        tile = 512
     return ("plan", pattern_fingerprint(csr), tuple(csr.shape), backend,
             mesh_signature(mesh), thresholds_version(thresholds),
-            int(tile), tuple(bsr_block), extra)
+            "auto" if tile is None else int(tile), tuple(bsr_block), extra)
 
 
 # ---------------------------------------------------------------------------
@@ -169,7 +181,8 @@ DEFAULT_CACHE = PlanCache()
 def cached_plan(csr: CSR, *, cache: PlanCache | None = None,
                 backend: str | None = None,
                 thresholds: SelectorThresholds | None = None,
-                mesh=None, tile: int = 512, bsr_block: tuple = (8, 128),
+                mesh=None, tile: int | None = None,
+                bsr_block: tuple = (8, 128),
                 **plan_kwargs):
     """``plan()`` through a ``PlanCache``: same topology + shape + backend +
     mesh + thresholds → the same ``PlanBuilder`` (whose lazily-built

@@ -36,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import inspect
+import warnings
 from collections import OrderedDict
 from typing import Any
 
@@ -46,8 +48,9 @@ import numpy as np
 from . import registry
 from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
                       csr_to_ell, row_ids_from_indptr)
-from .selector import SelectorThresholds, default_thresholds, select_kernel
-from .stats import MatrixStats, matrix_stats
+from .selector import (SelectorThresholds, TileGeometry, default_thresholds,
+                       select_kernel)
+from .stats import MatrixStats, balanced_tile_span, matrix_stats
 from .vjp import (_exec_balanced, _exec_bsr, _exec_ell,  # noqa: F401 (re-export)
                   _stream_to_balanced)
 
@@ -123,6 +126,33 @@ def _register_opts(opts: dict) -> str:
     return digest
 
 
+#: accepted-keyword cache for prep hooks (see ``_prep_context_kwargs``)
+_PREP_KWARGS: dict = {}
+
+
+def _prep_context_kwargs(prep, ctx: dict) -> dict:
+    """Filter the plan-context kwargs (autotuned geometry, guard thresholds)
+    down to the ones this prep hook declares.  Prep hooks keep the minimal
+    ``prep(substrate)`` signature unless they opt into context — the Pallas
+    NB prep takes ``geometry=``/``max_win=``, the BSR and sharded preps take
+    nothing — so the registry contract stays backward compatible."""
+    accepted = _PREP_KWARGS.get(prep)
+    if accepted is None:
+        try:
+            params = inspect.signature(prep).parameters.values()
+            if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+                accepted = ("geometry", "max_win")
+            else:
+                accepted = tuple(p.name for p in params
+                                 if p.kind in (inspect.Parameter.KEYWORD_ONLY,
+                                               inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                                 and p.name in ("geometry", "max_win"))
+        except (TypeError, ValueError):
+            accepted = ()
+        _PREP_KWARGS[prep] = accepted
+    return {k: v for k, v in ctx.items() if k in accepted and v is not None}
+
+
 def _bound_kernel(entry: registry.KernelEntry, interpret, digest: str | None):
     """Identity-cached ``partial(entry.fn, interpret=..., **opts)``."""
     key = (entry, interpret, digest)
@@ -163,6 +193,7 @@ class PlanMeta:
     shard_spec: Any = None
     mesh: Any = None
     inner_backend: str | None = None
+    geometry: Any = None             # autotuned TileGeometry, or None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -229,6 +260,8 @@ class PlanBuilder:
     backend: str
     tile: int = 512
     bsr_block: tuple = (8, 128)
+    # autotuned Pallas tile geometry (kernels/tune.py); None → kernel defaults
+    geometry: TileGeometry | None = None
     # sharded backend (core/shard.py): the mesh, the stats-chosen partition
     # spec, and the single-device backend whose kernels run per shard
     mesh: Any = None
@@ -298,7 +331,8 @@ class PlanBuilder:
             with jax.ensure_compile_time_eval():
                 fp = pattern_fingerprint(self.csr)
             self._topology = hashlib.sha1(
-                (fp + repr((self.tile, tuple(self.bsr_block)))).encode()
+                (fp + repr((self.tile, tuple(self.bsr_block),
+                            self.geometry))).encode()
             ).hexdigest()
         return self._topology
 
@@ -316,8 +350,12 @@ class PlanBuilder:
             if entry.prep is None:
                 opts = {}
             else:
+                ctx = _prep_context_kwargs(
+                    entry.prep, {"geometry": self.geometry,
+                                 "max_win": self.thresholds.max_win})
                 with jax.ensure_compile_time_eval():
-                    opts = dict(entry.prep(self.substrate(entry.substrate)))
+                    opts = dict(entry.prep(self.substrate(entry.substrate),
+                                           **ctx))
             self._opts[key] = opts
         return opts
 
@@ -425,7 +463,8 @@ class PlanBuilder:
             thresholds=self.thresholds, tile=self.tile,
             bsr_block=tuple(self.bsr_block), topology=self.topology_key(),
             prep=tuple(sorted(prep)), shard_spec=self.shard_spec,
-            mesh=self.mesh, inner_backend=self.inner_backend)
+            mesh=self.mesh, inner_backend=self.inner_backend,
+            geometry=self.geometry)
         return PlanArtifact(substrates=subs, aux=aux, meta=meta)
 
 
@@ -436,10 +475,11 @@ SparsePlan = PlanBuilder
 
 def plan(csr: CSR, *, n_hint: int | None = None,
          thresholds: SelectorThresholds | None = None,
-         backend: str | None = None, tile: int = 512,
+         backend: str | None = None, tile: int | None = None,
          bsr_block: tuple = (8, 128), mesh: Any = None,
          shard_axis: str | None = None, shard_kind: str | None = None,
-         inner_backend: str | None = None) -> PlanBuilder:
+         inner_backend: str | None = None,
+         geometry: TileGeometry | None = None) -> PlanBuilder:
     """Offline planning front door.
 
     ``n_hint``: anticipated N of the dense operand; when given, the substrate
@@ -449,6 +489,15 @@ def plan(csr: CSR, *, n_hint: int | None = None,
     ``backend=None`` picks the scoped override (``repro.api.use_backend``)
     or the platform default (Pallas on TPU, XLA elsewhere) — or ``"sharded"``
     when a ``mesh`` is given.
+
+    Tile geometry (DESIGN.md §6): ``geometry`` forces an explicit
+    ``TileGeometry``; with ``geometry=None`` the thresholds' autotuned table
+    is consulted per (pattern fingerprint, ``n_hint`` bucket, backend) —
+    ``kernels/tune.py`` is the producer.  ``tile=None`` takes the geometry's
+    nnz quota (default 512); an explicit ``tile`` always wins.  Plans whose
+    worst tile would span more than ``thresholds.max_win`` rows fall back
+    from Pallas to xla with a warning (the spill window — and its one-hot
+    matmul — would otherwise be sized by an empty-row gap).
 
     Sharded backend: ``mesh`` (required) names the device mesh; the
     partitioner is chosen from the matrix stats (``cv`` vs.
@@ -460,6 +509,25 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         backend = "sharded" if mesh is not None else registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
     stats = matrix_stats(csr)
+    if geometry is None and th.geometries:
+        from .cache import pattern_fingerprint
+        with jax.ensure_compile_time_eval():
+            fp = pattern_fingerprint(csr)
+        lookup_backend = inner_backend or backend
+        if backend == "sharded" and inner_backend is None:
+            lookup_backend = registry.default_backend()
+        geometry = th.geometry_for(fp, n_hint, lookup_backend)
+    if tile is None:
+        tile = geometry.tile if geometry is not None else 512
+    if backend == "pallas":
+        span = balanced_tile_span(csr, tile)
+        if span > th.max_win:
+            warnings.warn(
+                f"worst balanced tile spans {span} rows > thresholds."
+                f"max_win={th.max_win} (empty-row gaps inflate the spill "
+                "window without adding work); falling back to the xla "
+                "backend", stacklevel=2)
+            backend = "xla"
     spec = None
     if backend == "sharded":
         if mesh is None:
@@ -475,6 +543,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         backend=backend,
         tile=tile,
         bsr_block=tuple(bsr_block),
+        geometry=geometry,
         mesh=mesh,
         shard_spec=spec,
         inner_backend=inner_backend,

@@ -39,6 +39,58 @@ THRESHOLDS_ENV = "REPRO_THRESHOLDS"
 
 
 @dataclasses.dataclass(frozen=True)
+class TileGeometry:
+    """One point in the Pallas NB kernel's tuning space.
+
+    ``tile`` is the nnz quota per BalancedCOO tile (the paper's warp quota),
+    ``wb`` the fused kernel's output-block row height (sublane-aligned), and
+    ``tile_n`` the dense-column block width (lane-aligned).  The winning
+    geometry shifts with sparsity pattern and N (Hu et al., PAPERS.md), so
+    geometries are *measured* per (pattern, N-bucket, backend) by
+    ``repro.kernels.tune.autotune_geometry`` and persisted on
+    ``SelectorThresholds.geometries`` next to the selector cutoffs."""
+
+    tile: int = 512
+    wb: int = 64
+    tile_n: int = 128
+
+    def validate(self) -> "TileGeometry":
+        if self.tile < 1:
+            raise ValueError(f"tile must be >= 1, got {self.tile}")
+        if self.wb < 8 or self.wb % 8:
+            raise ValueError(f"wb must be a positive multiple of 8 "
+                             f"(sublanes), got {self.wb}")
+        if self.tile_n < 128 or self.tile_n % 128:
+            raise ValueError(f"tile_n must be a positive multiple of 128 "
+                             f"(lanes), got {self.tile_n}")
+        return self
+
+    def as_tuple(self) -> tuple:
+        return (int(self.tile), int(self.wb), int(self.tile_n))
+
+
+#: upper edges of the dense-width buckets geometry entries key on; widths
+#: above the last edge share one "nbig" bucket.
+N_BUCKET_EDGES = (1, 4, 32, 128)
+
+
+def n_bucket(n: "int | None") -> str:
+    """Coarse dense-width bucket label for geometry keys (``None`` → the
+    wildcard bucket, matched when no width hint is available)."""
+    if n is None:
+        return "any"
+    for edge in N_BUCKET_EDGES:
+        if n <= edge:
+            return f"n{edge}"
+    return "nbig"
+
+
+def geometry_key(backend: str, fingerprint: str, n: "int | None") -> str:
+    """Key of one autotuned-geometry entry: backend x pattern x N-bucket."""
+    return f"{backend}|{fingerprint[:12]}|{n_bucket(n)}"
+
+
+@dataclasses.dataclass(frozen=True)
 class SelectorThresholds:
     n_threshold: int = 4        # N <= this → parallel reduction (paper: 4)
     pr_avg_row: float = 32.0    # PR side: avg_row < this → workload-balance
@@ -47,27 +99,67 @@ class SelectorThresholds:
     # partitioning, else row-split by M.  Same CV signal as Insight 2, one
     # level up: skewed rows make equal-row shards unequal-work shards.
     partition_cv: float = 1.0
+    # pathological-span guard: a plan whose worst tile would span more than
+    # this many rows (empty-row gaps inflate it without adding work) falls
+    # back from the Pallas backend to xla instead of sizing a spill window
+    # — and its one-hot matmul — off the gap (DESIGN.md §6).
+    max_win: int = 4096
+    # autotuned tile geometries: sorted ((geometry_key, (tile, wb, tile_n)),
+    # ...) — a tuple-of-tuples so thresholds stay hashable (they ride
+    # ``PlanMeta`` static aux and the ``PlanCache`` key, which is how a
+    # recalibrated geometry invalidates cached plans).
+    geometries: tuple = ()
 
     PAPER_GPU = None  # filled below
 
+    # -- geometry table -----------------------------------------------------
+    def geometry_for(self, fingerprint: str, n: "int | None",
+                     backend: str) -> "TileGeometry | None":
+        """The measured geometry for this (pattern, N, backend), trying the
+        exact N-bucket first and the wildcard ("any") entry second."""
+        if not self.geometries:
+            return None
+        table = dict(self.geometries)
+        for key in (geometry_key(backend, fingerprint, n),
+                    geometry_key(backend, fingerprint, None)):
+            if key in table:
+                return TileGeometry(*table[key])
+        return None
+
+    def with_geometry(self, key: str, geom: TileGeometry) -> "SelectorThresholds":
+        table = dict(self.geometries)
+        table[key] = geom.validate().as_tuple()
+        return dataclasses.replace(self, geometries=tuple(sorted(table.items())))
+
     # -- persistence (DESIGN.md §4) -----------------------------------------
     def to_json(self) -> str:
-        return json.dumps({"version": 1,
-                           "n_threshold": int(self.n_threshold),
-                           "pr_avg_row": float(self.pr_avg_row),
-                           "sr_cv": float(self.sr_cv),
-                           "partition_cv": float(self.partition_cv)}, indent=2)
+        d = {"version": 1,
+             "n_threshold": int(self.n_threshold),
+             "pr_avg_row": float(self.pr_avg_row),
+             "sr_cv": float(self.sr_cv),
+             "partition_cv": float(self.partition_cv)}
+        if self.geometries or self.max_win != 4096:
+            # geometry-bearing calibrations write the v2 schema; plain
+            # selector calibrations stay v1 so older readers keep loading
+            d["version"] = 2
+            d["max_win"] = int(self.max_win)
+            d["geometries"] = {k: list(v) for k, v in self.geometries}
+        return json.dumps(d, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "SelectorThresholds":
         d = json.loads(text)
-        if d.get("version", 1) != 1:
+        if d.get("version", 1) not in (1, 2):
             raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
+        geoms = tuple(sorted((str(k), tuple(int(x) for x in v))
+                             for k, v in d.get("geometries", {}).items()))
         th = cls(n_threshold=int(d["n_threshold"]),
                  pr_avg_row=float(d["pr_avg_row"]),
                  sr_cv=float(d["sr_cv"]),
                  # absent in pre-sharding calibrations; default keeps them valid
-                 partition_cv=float(d.get("partition_cv", 1.0)))
+                 partition_cv=float(d.get("partition_cv", 1.0)),
+                 max_win=int(d.get("max_win", 4096)),
+                 geometries=geoms)
         th.validate()
         return th
 
@@ -84,6 +176,13 @@ class SelectorThresholds:
                 raise ValueError(f"{name} must be finite, got {v!r}")
             if v < 0:
                 raise ValueError(f"{name} must be >= 0, got {v!r}")
+        if self.max_win < 1:
+            raise ValueError(f"max_win must be >= 1, got {self.max_win}")
+        for key, vals in self.geometries:
+            if len(vals) != 3:
+                raise ValueError(f"geometry {key!r} must be (tile, wb, "
+                                 f"tile_n), got {vals!r}")
+            TileGeometry(*vals).validate()
         return self
 
 

@@ -270,12 +270,23 @@ def _sharded_prep(sub: ShardedSubstrate, *, _logical: str) -> dict:
     inner = registry.resolve(_logical, sub.inner_backend)
     if inner.prep is None:
         return {}
+    # the fused visit schedule is per-shard *ragged* (visit counts differ),
+    # so the sharded wrapper keeps the spill inner path: ask preps that
+    # support it (the Pallas NB prep does) to skip the schedule entirely,
+    # and stack only the row windows
+    try:
+        import inspect
+        spill_kw = ({"spill_only": True}
+                    if "spill_only" in inspect.signature(inner.prep).parameters
+                    else {})
+    except (TypeError, ValueError):
+        spill_kw = {}
     bases, wins = [], []
     for s in range(sub.spec.n_shards):
         local = BalancedCOO(np.asarray(sub.rows)[s], np.asarray(sub.cols)[s],
                             np.asarray(sub.vals)[s], sub.inner_shape)
-        opts = dict(inner.prep(local))
-        if set(opts) != {"row_base", "win"}:
+        opts = dict(inner.prep(local, **spill_kw))
+        if not {"row_base", "win"} <= set(opts):
             raise ValueError(f"sharded backend cannot stack prep opts "
                              f"{sorted(opts)} of ({_logical!r}, "
                              f"{sub.inner_backend!r})")

@@ -65,15 +65,48 @@ def spmm_rs_sr(ell: ELL, x: jax.Array) -> jax.Array:
     return out[:, 0] if squeeze else out
 
 
-def spmm_rs_pr(ell: ELL, x: jax.Array) -> jax.Array:
+#: element budget for the (M, width_slab, N) partials spmm_rs_pr materializes
+#: per reduction step; above it the width axis is chunked so wide/skewed ELL
+#: substrates (one hub row inflates `width` for every row) cannot OOM.  At
+#: fp32 the default is a 64 MiB slab.
+RS_PR_SLAB_ELEMS = 1 << 24
+
+
+def spmm_rs_pr(ell: ELL, x: jax.Array, *,
+               slab_elems: int | None = None) -> jax.Array:
     """Row-split + parallel reduction (CSR-Vector analogue).
 
     All partial products materialize as (M, width, N) and reduce with a tree
-    sum — XLA's reduce is the merge-tree here."""
+    sum — XLA's reduce is the merge-tree here.  When that buffer would
+    exceed ``slab_elems`` elements the width axis is walked in slabs of
+    tree-reduced partials instead (sequential across slabs, parallel within
+    — peak memory bounded by the budget, result identical)."""
     x2, squeeze = _as_2d(x)
-    xg = jnp.take(x2, ell.cols, axis=0)                    # (M, width, N)
+    m = ell.shape[0]
+    n = x2.shape[1]
+    w = ell.width
     acc = _acc_dtype(ell.vals.dtype, x2.dtype)
-    out = jnp.sum(ell.vals[..., None].astype(acc) * xg.astype(acc), axis=1)
+    budget = RS_PR_SLAB_ELEMS if slab_elems is None else slab_elems
+    if m * w * n <= budget:
+        xg = jnp.take(x2, ell.cols, axis=0)                # (M, width, N)
+        out = jnp.sum(ell.vals[..., None].astype(acc) * xg.astype(acc), axis=1)
+        out = out.astype(x2.dtype)
+        return out[:, 0] if squeeze else out
+
+    ws = max(1, budget // max(m * n, 1))                   # slab width
+    n_slabs = -(-w // ws)
+    pad = n_slabs * ws - w
+    cols_p = jnp.pad(ell.cols, ((0, 0), (0, pad)))         # pad col 0, val 0:
+    vals_p = jnp.pad(ell.vals, ((0, 0), (0, pad)))         # inert like ELL pad
+
+    def body(s, accum):
+        cols_s = jax.lax.dynamic_slice_in_dim(cols_p, s * ws, ws, axis=1)
+        vals_s = jax.lax.dynamic_slice_in_dim(vals_p, s * ws, ws, axis=1)
+        xg = jnp.take(x2, cols_s, axis=0)                  # (M, ws, N)
+        return accum + jnp.sum(vals_s[..., None].astype(acc) * xg.astype(acc),
+                               axis=1)
+
+    out = jax.lax.fori_loop(0, n_slabs, body, jnp.zeros((m, n), acc))
     out = out.astype(x2.dtype)
     return out[:, 0] if squeeze else out
 

@@ -11,6 +11,12 @@ Per tile of T nonzeros:
   2. log2(T) shift-and-add-if-same-row steps → p[i] = inclusive segment sum
   3. segment *ends* (next row differs) dump their sum into the tile's
      (WIN,) output window; cross-tile rows merge in the spill combine.
+
+Like the SpMM family (``kernels/vsr.py``), the SpMV comes in two boundary
+resolutions: the spill-and-combine reference above, and the **fused**
+default (``spmv_vsr_fused``) that walks the same host-side visit schedule
+and accumulates segment-head dumps directly into revisited ``(wb,)`` output
+blocks — no ``(n_tiles, WIN)`` partials, no post-kernel ``segment_sum``.
 """
 from __future__ import annotations
 
@@ -19,9 +25,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import BalancedCOO
-from .vsr import plan_windows
+from repro.core.selector import TileGeometry
+from .vsr import plan_visits, plan_windows
 
 
 def _spmv_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win):
@@ -84,8 +92,9 @@ def spmv_vsr(bal: BalancedCOO, x: jax.Array, *,
              interpret: bool | None = None,
              row_base: jax.Array | None = None,
              win: int | None = None) -> jax.Array:
-    """NB+PR SpMV. ``x``: (K,). ``row_base``/``win`` may be precomputed at
-    plan time (keeps the call traceable with traced values)."""
+    """NB+PR SpMV, spill-and-combine variant (parity reference).  ``x``:
+    (K,). ``row_base``/``win`` may be precomputed at plan time (keeps the
+    call traceable with traced values)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert x.ndim == 1, "spmv_vsr is the N=1 path; use spmm_vsr for N>1"
@@ -94,4 +103,103 @@ def spmv_vsr(bal: BalancedCOO, x: jax.Array, *,
         row_base = jnp.asarray(base)
     y = _spmv_call(bal.rows, bal.cols, bal.vals, row_base, x,
                    m=bal.shape[0], win=win, interpret=interpret)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused variant: segment-head dumps accumulate into revisited output blocks
+# ---------------------------------------------------------------------------
+
+def _spmv_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
+                       x_ref, o_ref, *, m, wb):
+    v = pl.program_id(0)
+    rows = rows_ref[0, :]
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]
+    t = rows.shape[0]
+    mask = rows < m
+    base = vb_ref[v] * wb
+    local = jnp.clip(rows - base, 0, wb - 1)
+    in_block = (rows - base >= 0) & (rows - base < wb)
+
+    p = vals.astype(jnp.float32) * jnp.take(x_ref[...], cols)          # (T,)
+    p = jnp.where(mask, p, 0.0)
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
+    # --- the shuffle prefix network: add-if-row-matches, log2(T) rounds ---
+    # (rows never straddle output blocks, so the network runs un-masked and
+    # the block restriction applies only to the head dump below)
+    d = 1
+    while d < t:
+        p_prev = jnp.roll(p, d)
+        r_prev = jnp.roll(rows, d)
+        take = (idx >= d) & (r_prev == rows)
+        p = p + jnp.where(take, p_prev, 0.0)
+        d *= 2
+    # --- segment-head dump, restricted to this visit's output block ---
+    r_next = jnp.roll(rows, -1)
+    is_end = (idx == t - 1) | (r_next != rows)
+    keep = is_end & mask & in_block
+    contrib = jnp.where(keep, p, 0.0)
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (wb, t), 0)
+    sel = (local[None, :] == row_iota) & keep[None, :]
+    block_sum = jnp.sum(jnp.where(sel, contrib[None, :], 0.0), axis=1)
+
+    # sequential-grid accumulation: boundary-crossing rows are dumped once
+    # per visiting tile and summed here, in VMEM, instead of spilling
+    @pl.when(vs_ref[v] == 1)
+    def _():
+        o_ref[...] = block_sum
+
+    @pl.when(vs_ref[v] == 0)
+    def _():
+        o_ref[...] += block_sum
+
+
+@functools.partial(jax.jit, static_argnames=("m", "wb", "interpret"))
+def _spmv_fused_call(vt, vb, vs, rows, cols, vals, x, *, m, wb, interpret):
+    n_tiles, t = rows.shape
+    k = x.shape[0]
+    mb = -(-m // wb)
+    n_visits = vt.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_visits,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda v, vt, vb, vs: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda v, vt, vb, vs: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda v, vt, vb, vs: (vt[v], 0)),
+            pl.BlockSpec((k,), lambda v, vt, vb, vs: (0,)),
+        ],
+        out_specs=pl.BlockSpec((wb,), lambda v, vt, vb, vs: (vb[v],)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmv_fused_kernel, m=m, wb=wb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * wb,), jnp.float32),
+        interpret=interpret,
+    )(vt, vb, vs, rows, cols, vals, x)
+    return y[:m]
+
+
+def spmv_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
+                   interpret: bool | None = None, wb: int | None = None,
+                   visit_tile: jax.Array | None = None,
+                   visit_block: jax.Array | None = None,
+                   visit_start: jax.Array | None = None) -> jax.Array:
+    """Spill-fused NB+PR SpMV: the shuffle-network segment scan with
+    segment heads accumulated straight into revisited output blocks.  The
+    visit schedule may be precomputed (``plan_visits`` at plan time) so the
+    call stays traceable when ``bal`` carries traced values."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    assert x.ndim == 1, "spmv_vsr_fused is the N=1 path"
+    wb = TileGeometry().wb if wb is None else wb
+    if visit_tile is None or visit_block is None or visit_start is None:
+        vt, vb, vs = plan_visits(bal, wb)
+        visit_tile, visit_block, visit_start = map(jnp.asarray, (vt, vb, vs))
+    y = _spmv_fused_call(visit_tile, visit_block, visit_start,
+                         bal.rows, bal.cols, bal.vals, x,
+                         m=bal.shape[0], wb=wb, interpret=interpret)
     return y.astype(x.dtype)

@@ -1,0 +1,166 @@
+"""Measured tile-geometry autotuner + modeled HBM traffic (DESIGN.md §6).
+
+The paper derives its *selector* thresholds empirically; the same argument
+applies one level down, to the Pallas NB kernels' tile geometry: the winning
+``(T, wb, tile_n)`` shifts with sparsity pattern and dense width N (Hu et
+al., "Heuristic Adaptability to Input Dynamics for SpMM on GPUs",
+PAPERS.md), so the geometry is a **measured, per-plan decision**, not a
+constant.
+
+``autotune_geometry`` runs a small timed sweep over candidate geometries for
+one pattern and folds the winners — keyed by ``(backend, pattern
+fingerprint, N-bucket)`` — into ``SelectorThresholds.geometries``, the same
+persistence channel as the selector cutoffs (``save_thresholds`` /
+``$REPRO_THRESHOLDS``).  ``plan()`` consults that table on every build, and
+because thresholds are part of the ``PlanCache`` key, a retuned geometry
+invalidates exactly the plans it changes: distinct geometries ⇒ distinct
+cache entries, same geometry ⇒ a hit.
+
+``modeled_traffic`` is the analytical side: per-path HBM byte counts for the
+fused vs spill-and-combine boundary resolutions, used by
+``benchmarks/spill_fusion.py`` to report the fused win as arithmetic-
+intensity movement rather than interpret-mode seconds.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core.cache import pattern_fingerprint
+from repro.core.formats import CSR, csr_to_balanced
+from repro.core.plan import execute, plan
+from repro.core.selector import (SelectorThresholds, TileGeometry,
+                                 default_thresholds, geometry_key)
+
+from .vsr import plan_visits, plan_windows
+
+#: the default measured sweep: nnz quota x output-block rows, lane width
+#: fixed at the MXU's 128 (wider tile_n only pays off at very large N).
+DEFAULT_CANDIDATES = (
+    TileGeometry(tile=256, wb=32, tile_n=128),
+    TileGeometry(tile=256, wb=64, tile_n=128),
+    TileGeometry(tile=512, wb=32, tile_n=128),
+    TileGeometry(tile=512, wb=64, tile_n=128),
+    TileGeometry(tile=512, wb=128, tile_n=128),
+    TileGeometry(tile=1024, wb=64, tile_n=128),
+)
+
+
+def measure_geometry(csr: CSR, n: int, geom: TileGeometry, *,
+                     backend: str | None = None,
+                     thresholds: SelectorThresholds | None = None,
+                     impl: str = "nb_pr",
+                     interpret: bool | None = None,
+                     repeats: int = 2) -> float:
+    """Seconds per call of the NB kernel under one forced geometry."""
+    backend = backend or registry.default_backend()
+    th = thresholds if thresholds is not None else default_thresholds()
+    p = plan(csr, backend=backend, thresholds=th, geometry=geom, n_hint=n)
+    k = csr.shape[1]
+    x = jnp.ones((k, n) if n > 1 else (k,), jnp.float32)
+    f = jax.jit(lambda xx: execute(p, xx, impl=impl, interpret=interpret))
+    jax.block_until_ready(f(x))          # compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(max(1, repeats)):
+        jax.block_until_ready(f(x))
+    return (time.perf_counter() - t0) / max(1, repeats)
+
+
+def autotune_geometry(csr: CSR, *, ns: tuple = (8, 128),
+                      backend: str | None = None,
+                      thresholds: SelectorThresholds | None = None,
+                      candidates: tuple | None = None,
+                      impl: str = "nb_pr",
+                      interpret: bool | None = None,
+                      repeats: int = 2,
+                      include_wildcard: bool = True) -> SelectorThresholds:
+    """Measured sweep over candidate geometries for one sparsity pattern.
+
+    Returns thresholds extended with one geometry entry per N-bucket (and a
+    wildcard entry covering un-hinted plans when ``include_wildcard``).
+    Timing in interpret mode is correctness-grade, not perf-grade — run on
+    TPU (or pass precise ``candidates``) before persisting fleet-wide."""
+    backend = backend or registry.default_backend()
+    th = thresholds if thresholds is not None else default_thresholds()
+    cands = tuple(candidates if candidates is not None else DEFAULT_CANDIDATES)
+    fp = pattern_fingerprint(csr)
+    log_times = {g: [] for g in cands}
+    for n in ns:
+        times = {g: measure_geometry(csr, n, g, backend=backend,
+                                     thresholds=th, impl=impl,
+                                     interpret=interpret, repeats=repeats)
+                 for g in cands}
+        best = min(times, key=times.get)
+        th = th.with_geometry(geometry_key(backend, fp, n), best)
+        for g, t in times.items():
+            log_times[g].append(np.log(max(t, 1e-12)))
+    if include_wildcard and cands:
+        overall = min(cands, key=lambda g: float(np.mean(log_times[g])))
+        th = th.with_geometry(geometry_key(backend, fp, None), overall)
+    return th
+
+
+# ---------------------------------------------------------------------------
+# modeled HBM traffic: the spill-vs-fused bytes story, analytically
+# ---------------------------------------------------------------------------
+
+def modeled_traffic(csr: CSR, n: int, *,
+                    geometry: TileGeometry | None = None,
+                    dtype_bytes: int = 4, index_bytes: int = 4) -> dict:
+    """Per-call modeled HBM bytes of the NB SpMM under both boundary
+    resolutions, charged the way the Pallas pipeline actually DMAs: a block
+    moves between HBM and VMEM only when its BlockSpec index *changes*
+    between consecutive grid steps (DESIGN.md §6).
+
+    * spill (grid ``(n_tiles, nb)``, column blocks innermost): the tile
+      stream loads once per tile, but the ``(K, tile_n)`` dense block
+      re-loads on *every* step (its index tracks the fast axis) — ``n_tiles``
+      passes over X — and the ``(n_tiles, WIN, N_pad)`` partials round-trip
+      (kernel write + ``segment_sum`` read) scales with the *global* WIN the
+      single worst tile sets.
+    * fused (grid ``(nb, V)``, visits innermost): X loads once per column
+      block — one pass total; the tile stream re-loads only when the visit
+      schedule switches tiles (block crossings and neighbour-borrowing
+      dummies re-use the resident tile); output blocks flush exactly once.
+      The spill round-trip is gone — boundary rows accumulate in VMEM.
+    """
+    geom = (geometry or TileGeometry()).validate()
+    m, k = csr.shape
+    bal = csr_to_balanced(csr, tile=geom.tile)
+    _, win = plan_windows(bal)
+    vt, _, _ = plan_visits(bal, geom.wb)
+    n_tiles, t = bal.rows.shape
+    n_visits = int(len(vt))
+    # tile-stream DMAs per column-block sweep = consecutive-run count of vt
+    stream_runs = int(1 + np.count_nonzero(vt[1:] != vt[:-1])) if n_visits else 0
+    nb = max(1, -(-n // geom.tile_n))
+    n_pad = nb * geom.tile_n
+    mb = max(1, -(-m // geom.wb))
+
+    stream = t * (2 * index_bytes + dtype_bytes)      # rows+cols+vals, per load
+    xblock = k * geom.tile_n * dtype_bytes            # one (K, tile_n) block
+    out = m * n_pad * dtype_bytes
+    spill = (n_tiles * stream
+             + n_tiles * nb * xblock                     # X re-read per tile
+             + 2 * n_tiles * win * n_pad * dtype_bytes   # partials write+read
+             + out)
+    fused = (stream_runs * nb * stream
+             + nb * xblock                               # one pass over X
+             + mb * geom.wb * n_pad * dtype_bytes)       # blocks flushed once
+    flops = 2 * csr.nnz * n
+    return {
+        "spill_bytes": int(spill),
+        "fused_bytes": int(fused),
+        "spill_win": int(win),
+        "n_tiles": int(n_tiles),
+        "n_visits": n_visits,
+        "stream_runs": stream_runs,
+        "flops": int(flops),
+        "spill_ai": flops / max(spill, 1),
+        "fused_ai": flops / max(fused, 1),
+        "bytes_reduction": spill / max(fused, 1),
+    }

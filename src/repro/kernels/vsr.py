@@ -11,36 +11,55 @@ TPU adaptation (see DESIGN.md §2):
     local row ids ``l[T]`` and partial products ``P[T, N]``, the segment sums
     are ``S @ P`` where ``S[w, t] = (l[t] == w)`` — the same algebra the
     shuffle tree computes, expressed as the 128x128-systolic-friendly op.
-  * atomics → **spill-and-combine**: TPU has no atomics; each tile writes its
-    (WIN, N) window of row sums to a partials buffer and a single
-    segment-sum outside the kernel adds the tile-boundary spills. The spill
-    traffic is n_tiles*WIN*N, asymptotically nnz/T of the output traffic —
-    the same overhead class as the paper's boundary atomics.
+  * atomics → two resolutions of the tile-boundary rows (DESIGN.md §6):
+
+    - **fused** (default): the TPU grid is *sequential*, so row-ordered
+      nnz-tiles can accumulate directly into revisited output blocks.  A
+      host-side visit schedule (``plan_visits``) lists, per tile, the
+      ``wb``-row output blocks its rows land in; the kernel walks visits in
+      order, initialising a block on its first visit (``pl.when``) and
+      read-modify-writing it while consecutive visits share the block —
+      boundary-crossing rows simply accumulate across visits, in VMEM.  No
+      partials buffer, no post-kernel combine.
+    - **spill-and-combine** (the parity reference, ``spill=True``): each
+      tile writes its ``(WIN, N)`` window of row sums to an
+      ``(n_tiles, WIN, N)`` partials buffer and one ``segment_sum`` outside
+      the kernel adds the boundary spills — extra HBM traffic of
+      ``n_tiles*WIN*N`` per call, with the *global* ``WIN`` sized by the
+      single worst tile.
   * VDL (§2.1.2) is the gather ``X[cols]`` returning (T, N) blocks: one
     logical load covers all N output columns (the V→N limit of float4).
 
-Layout: T is kept a multiple of 128 (lane width) and WIN a multiple of 8
-(sublanes); N is padded to the lane width by the ops wrapper.
+Layout: T is kept a multiple of 128 (lane width), WIN/``wb`` multiples of 8
+(sublanes); N is padded to the lane width by the ops wrapper.  ``(T, wb,
+tile_n)`` is the measured tile geometry (``repro.kernels.tune``).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import registry
 from repro.core.formats import BalancedCOO
+from repro.core.selector import TileGeometry
 
 
-def plan_windows(bal: BalancedCOO) -> tuple[np.ndarray, int]:
-    """Host-side prep: per-tile first row (row_base) and the max row-window
-    WIN any tile spans (padded to a sublane multiple).
+def plan_windows(bal: BalancedCOO, *, max_win: int | None = None
+                 ) -> tuple[np.ndarray, int]:
+    """Host-side prep for the spill path: per-tile first row (row_base) and
+    the max row-window WIN any tile spans (padded to a sublane multiple).
 
     Only valid (non-sentinel) entries count toward the span; the kernel masks
-    sentinels so clamping cannot corrupt real rows."""
+    sentinels so clamping cannot corrupt real rows.  ``max_win`` warns when
+    the span is pathological (empty-row gaps inflate it without adding any
+    work) — the plan layer falls back to the xla backend in that case rather
+    than sizing the spill one-hot matmul off the gap."""
     rows = np.asarray(bal.rows)
     m = bal.shape[0]
     valid = rows < m
@@ -49,8 +68,140 @@ def plan_windows(bal: BalancedCOO) -> tuple[np.ndarray, int]:
     last = np.where(any_valid, np.where(valid, rows, -1).max(axis=1), 0)
     span = int(np.maximum(last - first + 1, 1).max()) if len(rows) else 1
     win = -(-span // 8) * 8
+    if max_win is not None and win > max_win:
+        warnings.warn(
+            f"VSR spill window {win} exceeds max_win={max_win} (one tile "
+            f"spans {span} rows — likely an empty-row gap); prefer the "
+            "fused path or the xla backend", stacklevel=2)
     return first, win
 
+
+def plan_visits(bal: BalancedCOO, wb: int
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side prep for the fused path: the (tile, output-block) visit
+    schedule.
+
+    Returns ``(visit_tile, visit_block, visit_start)``, each ``(V,)`` int32:
+    visit v loads nnz-tile ``visit_tile[v]`` and accumulates the rows landing
+    in output block ``visit_block[v]`` (rows ``[b*wb, (b+1)*wb)``);
+    ``visit_start[v]`` flags the block's first visit (initialise vs.
+    accumulate).  Because the nonzero stream is row-ordered, ``visit_block``
+    is non-decreasing, so every output block's visits are consecutive grid
+    steps — the revisited-block accumulation contract.  Blocks no tile
+    touches (empty-row bands, row padding) get a fully-masked dummy visit so
+    every output block is written exactly once.
+
+    ``V = n_tiles + (block crossings) + (empty blocks)``: a skewed or gappy
+    row costs *its own* tiles extra visits instead of inflating a global
+    window for every tile — the per-tile window metadata of DESIGN.md §6."""
+    rows = np.asarray(bal.rows)
+    m = bal.shape[0]
+    mb = max(1, -(-m // wb))
+    n_tiles, t = rows.shape
+    tids = np.repeat(np.arange(n_tiles, dtype=np.int64), t)
+    rf = rows.reshape(-1)
+    valid = rf < m
+    keys = np.unique(tids[valid] * mb + rf[valid] // wb)
+    vt = (keys // mb).astype(np.int32)
+    vb = (keys % mb).astype(np.int32)
+    covered = np.zeros(mb, bool)
+    covered[vb] = True
+    missing = np.nonzero(~covered)[0].astype(np.int32)
+    if len(missing):
+        # dummy visits: a tile cannot intersect an uncovered block (its rows'
+        # blocks are covered by construction), so block-range masking zeroes
+        # the whole contribution and the first-visit store writes zeros.
+        # Each dummy borrows the *neighbouring* visit's tile id: consecutive
+        # grid steps with an unchanged input-block index are not re-fetched
+        # by the pipeline, so empty blocks cost one output write, not a DMA.
+        vt = np.concatenate([vt, np.zeros(len(missing), np.int32)])
+        vb = np.concatenate([vb, missing])
+        dummy = np.concatenate([np.zeros(len(vt) - len(missing), bool),
+                                np.ones(len(missing), bool)])
+        order = np.argsort(vb, kind="stable")
+        vt, vb, dummy = vt[order], vb[order], dummy[order]
+        real_idx = np.nonzero(~dummy)[0]
+        if len(real_idx):
+            pos = np.searchsorted(real_idx, np.nonzero(dummy)[0])
+            pos = np.minimum(pos, len(real_idx) - 1)
+            vt[dummy] = vt[real_idx[pos]]
+    vs = np.ones(len(vb), np.int32)
+    if len(vb) > 1:
+        vs[1:] = (vb[1:] != vb[:-1]).astype(np.int32)
+    return vt, vb, vs
+
+
+# ---------------------------------------------------------------------------
+# fused kernel: in-kernel spill accumulation over revisited output blocks
+# ---------------------------------------------------------------------------
+
+def _vsr_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
+                      x_ref, o_ref, *, m, wb):
+    v = pl.program_id(1)
+    rows = rows_ref[0, :]                      # (T,) global row ids
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]
+    t = rows.shape[0]
+    base = vb_ref[v] * wb                      # this visit's block row offset
+    local = rows - base
+    mask = (rows < m) & (local >= 0) & (local < wb)
+    local = jnp.clip(local, 0, wb - 1)
+
+    # dense-row loading (VDL): one gather covers all N columns of this block
+    xg = jnp.take(x_ref[...], cols, axis=0)    # (T, TN)
+    p = vals[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+
+    # segment reduction as one-hot matmul on the MXU, restricted to the
+    # block's rows — (wb, T) instead of the spill path's (WIN, T)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (wb, t), 0)
+    onehot = jnp.where((local[None, :] == row_iota) & mask[None, :], 1.0, 0.0)
+    contrib = jnp.dot(onehot, p, preferred_element_type=jnp.float32)
+
+    # sequential-grid accumulation: first visit initialises the block, later
+    # visits read-modify-write it in VMEM; the block flushes to HBM once,
+    # when the schedule moves on — no partials array, no segment_sum
+    @pl.when(vs_ref[v] == 1)
+    def _():
+        o_ref[...] = contrib
+
+    @pl.when(vs_ref[v] == 0)
+    def _():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "wb", "tile_n", "interpret"))
+def _vsr_fused_call(vt, vb, vs, rows, cols, vals, x, *, m, wb, tile_n,
+                    interpret):
+    n_tiles, t = rows.shape
+    k, n_pad = x.shape
+    nb = n_pad // tile_n
+    mb = -(-m // wb)
+    n_visits = vt.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                 # visit_tile/block/start
+        grid=(nb, n_visits),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda j, v, vt, vb, vs: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda j, v, vt, vb, vs: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda j, v, vt, vb, vs: (vt[v], 0)),
+            pl.BlockSpec((k, tile_n), lambda j, v, vt, vb, vs: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((wb, tile_n),
+                               lambda j, v, vt, vb, vs: (vb[v], j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_vsr_fused_kernel, m=m, wb=wb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * wb, n_pad), jnp.float32),
+        interpret=interpret,
+    )(vt, vb, vs, rows, cols, vals, x)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# spill kernel (the parity reference)
+# ---------------------------------------------------------------------------
 
 def _vsr_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win):
     rows = rows_ref[0, :]                      # (T,) global row ids
@@ -100,23 +251,62 @@ def _vsr_call(rows, cols, vals, row_base, x, *, m, win, tile_n, interpret):
     return y[:m]
 
 
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _pad_n(x2: jax.Array, tile_n: int) -> jax.Array:
+    k, n = x2.shape
+    n_pad = -(-n // tile_n) * tile_n
+    return jnp.pad(x2, ((0, 0), (0, n_pad - n))) if n_pad != n else x2
+
+
+def spmm_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
+                   wb: int | None = None, tile_n: int | None = None,
+                   interpret: bool | None = None,
+                   visit_tile: jax.Array | None = None,
+                   visit_block: jax.Array | None = None,
+                   visit_start: jax.Array | None = None) -> jax.Array:
+    """Spill-fused NB+PR SpMM: no partials buffer, no post-kernel combine.
+
+    The visit schedule may be precomputed (``plan_visits`` at plan time) so
+    the call stays traceable when ``bal`` carries traced values."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    geom = TileGeometry()
+    wb = geom.wb if wb is None else wb
+    tile_n = geom.tile_n if tile_n is None else tile_n
+    x2 = x[:, None] if x.ndim == 1 else x
+    n = x2.shape[1]
+    if visit_tile is None or visit_block is None or visit_start is None:
+        vt, vb, vs = plan_visits(bal, wb)
+        visit_tile, visit_block, visit_start = map(jnp.asarray, (vt, vb, vs))
+    xp = _pad_n(x2, tile_n)
+    y = _vsr_fused_call(visit_tile, visit_block, visit_start,
+                        bal.rows, bal.cols, bal.vals, xp,
+                        m=bal.shape[0], wb=wb, tile_n=tile_n,
+                        interpret=interpret)
+    y = y[:, :n].astype(x2.dtype)
+    return y[:, 0] if x.ndim == 1 else y
+
+
 def spmm_vsr(bal: BalancedCOO, x: jax.Array, *, tile_n: int = 128,
              interpret: bool | None = None,
              row_base: jax.Array | None = None,
              win: int | None = None) -> jax.Array:
-    """NB+PR SpMM. ``x``: (K, N) — N padded to ``tile_n`` internally.
+    """NB+PR SpMM, spill-and-combine variant (the fused path's parity
+    reference).  ``x``: (K, N) — N padded to ``tile_n`` internally.
 
     ``row_base``/``win`` may be precomputed (``plan_windows`` at plan time) so
     the call stays traceable when ``bal`` carries traced values."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     x2 = x[:, None] if x.ndim == 1 else x
-    k, n = x2.shape
+    n = x2.shape[1]
     if row_base is None or win is None:
         base, win = plan_windows(bal)
         row_base = jnp.asarray(base)
-    n_pad = -(-n // tile_n) * tile_n
-    xp = jnp.pad(x2, ((0, 0), (0, n_pad - n))) if n_pad != n else x2
+    xp = _pad_n(x2, tile_n)
     y = _vsr_call(bal.rows, bal.cols, bal.vals, row_base, xp,
                   m=bal.shape[0], win=win, tile_n=tile_n, interpret=interpret)
     y = y[:, :n].astype(x2.dtype)
@@ -130,18 +320,25 @@ def spmm_as_n_spmv_pallas(bal: BalancedCOO, x: jax.Array, *,
     """Paper §2.1.2 strawman on the *Pallas* backend: N column-by-column VSR
     SpMVs, each re-gathering the sparse stream — the redundant loads VDL
     eliminates, implemented with the same physical kernel family as
-    ``spmm_vsr`` so the ablation compares like-for-like backends."""
-    from .spmv import spmv_vsr
+    ``spmm_vsr`` so the ablation compares like-for-like backends.
+
+    With precomputed ``row_base``/``win`` the per-column SpMV is the spill
+    variant (backwards compatible); otherwise the fused variant, matching
+    the fused SpMM it is ablated against."""
+    from .spmv import spmv_vsr, spmv_vsr_fused
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     x2 = x[:, None] if x.ndim == 1 else x
-    if row_base is None or win is None:
-        base, win = plan_windows(bal)
-        row_base = jnp.asarray(base)
-    out = jax.lax.map(
-        lambda col: spmv_vsr(bal, col, interpret=interpret,
-                             row_base=row_base, win=win),
-        x2.T).T                          # sequential over columns, like N launches
+    if row_base is not None and win is not None:
+        one_col = lambda col: spmv_vsr(bal, col, interpret=interpret,
+                                       row_base=row_base, win=win)
+    else:
+        wb = TileGeometry().wb
+        vt, vb, vs = map(jnp.asarray, plan_visits(bal, wb))
+        one_col = lambda col: spmv_vsr_fused(
+            bal, col, interpret=interpret, wb=wb, visit_tile=vt,
+            visit_block=vb, visit_start=vs)
+    out = jax.lax.map(one_col, x2.T).T  # sequential over columns, like N launches
     return out[:, 0] if x.ndim == 1 else out
 
 
@@ -149,19 +346,50 @@ def spmm_as_n_spmv_pallas(bal: BalancedCOO, x: jax.Array, *,
 # registry: the Pallas physical kernels for the nnz-balanced logical pair.
 # On TPU the in-tile reduction-style split collapses (DESIGN.md §2): both
 # nb_sr and nb_pr resolve to this binary; N=1 takes the VPU SpMV variant.
+# The fused path is the default; ``spill=True`` forces the parity reference.
 # ---------------------------------------------------------------------------
 
-def _prep_windows(bal: BalancedCOO) -> dict:
-    base, win = plan_windows(bal)
-    return {"row_base": jnp.asarray(base), "win": win}
+def _prep_windows(bal: BalancedCOO, *, geometry: TileGeometry | None = None,
+                  max_win: int | None = None, spill_only: bool = False) -> dict:
+    """Prep hook for both NB paths: the spill row windows (also consumed by
+    the sharded backend, which stacks them per shard) plus the fused visit
+    schedule and its geometry.  ``geometry`` is the plan's autotuned
+    ``TileGeometry`` (``None`` → defaults); ``spill_only=True`` skips the
+    visit schedule (the sharded backend runs the spill inner path and would
+    discard it)."""
+    base, win = plan_windows(bal, max_win=max_win)
+    if spill_only:
+        return {"row_base": jnp.asarray(base), "win": win}
+    geom = (geometry or TileGeometry()).validate()
+    vt, vb, vs = plan_visits(bal, geom.wb)
+    return {"row_base": jnp.asarray(base), "win": win,
+            "visit_tile": jnp.asarray(vt), "visit_block": jnp.asarray(vb),
+            "visit_start": jnp.asarray(vs),
+            "wb": geom.wb, "tile_n": geom.tile_n}
 
 
 def _pallas_nb(bal: BalancedCOO, x: jax.Array, *, interpret: bool | None = None,
-               row_base: jax.Array | None = None, win: int | None = None):
+               row_base: jax.Array | None = None, win: int | None = None,
+               visit_tile: jax.Array | None = None,
+               visit_block: jax.Array | None = None,
+               visit_start: jax.Array | None = None,
+               wb: int | None = None, tile_n: int | None = None,
+               spill: bool = False):
+    fused = visit_tile is not None and not spill
     if x.ndim == 1:
-        from .spmv import spmv_vsr
+        from .spmv import spmv_vsr, spmv_vsr_fused
+        if fused:
+            return spmv_vsr_fused(bal, x, interpret=interpret, wb=wb,
+                                  visit_tile=visit_tile,
+                                  visit_block=visit_block,
+                                  visit_start=visit_start)
         return spmv_vsr(bal, x, interpret=interpret, row_base=row_base, win=win)
-    return spmm_vsr(bal, x, interpret=interpret, row_base=row_base, win=win)
+    if fused:
+        return spmm_vsr_fused(bal, x, interpret=interpret, wb=wb,
+                              tile_n=tile_n, visit_tile=visit_tile,
+                              visit_block=visit_block, visit_start=visit_start)
+    return spmm_vsr(bal, x, interpret=interpret, row_base=row_base, win=win,
+                    **({} if tile_n is None else {"tile_n": tile_n}))
 
 
 registry.register("nb_pr", "pallas", "balanced", _pallas_nb, prep=_prep_windows)

@@ -1,0 +1,287 @@
+"""Spill-fusion parity + autotuned tile geometry (DESIGN.md §6).
+
+Fused NB kernels (in-kernel spill accumulation, no partials buffer) against
+the spill-and-combine parity reference and the xla lowering, across skewed
+R-MAT patterns, empty rows, single-row matrices, bf16, and N in {1, 7, 128,
+300} — forward and backward; plus the geometry plumbing: visit-schedule
+invariants, PlanCache keying, thresholds v2 persistence, the tuner, the
+pathological-span guard, and the rs_pr width-chunking fix."""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SelectorThresholds, TileGeometry, csr_from_dense,
+                        csr_to_balanced, csr_to_ell, execute, geometry_key,
+                        plan, rmat, spmm_rs_pr)
+from repro.core.cache import PlanCache, cached_plan, pattern_fingerprint
+from repro.kernels.spmv import spmv_vsr, spmv_vsr_fused
+from repro.kernels.vsr import (plan_visits, plan_windows, spmm_vsr,
+                               spmm_vsr_fused)
+
+from conftest import random_csr
+
+
+def _cases(rng):
+    """(name, csr, dense) sweep: skew, empty rows, single row."""
+    cases = []
+    skewed = rmat(6, 8, seed=3)                      # 64x64, heavy skew
+    cases.append(("skewed_rmat", skewed, np.asarray(skewed.to_dense())))
+    a = np.zeros((48, 40), np.float32)               # empty-row bands
+    a[1, :7] = rng.standard_normal(7)
+    a[30, 5] = 2.5                                    # rows 2..29 empty
+    a[45:, :] = (rng.random((3, 40)) < 0.3) * rng.standard_normal((3, 40))
+    cases.append(("empty_rows", csr_from_dense(a), a))
+    b = (rng.random((1, 40)) < 0.5) * rng.standard_normal((1, 40))
+    b = b.astype(np.float32)
+    cases.append(("single_row", csr_from_dense(b), b))
+    return cases
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 300])
+def test_fused_matches_spill_and_xla(rng, n):
+    for name, csr, a in _cases(rng):
+        bal = csr_to_balanced(csr, tile=64)
+        x = rng.standard_normal((csr.shape[1], n)).astype(np.float32)
+        xj = jnp.asarray(x[:, 0] if n == 1 else x)
+        ref = a @ x[:, 0] if n == 1 else a @ x
+        if n == 1:
+            got_f = np.asarray(spmv_vsr_fused(bal, xj, wb=16, interpret=True))
+            got_s = np.asarray(spmv_vsr(bal, xj, interpret=True))
+        else:
+            got_f = np.asarray(spmm_vsr_fused(bal, xj, wb=16, interpret=True))
+            got_s = np.asarray(spmm_vsr(bal, xj, interpret=True))
+        np.testing.assert_allclose(got_f, ref, atol=2e-3, err_msg=name)
+        np.testing.assert_allclose(got_f, got_s, atol=2e-3, err_msg=name)
+
+
+@pytest.mark.parametrize("n", [1, 7])
+def test_fused_registry_default_through_execute(rng, n):
+    """The registry's pallas NB path defaults to the fused kernels: execute
+    produces the reference answer with the prep-time visit schedule."""
+    for name, csr, a in _cases(rng):
+        p = plan(csr, backend="pallas", tile=64)
+        entry = p.entry("nb_pr")
+        opts = p.kernel_opts(entry)
+        assert {"visit_tile", "visit_block", "visit_start",
+                "wb", "tile_n"} <= set(opts), name
+        x = rng.standard_normal((csr.shape[1], n)).astype(np.float32)
+        xj = jnp.asarray(x[:, 0] if n == 1 else x)
+        got = np.asarray(execute(p, xj, impl="nb_pr", interpret=True))
+        ref = a @ x[:, 0] if n == 1 else a @ x
+        np.testing.assert_allclose(got, ref, atol=2e-3, err_msg=name)
+
+
+def test_fused_bf16(rng):
+    csr, a = random_csr(rng, 64, 64, 0.2)
+    bal = csr_to_balanced(csr, tile=64)
+    x = rng.standard_normal((64, 8)).astype(np.float32)
+    got = np.asarray(spmm_vsr_fused(
+        bal, jnp.asarray(x, jnp.bfloat16), wb=16,
+        interpret=True)).astype(np.float32)
+    np.testing.assert_allclose(got, a @ x, atol=0.15, rtol=0.05)
+
+
+def _dense_grads(csr, a, x):
+    nz = np.nonzero(np.asarray(a))
+
+    def f(v, xx):
+        dense = jnp.zeros(a.shape, v.dtype).at[nz].set(v)
+        return ((dense @ xx) ** 2).sum()
+
+    return jax.grad(f, argnums=(0, 1))(csr.data, x)
+
+
+@pytest.mark.parametrize("n", [1, 4])
+def test_fused_grads_match_dense(rng, n):
+    """Gradients flow through core/vjp.py with the fused forward: value- and
+    dense-operand grads for SpMM and the N=1 SpMV variant."""
+    csr = rmat(5, 6, seed=7)                          # skewed 32x32
+    a = np.asarray(csr.to_dense())
+    p = plan(csr, backend="pallas", tile=32)
+    x = rng.standard_normal((32, n)).astype(np.float32)
+    xv = jnp.asarray(x[:, 0] if n == 1 else x)
+    gd_v, gd_x = _dense_grads(csr, a, xv)
+    gv, gx = jax.grad(
+        lambda v, xx: (execute(p, xx, vals=v, impl="nb_pr",
+                               interpret=True) ** 2).sum(),
+        argnums=(0, 1))(csr.data, xv)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(gd_v), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gd_x), atol=2e-3)
+
+
+def test_fused_grads_empty_rows_under_jit(rng):
+    a = np.zeros((24, 20), np.float32)
+    a[0, :5] = rng.standard_normal(5)
+    a[20, 3] = -1.5
+    csr = csr_from_dense(a)
+    p = plan(csr, backend="pallas", tile=16)
+    x = jnp.asarray(rng.standard_normal((20, 3)).astype(np.float32))
+    gd_v, gd_x = _dense_grads(csr, a, x)
+    grad_fn = jax.jit(jax.grad(
+        lambda v, xx: (execute(p, xx, vals=v, impl="nb_sr",
+                               interpret=True) ** 2).sum(), argnums=(0, 1)))
+    gv, gx = grad_fn(csr.data, x)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(gd_v), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gd_x), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# visit-schedule invariants
+# ---------------------------------------------------------------------------
+
+def test_plan_visits_invariants(rng):
+    for name, csr, a in _cases(rng):
+        for wb in (8, 16, 64):
+            bal = csr_to_balanced(csr, tile=32)
+            vt, vb, vs = plan_visits(bal, wb)
+            m = bal.shape[0]
+            mb = max(1, -(-m // wb))
+            # non-decreasing blocks, full coverage, one start per block
+            assert np.all(np.diff(vb) >= 0), (name, wb)
+            assert set(vb.tolist()) == set(range(mb)), (name, wb)
+            starts = vs.astype(bool)
+            assert starts[0] and np.all(starts[1:] == (vb[1:] != vb[:-1]))
+            # every (tile, block) pair a real row needs is scheduled
+            rows = np.asarray(bal.rows)
+            for t in range(bal.n_tiles):
+                r = rows[t][rows[t] < m]
+                for b in np.unique(r // wb):
+                    assert np.any((vt == t) & (vb == b)), (name, wb, t, b)
+
+
+def test_plan_visits_skew_does_not_tax_every_tile():
+    """The global spill WIN is inflated by one gap-straddling tile; the
+    fused visit count only charges the tiles that cross blocks."""
+    a = np.zeros((4096, 16), np.float32)
+    a[:60, :] = 1.0                                   # dense head (960 nnz)
+    a[4095, 0] = 1.0                                  # far row shares a tile
+    csr = csr_from_dense(a)
+    bal = csr_to_balanced(csr, tile=128)
+    _, win = plan_windows(bal)
+    assert win > 3000                                  # spill: everyone pays
+    vt, vb, vs = plan_visits(bal, 64)
+    # the fused path's DMA cost is tile-stream *runs* (consecutive visits of
+    # one tile — crossings and dummies re-use the resident tile): the gap
+    # only adds empty-block dummy visits, not re-streams
+    runs = 1 + int(np.count_nonzero(vt[1:] != vt[:-1]))
+    assert runs <= bal.n_tiles + 2
+
+
+# ---------------------------------------------------------------------------
+# geometry: thresholds v2, cache keys, tuner, guard
+# ---------------------------------------------------------------------------
+
+def test_thresholds_v2_roundtrip_and_v1_compat(tmp_path):
+    th = SelectorThresholds().with_geometry(
+        geometry_key("pallas", "ab" * 20, 8), TileGeometry(256, 32, 128))
+    text = th.to_json()
+    assert json.loads(text)["version"] == 2
+    assert SelectorThresholds.from_json(text) == th
+    # v1 files (no geometry table) still load
+    v1 = json.dumps({"version": 1, "n_threshold": 4, "pr_avg_row": 32.0,
+                     "sr_cv": 0.5})
+    th1 = SelectorThresholds.from_json(v1)
+    assert th1.geometries == () and th1.max_win == 4096
+    # plain thresholds still write v1
+    assert json.loads(SelectorThresholds().to_json())["version"] == 1
+    with pytest.raises(ValueError):
+        SelectorThresholds(geometries=(("k", (0, 32, 128)),)).validate()
+    with pytest.raises(ValueError):
+        TileGeometry(512, 12, 128).validate()          # wb not sublane-aligned
+
+
+def test_geometry_distinct_cache_entries(rng):
+    csr, _ = random_csr(rng, 32, 32, 0.2)
+    cache = PlanCache(capacity=8)
+    g1 = TileGeometry(256, 32, 128)
+    g2 = TileGeometry(512, 64, 128)
+    p1 = cached_plan(csr, cache=cache, backend="xla", geometry=g1)
+    p2 = cached_plan(csr, cache=cache, backend="xla", geometry=g2)
+    p1b = cached_plan(csr, cache=cache, backend="xla", geometry=g1)
+    assert p1 is p1b and p1 is not p2                 # distinct ⇒ distinct
+    s = cache.stats()
+    assert s["builds"] == 2 and s["hits"] == 1
+    # geometry-bearing thresholds segment the key too
+    th = SelectorThresholds().with_geometry(
+        geometry_key("xla", pattern_fingerprint(csr), None), g1)
+    p3 = cached_plan(csr, cache=cache, backend="xla", thresholds=th)
+    assert p3 is not p1 and p3.tile == g1.tile
+
+
+def test_autotuner_picks_up_in_plan(rng):
+    from repro.kernels.tune import autotune_geometry
+    csr, a = random_csr(rng, 40, 30, 0.25)
+    cands = (TileGeometry(64, 8, 128), TileGeometry(128, 16, 128))
+    th = autotune_geometry(csr, ns=(4,), backend="pallas", interpret=True,
+                           repeats=1, candidates=cands)
+    keys = dict(th.geometries)
+    fp = pattern_fingerprint(csr)
+    assert geometry_key("pallas", fp, 4) in keys
+    assert geometry_key("pallas", fp, None) in keys   # wildcard entry
+    p = plan(csr, backend="pallas", thresholds=th, n_hint=4)
+    assert p.geometry in cands and p.tile == p.geometry.tile
+    x = jnp.asarray(rng.standard_normal((30, 4)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(execute(p, x, impl="nb_pr", interpret=True)),
+        a @ np.asarray(x), atol=2e-3)
+    # the public facade reaches the N-bucketed entry too (regression: sparse
+    # didn't forward n_hint into geometry resolution)
+    import repro.api as api
+    m = api.sparse(csr, backend="pallas", thresholds=th, n_hint=4,
+                   cache=False)
+    assert m.plan.geometry == p.geometry
+    m2 = api.sparse(csr, backend="pallas", thresholds=th, n_hint=4)
+    m3 = api.sparse(csr, backend="pallas", thresholds=th, n_hint=3)
+    assert m3.plan is m2.plan        # same bucket ⇒ same resolved geometry
+
+
+def test_modeled_traffic_fused_wins_on_skew():
+    from repro.kernels.tune import modeled_traffic
+    csr = rmat(8, 16, seed=11)                        # skewed 256x256
+    t = modeled_traffic(csr, 128)
+    assert t["fused_bytes"] < t["spill_bytes"]
+    assert t["bytes_reduction"] > 1.0
+    assert t["fused_ai"] > t["spill_ai"]
+
+
+def test_pathological_span_falls_back_to_xla(rng):
+    a = np.zeros((5000, 16), np.float32)
+    a[0, :4] = 1.0
+    a[4999, 0] = 1.0                                   # 5000-row gap in 1 tile
+    csr = csr_from_dense(a)
+    with pytest.warns(UserWarning, match="max_win"):
+        p = plan(csr, backend="pallas")
+    assert p.backend == "xla"
+    x = jnp.asarray(rng.standard_normal((16, 3)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(execute(p, x)), a @ np.asarray(x),
+                               atol=1e-4)
+    # a permissive bound keeps pallas (fused handles the gap fine)
+    th = SelectorThresholds(max_win=1 << 20)
+    p2 = plan(csr, backend="pallas", thresholds=th)
+    assert p2.backend == "pallas"
+    got = np.asarray(execute(p2, x, impl="nb_pr", interpret=True))
+    np.testing.assert_allclose(got, a @ np.asarray(x), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# rs_pr width chunking
+# ---------------------------------------------------------------------------
+
+def test_rs_pr_width_chunking_matches_unchunked(rng):
+    a = np.zeros((40, 64), np.float32)
+    a[7, :] = rng.standard_normal(64)                  # hub row → width 64
+    a[: 40] += (rng.random((40, 64)) < 0.05) * rng.standard_normal((40, 64))
+    a = a.astype(np.float32)
+    ell = csr_to_ell(csr_from_dense(a))
+    x = jnp.asarray(rng.standard_normal((64, 5)).astype(np.float32))
+    full = np.asarray(spmm_rs_pr(ell, x))              # one-shot path
+    chunked = np.asarray(spmm_rs_pr(ell, x, slab_elems=40 * 5 * 3))
+    np.testing.assert_allclose(chunked, full, atol=1e-4)
+    np.testing.assert_allclose(chunked, a @ np.asarray(x), atol=1e-3)
+    # 1-D operand and jit through the chunked path
+    xv = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    got = jax.jit(lambda v: spmm_rs_pr(ell, v, slab_elems=100))(xv)
+    np.testing.assert_allclose(np.asarray(got), a @ np.asarray(xv), atol=1e-3)
