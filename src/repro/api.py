@@ -48,7 +48,8 @@ from repro.core.stats import MatrixStats
 
 __all__ = [
     "SparseMatrix", "sparse", "pattern_matmul", "use_backend", "use_mesh",
-    "calibrate", "calibrate_backend", "autotune_geometry", "cache_stats",
+    "calibrate", "calibrate_backend", "autotune_geometry", "autotune_overlap",
+    "cache_stats",
     "clear_cache", "PlanArtifact", "PlanBuilder", "PlanCache",
     "SelectorThresholds", "TileGeometry", "geometry_key",
     "execute", "save_thresholds", "load_thresholds",
@@ -178,22 +179,35 @@ class SparseMatrix:
 
     def shard(self, mesh=None, *, axis: str | None = None,
               kind: str | None = None,
-              inner_backend: str | None = None) -> "SparseMatrix":
+              inner_backend: str | None = None,
+              geometry: TileGeometry | None = None) -> "SparseMatrix":
         """Re-plan this operand onto the partition-aware sharded backend
         (``core/shard.py``): the stats-driven partitioner picks row-split or
         nnz-balanced per the CV rule.  ``mesh`` defaults to the ``use_mesh``
-        scope."""
+        scope.
+
+        Tile geometries are tuned *per backend*, so this plan's resolved
+        geometry carries over only when the sharded inner backend is the
+        same backend it was resolved for; otherwise the re-plan consults the
+        thresholds table keyed on the inner backend (explicit ``geometry=``
+        always wins)."""
         if mesh is None:
             mesh, scoped_axis = scoped_mesh()
             axis = axis or scoped_axis
         if mesh is None:
             raise ValueError("shard() needs a mesh (argument or use_mesh scope)")
+        if geometry is None:
+            old = self._plan
+            geom_backend = ((old.inner_backend or default_backend())
+                            if old.backend == "sharded" else old.backend)
+            lookup = inner_backend or default_backend()
+            geometry = old.geometry if lookup == geom_backend else None
         p = _plan_maybe_cached(self._plan.csr, cache=self._cache,
                                backend="sharded", mesh=mesh,
                                thresholds=self._plan.thresholds,
                                tile=self._plan.tile,
                                bsr_block=self._plan.bsr_block,
-                               geometry=self._plan.geometry,
+                               geometry=geometry,
                                shard_axis=axis, shard_kind=kind,
                                inner_backend=inner_backend)
         return SparseMatrix(p, values=self._values, cache=self._cache)
@@ -333,6 +347,16 @@ def autotune_geometry(csr_or_matrix, **kwargs) -> SelectorThresholds:
     return _tune(csr, **kwargs)
 
 
+def autotune_overlap(csr_or_matrix, mesh, **kwargs) -> SelectorThresholds:
+    """Measure the sharded compute/collective overlap crossover on ``mesh``
+    and return thresholds with the winning ``overlap_min_n`` (DESIGN.md §7;
+    ``repro.kernels.tune.autotune_overlap`` for the knobs)."""
+    from repro.kernels.tune import autotune_overlap as _tune
+    csr = (csr_or_matrix.plan.csr if isinstance(csr_or_matrix, SparseMatrix)
+           else csr_or_matrix)
+    return _tune(csr, mesh, **kwargs)
+
+
 def calibrate_backend(save_to: str | None = None, *,
                       matrices: dict | None = None,
                       ns: tuple = (1, 8), repeats: int = 2,
@@ -341,7 +365,9 @@ def calibrate_backend(save_to: str | None = None, *,
                       avg_grid: tuple = (8.0, 16.0, 32.0, 64.0),
                       cv_grid: tuple = (0.25, 0.5, 1.0, 2.0),
                       tune_geometry: bool = False,
-                      geometry_candidates: tuple | None = None):
+                      geometry_candidates: tuple | None = None,
+                      overlap_mesh=None,
+                      overlap_ns: tuple = (256, 512, 1024)):
     """Measure the 2x2 kernel grid on *this* backend and grid-search selector
     thresholds (paper §2.2/§3.2), optionally persisting the winner where
     ``$REPRO_THRESHOLDS`` will auto-load it.  The runtime driver runs this as
@@ -350,7 +376,10 @@ def calibrate_backend(save_to: str | None = None, *,
 
     ``tune_geometry=True`` additionally runs the Pallas tile-geometry sweep
     (``repro.kernels.tune``) over the same matrices and folds the measured
-    winners into the persisted thresholds' ``geometries`` table."""
+    winners into the persisted thresholds' ``geometries`` table.
+    ``overlap_mesh`` (a device mesh) additionally measures the sharded
+    compute/collective overlap crossover (``autotune_overlap``) on that mesh
+    and folds the measured ``overlap_min_n`` into the result."""
     from repro.core.rmat import rmat
     from repro.core.selector import calibrate as grid_search
 
@@ -379,6 +408,16 @@ def calibrate_backend(save_to: str | None = None, *,
             best = _tune(csr, ns=tune_ns, backend=backend, thresholds=best,
                          repeats=repeats, candidates=geometry_candidates)
         report["geometries"] = dict(best.geometries)
+    if overlap_mesh is not None:
+        from repro.core.stats import matrix_stats
+        from repro.kernels.tune import autotune_overlap as _overlap
+        # the overlap tax is worst where tile-split (psum) plans live:
+        # pick the most skewed calibration matrix by CV, not dict order
+        skewed = max(matrices.values(), key=lambda c: matrix_stats(c).cv)
+        best = _overlap(skewed, overlap_mesh, ns=overlap_ns,
+                        thresholds=best, inner_backend=backend,
+                        repeats=repeats)
+        report["overlap_min_n"] = int(best.overlap_min_n)
     if save_to is not None:
         save_thresholds(best, save_to)
     return best, report

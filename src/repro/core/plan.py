@@ -130,23 +130,28 @@ def _register_opts(opts: dict) -> str:
 _PREP_KWARGS: dict = {}
 
 
+#: plan-context kwargs a prep hook may opt into by declaring them
+_PREP_CONTEXT_NAMES = ("geometry", "max_win", "overlap_min_n")
+
+
 def _prep_context_kwargs(prep, ctx: dict) -> dict:
-    """Filter the plan-context kwargs (autotuned geometry, guard thresholds)
-    down to the ones this prep hook declares.  Prep hooks keep the minimal
-    ``prep(substrate)`` signature unless they opt into context — the Pallas
-    NB prep takes ``geometry=``/``max_win=``, the BSR and sharded preps take
-    nothing — so the registry contract stays backward compatible."""
+    """Filter the plan-context kwargs (autotuned geometry, guard thresholds,
+    the sharded overlap cutoff) down to the ones this prep hook declares.
+    Prep hooks keep the minimal ``prep(substrate)`` signature unless they opt
+    into context — the Pallas NB prep takes ``geometry=``/``max_win=``, the
+    sharded prep additionally ``overlap_min_n=``, the BSR prep nothing — so
+    the registry contract stays backward compatible."""
     accepted = _PREP_KWARGS.get(prep)
     if accepted is None:
         try:
             params = inspect.signature(prep).parameters.values()
             if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
-                accepted = ("geometry", "max_win")
+                accepted = _PREP_CONTEXT_NAMES
             else:
                 accepted = tuple(p.name for p in params
                                  if p.kind in (inspect.Parameter.KEYWORD_ONLY,
                                                inspect.Parameter.POSITIONAL_OR_KEYWORD)
-                                 and p.name in ("geometry", "max_win"))
+                                 and p.name in _PREP_CONTEXT_NAMES)
         except (TypeError, ValueError):
             accepted = ()
         _PREP_KWARGS[prep] = accepted
@@ -316,10 +321,14 @@ class PlanBuilder:
         return select_kernel(self.stats, n, self.thresholds)
 
     def with_thresholds(self, th: SelectorThresholds) -> "PlanBuilder":
-        """Same matrix and caches, different decision thresholds."""
+        """Same matrix and substrate caches, different decision thresholds.
+        Prep opts bake thresholds-derived context (``max_win``, the sharded
+        ``overlap_min_n``), so the opts cache resets along with the bound
+        kernels — sharing it would serve opts built under the old cutoffs
+        (and alias new ones back into the original plan)."""
         if th == self.thresholds:
             return self
-        return dataclasses.replace(self, thresholds=th, _bound={})
+        return dataclasses.replace(self, thresholds=th, _opts={}, _bound={})
 
     # -- topology -----------------------------------------------------------
     def topology_key(self) -> str:
@@ -352,7 +361,8 @@ class PlanBuilder:
             else:
                 ctx = _prep_context_kwargs(
                     entry.prep, {"geometry": self.geometry,
-                                 "max_win": self.thresholds.max_win})
+                                 "max_win": self.thresholds.max_win,
+                                 "overlap_min_n": self.thresholds.overlap_min_n})
                 with jax.ensure_compile_time_eval():
                     opts = dict(entry.prep(self.substrate(entry.substrate),
                                            **ctx))
@@ -528,6 +538,18 @@ def plan(csr: CSR, *, n_hint: int | None = None,
                 "window without adding work); falling back to the xla "
                 "backend", stacklevel=2)
             backend = "xla"
+    elif (backend == "sharded"
+          and (inner_backend or registry.default_backend()) == "pallas"):
+        # the same guard one level down: a pathological global span means
+        # per-shard spans (same quota, shard-local alignment) are in the
+        # same regime, so demote the *inner* backend
+        span = balanced_tile_span(csr, tile)
+        if span > th.max_win:
+            warnings.warn(
+                f"worst balanced tile spans {span} rows > thresholds."
+                f"max_win={th.max_win}; sharded plan falls back to the xla "
+                "inner backend", stacklevel=2)
+            inner_backend = "xla"
     spec = None
     if backend == "sharded":
         if mesh is None:
@@ -702,7 +724,8 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
         from . import shard as shard_mod
         return shard_mod.execute_pattern_sharded(
             rows, cols, vals, tuple(shape), x, mesh=mesh, axis=shard_axis,
-            impl=impl, interpret=interpret)
+            impl=impl, interpret=interpret,
+            backend=None if backend == "sharded" else backend)
     explicit = backend is not None
     backend = backend or registry.default_backend()
     entry = registry.resolve(impl, backend)

@@ -104,6 +104,11 @@ class SelectorThresholds:
     # back from the Pallas backend to xla instead of sizing a spill window
     # — and its one-hot matmul — off the gap (DESIGN.md §6).
     max_win: int = 4096
+    # sharded psum plans with dense width N >= this chunk the width axis and
+    # replace the trailing blocking psum with a compute-overlapped
+    # collective-permute ring (DESIGN.md §7); below it one fused psum wins.
+    # Measured per backend by ``kernels/tune.autotune_overlap``.
+    overlap_min_n: int = 512
     # autotuned tile geometries: sorted ((geometry_key, (tile, wb, tile_n)),
     # ...) — a tuple-of-tuples so thresholds stay hashable (they ride
     # ``PlanMeta`` static aux and the ``PlanCache`` key, which is how a
@@ -138,11 +143,12 @@ class SelectorThresholds:
              "pr_avg_row": float(self.pr_avg_row),
              "sr_cv": float(self.sr_cv),
              "partition_cv": float(self.partition_cv)}
-        if self.geometries or self.max_win != 4096:
+        if self.geometries or self.max_win != 4096 or self.overlap_min_n != 512:
             # geometry-bearing calibrations write the v2 schema; plain
             # selector calibrations stay v1 so older readers keep loading
             d["version"] = 2
             d["max_win"] = int(self.max_win)
+            d["overlap_min_n"] = int(self.overlap_min_n)
             d["geometries"] = {k: list(v) for k, v in self.geometries}
         return json.dumps(d, indent=2)
 
@@ -159,6 +165,7 @@ class SelectorThresholds:
                  # absent in pre-sharding calibrations; default keeps them valid
                  partition_cv=float(d.get("partition_cv", 1.0)),
                  max_win=int(d.get("max_win", 4096)),
+                 overlap_min_n=int(d.get("overlap_min_n", 512)),
                  geometries=geoms)
         th.validate()
         return th
@@ -178,6 +185,9 @@ class SelectorThresholds:
                 raise ValueError(f"{name} must be >= 0, got {v!r}")
         if self.max_win < 1:
             raise ValueError(f"max_win must be >= 1, got {self.max_win}")
+        if self.overlap_min_n < 1:
+            raise ValueError(f"overlap_min_n must be >= 1, "
+                             f"got {self.overlap_min_n}")
         for key, vals in self.geometries:
             if len(vals) != 3:
                 raise ValueError(f"geometry {key!r} must be (tile, wb, "

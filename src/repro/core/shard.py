@@ -32,11 +32,23 @@ dense operand is the ``psum`` of per-shard ``Aᵀ·g`` cotangents, which
 shard_map derives automatically).  ``execute`` remains the single
 interception point; per-shard substrates build lazily through the plan's
 substrate cache.
+
+Two multi-chip hot-path refinements (DESIGN.md §7): Pallas NB inners run
+the *fused* visit-schedule kernels by default — ragged per-shard schedules
+pad with no-op visits and stack ``(n_shards, max_visits)``
+(``stack_visit_schedules``), so no ``(n_tiles, WIN, N)`` partials buffer
+lives inside ``shard_map`` and low-skew shards stop paying the worst
+shard's spill window — and ``psum`` plans at ``N >=
+thresholds.overlap_min_n`` replace the trailing blocking psum with a
+width-chunked ``ppermute`` ring whose per-slab collectives overlap the next
+slab's compute (``_overlapped_ring``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+from collections import OrderedDict
 from typing import Any, Tuple
 
 import jax
@@ -244,89 +256,250 @@ def build_sharded_substrate(csr: CSR, spec: ShardSpec, mesh, *,
 # ---------------------------------------------------------------------------
 
 # stable inner-kernel callables: the custom VJPs key retraces on the identity
-# of their static (bound_fn, shape) tuple, so bind per (entry, interpret, win)
-_INNER_BOUND: dict = {}
+# of their static (bound_fn, shape) tuple, so bind per (entry, interpret,
+# static opts, tensor-opt names).  Bounded-LRU like PlanCache — geometry
+# sweeps and interpret toggles must not grow process memory without bound.
+_INNER_BOUND_CAP = 256
+_INNER_BOUND: "OrderedDict" = OrderedDict()
 
 
-def _make_inner(entry: registry.KernelEntry, interpret, win):
-    key = (entry, interpret, win)
+def _make_inner(entry: registry.KernelEntry, interpret, statics: dict = {},
+                tensor_keys: tuple = ()):
+    """Identity-cached inner-kernel callable for the shard_map body.
+
+    ``statics`` (ints: ``win``/``wb``/``tile_n``) bake into the partial;
+    ``tensor_keys`` name the per-shard prep artifacts (row windows, visit
+    schedules) the callable takes as trailing *tensor* arguments — those are
+    sliced inside shard_map and must not be baked into the (static) fn."""
+    key = (entry, interpret, tuple(sorted(statics.items())), tensor_keys)
     fn = _INNER_BOUND.get(key)
-    if fn is None:
-        if entry.prep is None:
-            fn = functools.partial(entry.fn, interpret=interpret)
-        else:
-            # preppy inner kernels (Pallas VSR) take their per-shard prep
-            # artifact as a trailing *tensor* argument — it is sliced inside
-            # shard_map and must not be baked into the (static) partial.
-            def fn(sub, x, row_base, *, _f=entry.fn):
-                return _f(sub, x, interpret=interpret, row_base=row_base,
-                          win=win)
-        _INNER_BOUND[key] = fn
+    if fn is not None:
+        _INNER_BOUND.move_to_end(key)
+        return fn
+    if entry.prep is None and not statics and not tensor_keys:
+        fn = functools.partial(entry.fn, interpret=interpret)
+    else:
+        def fn(sub, x, *tensors, _f=entry.fn, _st=dict(statics),
+               _tk=tensor_keys):
+            return _f(sub, x, interpret=interpret, **_st,
+                      **dict(zip(_tk, tensors)))
+    _INNER_BOUND[key] = fn
+    while len(_INNER_BOUND) > _INNER_BOUND_CAP:
+        _INNER_BOUND.popitem(last=False)
     return fn
 
 
-def _sharded_prep(sub: ShardedSubstrate, *, _logical: str) -> dict:
-    """Run the inner entry's host-side prep per shard; stack the artifacts."""
+#: visit_start code marking a *padding* visit in a stacked schedule: neither
+#: the init (1) nor the accumulate (0) branch of the fused kernels fires, so
+#: the step is a pure no-op — it re-points at the previous visit's (tile,
+#: block) pair, so the pipeline re-fetches nothing and flushes nothing.
+VISIT_PAD = 2
+
+
+def stack_visit_schedules(schedules) -> tuple:
+    """Pad ragged per-shard ``plan_visits`` schedules to one dense stack.
+
+    ``schedules``: [(visit_tile, visit_block, visit_start), ...] per shard.
+    Each is padded to the longest shard's visit count with ``VISIT_PAD``
+    no-op visits that borrow the shard's *last* (tile, block) pair — an
+    unchanged BlockSpec index between consecutive grid steps costs no DMA,
+    and the PAD code skips both ``pl.when`` branches, so padding costs only
+    the grid step itself.  Returns ``(vt, vb, vs)`` each ``(n_shards,
+    max_visits)`` int32 — low-skew shards stop paying the worst shard's
+    schedule beyond those free steps."""
+    vmax = max(len(vt) for vt, _, _ in schedules)
+    vts, vbs, vss = [], [], []
+    for vt, vb, vs in schedules:
+        pad = vmax - len(vt)
+        vts.append(np.concatenate([vt, np.full(pad, vt[-1], np.int32)]))
+        vbs.append(np.concatenate([vb, np.full(pad, vb[-1], np.int32)]))
+        vss.append(np.concatenate([vs, np.full(pad, VISIT_PAD, np.int32)]))
+    return np.stack(vts), np.stack(vbs), np.stack(vss)
+
+
+def _stack_prep_opts(per_shard: list) -> dict:
+    """Stack per-shard prep-opt dicts into one sharded opts dict.
+
+    Tensor opts stack on a leading shard dim (visit schedules pad first);
+    the spill ``win`` is the max — the *shared static* the spill parity path
+    still needs, and exactly the tax the fused schedules avoid.  Geometry
+    statics (``wb``/``tile_n``) must agree across shards (one plan, one
+    geometry)."""
+    out: dict = {}
+    first = per_shard[0]
+    if "row_base" in first:
+        out["row_base"] = jnp.asarray(
+            np.stack([np.asarray(o["row_base"]) for o in per_shard]))
+        out["win"] = max(int(o["win"]) for o in per_shard)
+    if "visit_tile" in first:
+        vt, vb, vs = stack_visit_schedules(
+            [(np.asarray(o["visit_tile"]), np.asarray(o["visit_block"]),
+              np.asarray(o["visit_start"])) for o in per_shard])
+        out["visit_tile"] = jnp.asarray(vt)
+        out["visit_block"] = jnp.asarray(vb)
+        out["visit_start"] = jnp.asarray(vs)
+        for k in ("wb", "tile_n"):
+            vals = {int(o[k]) for o in per_shard if o.get(k) is not None}
+            if len(vals) > 1:
+                raise ValueError(f"per-shard prep disagrees on {k!r}: {vals}")
+            if vals:
+                out[k] = vals.pop()
+    return out
+
+
+def _sharded_prep(sub: ShardedSubstrate, *, _logical: str,
+                  geometry=None, max_win=None, overlap_min_n=None) -> dict:
+    """Run the inner entry's host-side prep per shard; stack the artifacts.
+
+    Fused visit schedules are per-shard ragged (visit counts differ), so
+    they are padded with no-op visits and stacked (``stack_visit_schedules``)
+    — the sharded default is the fused inner path, same as single-device.
+    The spill row windows stack alongside as the parity reference (its
+    ``win`` is the max over shards; the fused path never pays it)."""
     inner = registry.resolve(_logical, sub.inner_backend)
     if inner.prep is None:
-        return {}
-    # the fused visit schedule is per-shard *ragged* (visit counts differ),
-    # so the sharded wrapper keeps the spill inner path: ask preps that
-    # support it (the Pallas NB prep does) to skip the schedule entirely,
-    # and stack only the row windows
-    try:
-        import inspect
-        spill_kw = ({"spill_only": True}
-                    if "spill_only" in inspect.signature(inner.prep).parameters
-                    else {})
-    except (TypeError, ValueError):
-        spill_kw = {}
-    bases, wins = [], []
+        # prep-less inners (XLA reference, Pallas rs_*) still get the
+        # overlap cutoff: the ring wraps the reduction, not the kernel
+        return ({} if overlap_min_n is None
+                else {"overlap_min_n": int(overlap_min_n)})
+    from .plan import _prep_context_kwargs
+    ctx = _prep_context_kwargs(inner.prep, {"geometry": geometry,
+                                            "max_win": max_win})
+    # one bulk device→host transfer, then per-shard host-side slicing — N
+    # round trips through np.asarray made plan build O(n_shards) transfers
+    rows_h = np.asarray(sub.rows)
+    cols_h = np.asarray(sub.cols)
+    vals_h = np.asarray(sub.vals)
+    # every emitted opt must have a stacking rule — silently dropping an
+    # opt a future prep depends on would run the kernel without it
+    stackable = {"row_base", "win", "visit_tile", "visit_block",
+                 "visit_start", "wb", "tile_n"}
+    per_shard = []
     for s in range(sub.spec.n_shards):
-        local = BalancedCOO(np.asarray(sub.rows)[s], np.asarray(sub.cols)[s],
-                            np.asarray(sub.vals)[s], sub.inner_shape)
-        opts = dict(inner.prep(local, **spill_kw))
-        if not {"row_base", "win"} <= set(opts):
+        local = BalancedCOO(rows_h[s], cols_h[s], vals_h[s], sub.inner_shape)
+        opts = dict(inner.prep(local, **ctx))
+        if not {"row_base", "win"} <= set(opts) or set(opts) - stackable:
             raise ValueError(f"sharded backend cannot stack prep opts "
                              f"{sorted(opts)} of ({_logical!r}, "
                              f"{sub.inner_backend!r})")
-        bases.append(np.asarray(opts["row_base"]))
-        wins.append(int(opts["win"]))
-    return {"row_base": jnp.asarray(np.stack(bases)), "win": max(wins)}
+        per_shard.append(opts)
+    stacked = _stack_prep_opts(per_shard)
+    if overlap_min_n is not None:
+        stacked["overlap_min_n"] = int(overlap_min_n)
+    return stacked
+
+
+# ---------------------------------------------------------------------------
+# width-chunked collective-permute ring: compute/collective overlap for psum
+# ---------------------------------------------------------------------------
+
+def _ring_psum(y, axis: str, n_shards: int):
+    """All-reduce ``y`` over ``axis`` as an (n-1)-step shift-add ring.
+
+    After step t, a shard holds the sum of its own and its t nearest
+    upstream neighbours' partials; after n-1 steps every shard holds the
+    full sum — same result as ``lax.psum``, but built from ``ppermute``
+    steps that the latency-hiding scheduler can overlap with independent
+    compute (the next width chunk's kernel call)."""
+    if n_shards <= 1:
+        return y
+    perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    acc = y
+    for _ in range(n_shards - 1):
+        acc = jax.lax.ppermute(acc, axis, perm=perm) + y
+    return acc
+
+
+def _overlapped_ring(run_chunk, x, chunk_w: int, axis: str, n_shards: int):
+    """Width-chunked all-reduce with compute/collective overlap.
+
+    ``run_chunk(x_slice)`` computes this shard's partial output slab for one
+    width chunk (the kernel emits output slabs per chunk, the ``spmm_rs_pr``
+    slab shape).  Chunk j+1's kernel call is issued *before* chunk j's ring
+    drains — the two are data-independent, so each slab's permutes hide
+    behind the next slab's compute (collective-matmul style) instead of one
+    trailing blocking psum over the full width."""
+    n = x.shape[1]
+    n_chunks = -(-n // chunk_w)
+    pad = n_chunks * chunk_w - n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    part = run_chunk(x[:, :chunk_w])
+    outs = []
+    for j in range(n_chunks):
+        nxt = (run_chunk(x[:, (j + 1) * chunk_w:(j + 2) * chunk_w])
+               if j + 1 < n_chunks else None)
+        outs.append(_ring_psum(part, axis, n_shards))
+        part = nxt
+    y = jnp.concatenate(outs, axis=1)
+    return y[:, :n] if pad else y
 
 
 def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
-                  interpret=None, row_base=None, win=None):
-    """Run the inner kernel per shard under shard_map; reduce per the spec."""
+                  interpret=None, row_base=None, win=None,
+                  visit_tile=None, visit_block=None, visit_start=None,
+                  wb=None, tile_n=None, overlap_min_n=None,
+                  spill: bool = False):
+    """Run the inner kernel per shard under shard_map; reduce per the spec.
+
+    With stacked visit schedules in the prep opts the inner path is the
+    *fused* NB kernel — no ``(n_tiles, WIN, N)`` partials buffer inside
+    shard_map; ``spill=True`` forces the spill-and-combine inner path (the
+    parity reference, via the stacked ``row_base``/max-``win`` windows).
+    ``reduction == "psum"`` plans at ``N >= overlap_min_n`` replace the
+    trailing blocking psum with the width-chunked ``ppermute`` ring."""
     from .vjp import _exec_balanced, _exec_ell
 
     spec = sub.spec
     inner = registry.resolve(_logical, sub.inner_backend)
-    bound = _make_inner(inner, interpret, win)
+    fused = visit_tile is not None and not spill
+    if fused:
+        statics = {k: v for k, v in (("wb", wb), ("tile_n", tile_n))
+                   if v is not None}
+        tensor_keys = ("visit_tile", "visit_block", "visit_start")
+        tensors = [visit_tile, visit_block, visit_start]
+    elif row_base is not None:
+        statics = {"win": win}
+        tensor_keys = ("row_base",)
+        tensors = [row_base]
+    else:
+        statics, tensor_keys, tensors = {}, (), []
+    bound = _make_inner(inner, interpret, statics, tensor_keys)
 
     if sub.inner_kind == "balanced":
         ops = [sub.rows, sub.cols, sub.vals]
     else:
         ops = [sub.cols, sub.lens, sub.vals]
-    if row_base is not None:
-        ops.append(row_base)
+    ops += tensors
     in_specs = (P(spec.axis),) * len(ops) + (P(),)
     out_specs = P(spec.axis) if spec.reduction == "concat" else P()
+
+    # overlap decision (DESIGN.md §7): chunk the width axis and ring-reduce
+    # only where there is a collective to hide and enough width to chunk
+    chunk_w = tile_n if tile_n is not None else 128
+    chunked = (spec.reduction == "psum" and spec.n_shards > 1
+               and overlap_min_n is not None and x.ndim == 2
+               and x.shape[1] >= max(int(overlap_min_n), chunk_w + 1))
 
     def local(*args):
         *shard_args, xx = args
         shard_args = [a[0] for a in shard_args]  # drop the leading shard dim
-        if sub.inner_kind == "balanced":
-            rows, cols, vals = shard_args[:3]
-            extra = tuple(shard_args[3:])
-            y = _exec_balanced((bound, sub.inner_shape), rows, cols,
-                               vals.reshape(-1), xx, *extra)
-        else:
+
+        def run(xc):
+            if sub.inner_kind == "balanced":
+                rows, cols, vals = shard_args[:3]
+                extra = tuple(shard_args[3:])
+                return _exec_balanced((bound, sub.inner_shape), rows, cols,
+                                      vals.reshape(-1), xc, *extra)
             cols, lens, vals = shard_args[:3]
-            y = _exec_ell((bound, sub.inner_shape), cols, lens, vals, xx)
-        if spec.reduction == "psum":
-            y = jax.lax.psum(y, spec.axis)
-        return y
+            return _exec_ell((bound, sub.inner_shape), cols, lens, vals, xc)
+
+        if spec.reduction != "psum":
+            return run(xx)
+        if chunked:
+            return _overlapped_ring(run, xx, chunk_w, spec.axis,
+                                    spec.n_shards)
+        return jax.lax.psum(run(xx), spec.axis)
 
     y = shard_map(local, mesh=sub.mesh, in_specs=in_specs,
                   out_specs=out_specs, check_rep=False)(*ops, x)
@@ -346,20 +519,33 @@ for _logical in registry.LOGICAL_KERNELS:
 # plan-free sharded entry for trainable patterns (sparse-weight layers)
 # ---------------------------------------------------------------------------
 
+# stacked per-shard prep artifacts keyed by pattern content (bounded LRU):
+# a sparse-weight layer presents the same pattern every step, so the fused
+# schedule stacking runs once per (pattern, mesh split), not per call
+_PATTERN_PREP_CAP = 64
+_PATTERN_PREP: "OrderedDict" = OrderedDict()
+
+
 def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
                             axis: str | None = None, impl: str = "nb_pr",
+                            backend: str | None = None,
                             interpret=None):
     """Tile-split a bare BalancedCOO-layout pattern across ``axis``.
 
     The pattern is already nnz-balanced (fixed quota per tile), so an equal
-    share of tiles per device IS the nnz partitioner; partials psum.  Rows and
-    cols may be traced (scanned per-layer patterns) — the inner kernel is the
-    prep-free XLA reference, same as ``execute_pattern``'s traced fallback."""
-    from .vjp import _exec_balanced
-
+    share of tiles per device IS the nnz partitioner; partials psum.  When
+    rows/cols are *concrete* (the sparse-weight layer steady state) and the
+    resolved inner backend has a prep hook (Pallas NB), the per-shard visit
+    schedules are built host-side, stacked, and the fused inner kernel runs
+    inside shard_map — same hot path as planned sharded execution.  Traced
+    patterns (scanned per-layer) fall back to the prep-free XLA reference."""
     axis = axis or default_shard_axis(mesh)
     n = int(mesh.shape[axis])
-    entry = registry.resolve(impl, "xla")
+    traced = isinstance(rows, jax.core.Tracer)
+    backend = backend or registry.default_backend()
+    entry = registry.resolve(impl, backend)
+    if entry.prep is not None and traced:
+        backend, entry = "xla", registry.resolve(impl, "xla")
     if entry.substrate != "balanced":
         raise ValueError(f"execute_pattern_sharded needs a balanced-substrate "
                          f"kernel; {impl!r} consumes {entry.substrate!r}")
@@ -375,12 +561,30 @@ def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
     rs = rows.reshape(n, per, tile)
     cs = cols.reshape(n, per, tile)
     vs = v2.reshape(n, per, tile)
-    bound = _make_inner(entry, interpret, None)
 
-    def local(r, c, v, xx):
-        y = _exec_balanced((bound, tuple(shape)), r[0], c[0],
-                           v[0].reshape(-1), xx)
-        return jax.lax.psum(y, axis)
+    opts: dict = {}
+    if entry.prep is not None:
+        with jax.ensure_compile_time_eval():
+            r_h = np.asarray(rs)
+            c_h = np.asarray(cs)
+        digest = hashlib.sha1(r_h.tobytes()).hexdigest()
+        key = (entry, tuple(shape), r_h.shape, digest)
+        opts = _PATTERN_PREP.get(key)
+        if opts is None:
+            per_shard = [dict(entry.prep(BalancedCOO(
+                r_h[s], c_h[s], np.zeros(r_h[s].shape, np.float32),
+                tuple(shape)))) for s in range(n)]
+            opts = _stack_prep_opts(per_shard)
+            _PATTERN_PREP[key] = opts
+            while len(_PATTERN_PREP) > _PATTERN_PREP_CAP:
+                _PATTERN_PREP.popitem(last=False)
+        else:
+            _PATTERN_PREP.move_to_end(key)
 
-    return shard_map(local, mesh=mesh, in_specs=(P(axis),) * 3 + (P(),),
-                     out_specs=P(), check_rep=False)(rs, cs, vs, x)
+    spec = ShardSpec("nnz", axis, n, "psum",
+                     bounds=tuple(0 for _ in range(n + 1)))
+    sub = ShardedSubstrate(
+        rows=rs, cols=cs, vals=vs, lens=None, src=None, spec=spec, mesh=mesh,
+        inner_backend=backend, inner_kind="balanced",
+        inner_shape=tuple(shape), shape=tuple(shape))
+    return _sharded_exec(sub, x, _logical=impl, interpret=interpret, **opts)

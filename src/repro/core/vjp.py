@@ -53,8 +53,9 @@ def _float0(a):
 def _exec_balanced(static, rows, cols, vals, x, *extra):
     """``extra``: integer per-matrix prep artifacts forwarded positionally to
     the bound kernel (float0 cotangents) — the sharded backend threads
-    per-shard prep (VSR row windows) through here, since inside shard_map
-    those are traced values and must not be baked into the static."""
+    per-shard prep (VSR row windows, stacked fused visit schedules) through
+    here, since inside shard_map those are traced values and must not be
+    baked into the static."""
     bound_fn, shape = static
     bal = BalancedCOO(rows, cols, vals.reshape(rows.shape), tuple(shape))
     return bound_fn(bal, x, *extra)

@@ -147,7 +147,9 @@ def _spmv_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
     block_sum = jnp.sum(jnp.where(sel, contrib[None, :], 0.0), axis=1)
 
     # sequential-grid accumulation: boundary-crossing rows are dumped once
-    # per visiting tile and summed here, in VMEM, instead of spilling
+    # per visiting tile and summed here, in VMEM, instead of spilling.
+    # Padding visits (vs == 2, stacked sharded schedules) take neither
+    # branch — a free grid step.
     @pl.when(vs_ref[v] == 1)
     def _():
         o_ref[...] = block_sum

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core import registry
 from repro.core.cache import pattern_fingerprint
-from repro.core.formats import CSR, csr_to_balanced
+from repro.core.formats import CSR, BalancedCOO, csr_to_balanced
 from repro.core.plan import execute, plan
 from repro.core.selector import (SelectorThresholds, TileGeometry,
                                  default_thresholds, geometry_key)
@@ -50,6 +50,19 @@ DEFAULT_CANDIDATES = (
 )
 
 
+def _timed_execute(p, n: int, impl: str, interpret, repeats: int) -> float:
+    """Shared measurement harness: jit the plan's execute at width ``n``,
+    compile outside the timed region, return mean seconds per call."""
+    k = p.csr.shape[1]
+    x = jnp.ones((k, n) if n > 1 else (k,), jnp.float32)
+    f = jax.jit(lambda xx: execute(p, xx, impl=impl, interpret=interpret))
+    jax.block_until_ready(f(x))          # compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(max(1, repeats)):
+        jax.block_until_ready(f(x))
+    return (time.perf_counter() - t0) / max(1, repeats)
+
+
 def measure_geometry(csr: CSR, n: int, geom: TileGeometry, *,
                      backend: str | None = None,
                      thresholds: SelectorThresholds | None = None,
@@ -60,14 +73,7 @@ def measure_geometry(csr: CSR, n: int, geom: TileGeometry, *,
     backend = backend or registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
     p = plan(csr, backend=backend, thresholds=th, geometry=geom, n_hint=n)
-    k = csr.shape[1]
-    x = jnp.ones((k, n) if n > 1 else (k,), jnp.float32)
-    f = jax.jit(lambda xx: execute(p, xx, impl=impl, interpret=interpret))
-    jax.block_until_ready(f(x))          # compile outside the timed region
-    t0 = time.perf_counter()
-    for _ in range(max(1, repeats)):
-        jax.block_until_ready(f(x))
-    return (time.perf_counter() - t0) / max(1, repeats)
+    return _timed_execute(p, n, impl, interpret, repeats)
 
 
 def autotune_geometry(csr: CSR, *, ns: tuple = (8, 128),
@@ -129,9 +135,24 @@ def modeled_traffic(csr: CSR, n: int, *,
       The spill round-trip is gone — boundary rows accumulate in VMEM.
     """
     geom = (geometry or TileGeometry()).validate()
-    m, k = csr.shape
     bal = csr_to_balanced(csr, tile=geom.tile)
-    _, win = plan_windows(bal)
+    return modeled_traffic_balanced(bal, n, int(csr.nnz), geometry=geom,
+                                    dtype_bytes=dtype_bytes,
+                                    index_bytes=index_bytes)
+
+
+def modeled_traffic_balanced(bal, n: int, nnz: int, *,
+                             geometry: TileGeometry | None = None,
+                             win: int | None = None,
+                             dtype_bytes: int = 4,
+                             index_bytes: int = 4) -> dict:
+    """The `modeled_traffic` byte model on a prebuilt ``BalancedCOO`` slab —
+    the per-shard entry point (``modeled_traffic_sharded`` charges each
+    shard's own schedule, but the *spill* path with the max-over-shards
+    ``win``, the shared static the sharded spill wrapper actually pays)."""
+    geom = (geometry or TileGeometry()).validate()
+    m, k = bal.shape
+    win = plan_windows(bal)[1] if win is None else max(int(win), 1)
     vt, _, _ = plan_visits(bal, geom.wb)
     n_tiles, t = bal.rows.shape
     n_visits = int(len(vt))
@@ -151,7 +172,7 @@ def modeled_traffic(csr: CSR, n: int, *,
     fused = (stream_runs * nb * stream
              + nb * xblock                               # one pass over X
              + mb * geom.wb * n_pad * dtype_bytes)       # blocks flushed once
-    flops = 2 * csr.nnz * n
+    flops = 2 * nnz * n
     return {
         "spill_bytes": int(spill),
         "fused_bytes": int(fused),
@@ -164,3 +185,95 @@ def modeled_traffic(csr: CSR, n: int, *,
         "fused_ai": flops / max(fused, 1),
         "bytes_reduction": spill / max(fused, 1),
     }
+
+
+def modeled_traffic_sharded(sub, n: int, *,
+                            geometry: TileGeometry | None = None,
+                            dtype_bytes: int = 4,
+                            index_bytes: int = 4) -> dict:
+    """Per-shard fused-vs-spill HBM bytes for a ``ShardedSubstrate``.
+
+    The asymmetry this report exists to show: inside ``shard_map`` the spill
+    window is a *shared static*, so every shard's partials buffer is sized by
+    ``max`` over per-shard windows — a single skewed shard taxes all of them
+    — while the fused visit schedules are per-shard data (padding visits are
+    free grid steps), so each shard pays only its own boundary crossings.
+    ``per_shard`` carries both paths' bytes per shard; totals sum them."""
+    geom = (geometry or TileGeometry()).validate()
+    rows_h = np.asarray(sub.rows)
+    cols_h = np.asarray(sub.cols)
+    src_h = np.asarray(sub.src)
+    n_shards = rows_h.shape[0]
+    slabs = [BalancedCOO(rows_h[s], cols_h[s],
+                         np.zeros(rows_h[s].shape, np.float32),
+                         sub.inner_shape) for s in range(n_shards)]
+    win = max(plan_windows(b)[1] for b in slabs)   # the shared spill static
+    per_shard = []
+    for s, bal in enumerate(slabs):
+        nnz_s = int((src_h[s] >= 0).sum())
+        per_shard.append(modeled_traffic_balanced(
+            bal, n, nnz_s, geometry=geom, win=win,
+            dtype_bytes=dtype_bytes, index_bytes=index_bytes))
+    spill = sum(t["spill_bytes"] for t in per_shard)
+    fused = sum(t["fused_bytes"] for t in per_shard)
+    return {
+        "per_shard": per_shard,
+        "n_shards": n_shards,
+        "spill_bytes": int(spill),
+        "fused_bytes": int(fused),
+        "spill_win": int(win),
+        "max_visits": max(t["n_visits"] for t in per_shard),
+        "flops": sum(t["flops"] for t in per_shard),
+        "bytes_reduction": spill / max(fused, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# overlap crossover: when does the chunked ppermute ring beat one psum?
+# ---------------------------------------------------------------------------
+
+#: ``overlap_min_n`` sentinel for "the ring never wins on this backend"
+OVERLAP_NEVER = 1 << 30
+
+
+def measure_overlap(csr: CSR, mesh, n: int, *, chunked: bool,
+                    thresholds: SelectorThresholds | None = None,
+                    impl: str = "nb_pr", shard_kind: str = "nnz",
+                    inner_backend: str | None = None,
+                    interpret: bool | None = None,
+                    repeats: int = 2) -> float:
+    """Seconds per sharded psum-plan call with the reduction forced to the
+    chunked ``ppermute`` ring (``chunked=True``) or one blocking psum."""
+    import dataclasses
+    th = thresholds if thresholds is not None else default_thresholds()
+    th = dataclasses.replace(th,
+                             overlap_min_n=1 if chunked else OVERLAP_NEVER)
+    p = plan(csr, backend="sharded", mesh=mesh, shard_kind=shard_kind,
+             thresholds=th, inner_backend=inner_backend, n_hint=n)
+    return _timed_execute(p, n, impl, interpret, repeats)
+
+
+def autotune_overlap(csr: CSR, mesh, *, ns: tuple = (256, 512, 1024),
+                     thresholds: SelectorThresholds | None = None,
+                     impl: str = "nb_pr", shard_kind: str = "nnz",
+                     inner_backend: str | None = None,
+                     interpret: bool | None = None,
+                     repeats: int = 2) -> SelectorThresholds:
+    """Measure the overlap crossover: the smallest dense width at which the
+    width-chunked ring beats the blocking psum becomes ``overlap_min_n``
+    (``OVERLAP_NEVER`` when the ring never wins — e.g. a single-device mesh,
+    where there is no collective to hide).  Widths at or below the ring's
+    chunk width (the geometry ``tile_n``, >= 128) cannot chunk — both runs
+    would execute the identical blocking psum and the comparison would be
+    pure noise — so they are skipped.  Timing off-TPU is correctness-grade;
+    run on a real pod before persisting fleet-wide."""
+    import dataclasses
+    th = thresholds if thresholds is not None else default_thresholds()
+    for n in sorted(n for n in ns if n > 128):
+        kw = dict(thresholds=th, impl=impl, shard_kind=shard_kind,
+                  inner_backend=inner_backend, interpret=interpret,
+                  repeats=repeats)
+        if (measure_overlap(csr, mesh, n, chunked=True, **kw)
+                < measure_overlap(csr, mesh, n, chunked=False, **kw)):
+            return dataclasses.replace(th, overlap_min_n=int(n))
+    return dataclasses.replace(th, overlap_min_n=OVERLAP_NEVER)

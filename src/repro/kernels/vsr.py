@@ -85,7 +85,10 @@ def plan_visits(bal: BalancedCOO, wb: int
     visit v loads nnz-tile ``visit_tile[v]`` and accumulates the rows landing
     in output block ``visit_block[v]`` (rows ``[b*wb, (b+1)*wb)``);
     ``visit_start[v]`` flags the block's first visit (initialise vs.
-    accumulate).  Because the nonzero stream is row-ordered, ``visit_block``
+    accumulate; the sharded backend additionally pads stacked schedules with
+    ``visit_start == 2`` no-op visits — neither kernel branch fires, see
+    ``core/shard.stack_visit_schedules``).  Because the nonzero stream is
+    row-ordered, ``visit_block``
     is non-decreasing, so every output block's visits are consecutive grid
     steps — the revisited-block accumulation contract.  Blocks no tile
     touches (empty-row bands, row padding) get a fully-masked dummy visit so
@@ -159,7 +162,10 @@ def _vsr_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
 
     # sequential-grid accumulation: first visit initialises the block, later
     # visits read-modify-write it in VMEM; the block flushes to HBM once,
-    # when the schedule moves on — no partials array, no segment_sum
+    # when the schedule moves on — no partials array, no segment_sum.
+    # Padding visits (vs == 2, stacked sharded schedules) take neither
+    # branch: the step re-points at the previous (tile, block) pair, so it
+    # costs no DMA and no write.
     @pl.when(vs_ref[v] == 1)
     def _():
         o_ref[...] = contrib
@@ -350,16 +356,12 @@ def spmm_as_n_spmv_pallas(bal: BalancedCOO, x: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _prep_windows(bal: BalancedCOO, *, geometry: TileGeometry | None = None,
-                  max_win: int | None = None, spill_only: bool = False) -> dict:
-    """Prep hook for both NB paths: the spill row windows (also consumed by
-    the sharded backend, which stacks them per shard) plus the fused visit
-    schedule and its geometry.  ``geometry`` is the plan's autotuned
-    ``TileGeometry`` (``None`` → defaults); ``spill_only=True`` skips the
-    visit schedule (the sharded backend runs the spill inner path and would
-    discard it)."""
+                  max_win: int | None = None) -> dict:
+    """Prep hook for both NB paths: the spill row windows (the parity
+    reference; the sharded backend stacks them per shard) plus the fused
+    visit schedule and its geometry.  ``geometry`` is the plan's autotuned
+    ``TileGeometry`` (``None`` → defaults)."""
     base, win = plan_windows(bal, max_win=max_win)
-    if spill_only:
-        return {"row_base": jnp.asarray(base), "win": win}
     geom = (geometry or TileGeometry()).validate()
     vt, vb, vs = plan_visits(bal, geom.wb)
     return {"row_base": jnp.asarray(base), "win": win,
