@@ -11,15 +11,22 @@ Three things per (matrix, N) cell:
    re-streaming boundary-crossing tiles, so its AI strictly rises wherever
    skew inflates WIN;
 3. PlanCache visibility of autotuned geometry: distinct geometries must key
-   distinct entries and a repeated geometry must hit.
+   distinct entries and a repeated geometry must hit;
+4. the quantized value stream column (DESIGN.md §8): int8 plan vs a bf16
+   stream — wall time, modeled value-stream bytes (charged at each dtype's
+   real width), and max abs error against the f32 plan — on one device, and
+   on the sharded backend when more than one is visible.
 """
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.api import PlanCache, TileGeometry, sparse
-from repro.kernels import modeled_traffic, spmm_vsr, spmm_vsr_fused
+from repro.core.formats import CSR
+from repro.kernels import modeled_traffic, modeled_traffic_sharded, \
+    spmm_vsr, spmm_vsr_fused
 from . import common
 from .common import bytes_derived, csv_row, geomean, pick_suite, time_fn
 
@@ -63,6 +70,57 @@ def run(full: bool = False):
     if skew_reductions:
         rows.append(csv_row("spill_fusion/geomean_bytes_reduction_skewed", 0.0,
                             f"{geomean(skew_reductions):.2f}"))
+
+    # --- quantized value streams: int8 vs bf16, vs the f32 plan ------------
+    for name, csr in suite.items():
+        n = ns[-1]
+        x = jnp.asarray(rng.standard_normal((csr.shape[1], n))
+                        .astype(np.float32))
+        A = sparse(csr, cache=False, backend="xla")
+        geom = TileGeometry(tile=A.plan.tile)
+        y_ref = np.asarray(A @ x)
+        variants = {
+            "bf16": (sparse(CSR(csr.indptr, csr.indices,
+                                csr.data.astype(jnp.bfloat16), csr.shape),
+                            cache=False, backend="xla"),
+                     modeled_traffic(csr, n, geometry=geom, value_bytes=2)),
+            "int8": (sparse(csr, quant="int8", cache=False, backend="xla"),
+                     modeled_traffic(csr, n, geometry=geom, quant="int8")),
+        }
+        vb = {}
+        for tag, (Av, traffic) in variants.items():
+            t = time_fn(lambda: Av @ x)
+            err = float(jnp.max(jnp.abs((Av @ x).astype(jnp.float32)
+                                        - jnp.asarray(y_ref))))
+            vb[tag] = traffic["fused_value_bytes"]
+            rows.append(csv_row(
+                f"spill_fusion/{name}/n{n}/quant_{tag}", t * 1e6,
+                bytes_derived(traffic["flops"], traffic["fused_bytes"], t,
+                              f"value_bytes={traffic['fused_value_bytes']}"
+                              f"_max_abs_err={err:.2e}")))
+        rows.append(csv_row(
+            f"spill_fusion/{name}/n{n}/quant_value_bytes_reduction", 0.0,
+            f"{vb['bf16'] / max(vb['int8'], 1):.2f}x_vs_bf16"))
+
+    if jax.device_count() > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("shard",))
+        name, csr = next(iter(suite.items()))
+        n = ns[-1]
+        x = jnp.asarray(rng.standard_normal((csr.shape[1], n))
+                        .astype(np.float32))
+        As = sparse(csr, mesh=mesh, cache=False)
+        Aq = sparse(csr, quant="int8", mesh=mesh, cache=False)
+        sub = Aq.plan.substrate(Aq.plan.entry(Aq.plan.select(n)).substrate)
+        traffic = modeled_traffic_sharded(sub, n)
+        t = time_fn(lambda: Aq @ x)
+        err = float(np.abs(np.asarray(Aq @ x) - np.asarray(As @ x)).max())
+        rows.append(csv_row(
+            f"spill_fusion/{name}/n{n}/quant_int8_sharded"
+            f"{jax.device_count()}", t * 1e6,
+            bytes_derived(traffic["flops"], traffic["fused_bytes"], t,
+                          f"value_bytes={traffic['fused_value_bytes']}"
+                          f"_max_abs_err={err:.2e}")))
 
     # --- autotuned geometry is visible in PlanCache keys -------------------
     cache = PlanCache(capacity=16)

@@ -49,7 +49,7 @@ from repro.core.stats import MatrixStats
 __all__ = [
     "SparseMatrix", "sparse", "pattern_matmul", "use_backend", "use_mesh",
     "calibrate", "calibrate_backend", "autotune_geometry", "autotune_overlap",
-    "cache_stats",
+    "autotune_quant", "cache_stats",
     "clear_cache", "PlanArtifact", "PlanBuilder", "PlanCache",
     "SelectorThresholds", "TileGeometry", "geometry_key",
     "execute", "save_thresholds", "load_thresholds",
@@ -209,7 +209,8 @@ class SparseMatrix:
                                bsr_block=self._plan.bsr_block,
                                geometry=geometry,
                                shard_axis=axis, shard_kind=kind,
-                               inner_backend=inner_backend)
+                               inner_backend=inner_backend,
+                               quant=self._plan.quant)
         return SparseMatrix(p, values=self._values, cache=self._cache)
 
     def finalize(self, n: int | None = None, *, impl: str | None = None,
@@ -231,7 +232,7 @@ class SparseMatrix:
                      geometry=p.geometry,
                      shard_axis=spec.axis if spec is not None else None,
                      shard_kind=spec.kind if spec is not None else None,
-                     inner_backend=p.inner_backend)
+                     inner_backend=p.inner_backend, quant=p.quant)
         return p.finalize(n, impl=impl, kernels=kernels)
 
 
@@ -261,6 +262,7 @@ def sparse(a, *, backend: str | None = None, mesh=None,
            bsr_block: tuple = (8, 128), n_hint: int | None = None,
            shard_axis: str | None = None, shard_kind: str | None = None,
            geometry: TileGeometry | None = None,
+           quant: str | None = None,
            cache: "PlanCache | bool | None" = True) -> SparseMatrix:
     """Build a first-class sparse operand from a CSR or a dense 2-D array.
 
@@ -274,13 +276,28 @@ def sparse(a, *, backend: str | None = None, mesh=None,
     ``geometry`` forces a Pallas ``TileGeometry``; by default the
     thresholds' autotuned table (``autotune_geometry``) decides, and
     ``tile=None`` takes the geometry's nnz quota.  Distinct geometries key
-    distinct cache entries (DESIGN.md §6)."""
+    distinct cache entries (DESIGN.md §6).
+
+    ``quant`` (``"int8"`` or ``"fp8"``) stores the value stream quantized
+    per tile with f32 scales; kernels dequantize in-register (DESIGN.md §8).
+    A caller ``n_hint`` below the thresholds' measured ``quant_min_n``
+    crossover drops it — narrow operands don't amortize the dequant — and a
+    value distribution whose per-tile dynamic range breaks the error bound
+    falls back to the unquantized plan with a warning.  Quantized and
+    unquantized plans key distinct cache entries."""
     csr, values = _as_csr(a)
     if mesh is None:
         mesh, scoped_axis = scoped_mesh()
         shard_axis = shard_axis or scoped_axis
     resolved_backend = backend or ("sharded" if mesh is not None
                                    else default_backend())
+    if quant is not None and n_hint is not None:
+        # gate here, pre-cache, for the same reason geometry resolves here:
+        # cached_plan never forwards n_hint, so plan() could not apply the
+        # quant_min_n crossover itself on the cached path
+        th_q = thresholds if thresholds is not None else default_thresholds()
+        if n_hint < th_q.quant_min_n:
+            quant = None
     if geometry is None:
         # resolve the autotuned geometry here, with the caller's n_hint, so
         # the cache keys on the *resolved* geometry (same bucket ⇒ same
@@ -304,7 +321,8 @@ def sparse(a, *, backend: str | None = None, mesh=None,
     p = _plan_maybe_cached(csr, cache=cache_obj, backend=resolved_backend,
                            mesh=mesh, thresholds=thresholds, tile=tile,
                            bsr_block=tuple(bsr_block), shard_axis=shard_axis,
-                           shard_kind=shard_kind, geometry=geometry)
+                           shard_kind=shard_kind, geometry=geometry,
+                           quant=quant)
     if values is None and p.csr is not csr:
         # cache hit from a pattern-equal matrix: keep OUR values live unless
         # they are bit-identical to the plan's baked stream
@@ -357,6 +375,18 @@ def autotune_overlap(csr_or_matrix, mesh, **kwargs) -> SelectorThresholds:
     return _tune(csr, mesh, **kwargs)
 
 
+def autotune_quant(csr_or_matrix, **kwargs) -> SelectorThresholds:
+    """Measure the quantization crossover for one pattern and return
+    thresholds with the winning ``quant_min_n`` — the smallest dense width
+    at which the int8/fp8 value stream's traffic saving beats its in-kernel
+    dequant cost (``QUANT_NEVER`` when it never does; DESIGN.md §8;
+    ``repro.kernels.tune.autotune_quant`` for the knobs)."""
+    from repro.kernels.tune import autotune_quant as _tune
+    csr = (csr_or_matrix.plan.csr if isinstance(csr_or_matrix, SparseMatrix)
+           else csr_or_matrix)
+    return _tune(csr, **kwargs)
+
+
 def calibrate_backend(save_to: str | None = None, *,
                       matrices: dict | None = None,
                       ns: tuple = (1, 8), repeats: int = 2,
@@ -367,7 +397,9 @@ def calibrate_backend(save_to: str | None = None, *,
                       tune_geometry: bool = False,
                       geometry_candidates: tuple | None = None,
                       overlap_mesh=None,
-                      overlap_ns: tuple = (256, 512, 1024)):
+                      overlap_ns: tuple = (256, 512, 1024),
+                      tune_quant: bool = False,
+                      quant_ns: tuple = (8, 32, 128)):
     """Measure the 2x2 kernel grid on *this* backend and grid-search selector
     thresholds (paper §2.2/§3.2), optionally persisting the winner where
     ``$REPRO_THRESHOLDS`` will auto-load it.  The runtime driver runs this as
@@ -379,7 +411,10 @@ def calibrate_backend(save_to: str | None = None, *,
     winners into the persisted thresholds' ``geometries`` table.
     ``overlap_mesh`` (a device mesh) additionally measures the sharded
     compute/collective overlap crossover (``autotune_overlap``) on that mesh
-    and folds the measured ``overlap_min_n`` into the result."""
+    and folds the measured ``overlap_min_n`` into the result.
+    ``tune_quant=True`` additionally measures the int8 quantization
+    crossover (``autotune_quant``) and folds the measured ``quant_min_n``
+    in."""
     from repro.core.rmat import rmat
     from repro.core.selector import calibrate as grid_search
 
@@ -418,6 +453,14 @@ def calibrate_backend(save_to: str | None = None, *,
                         thresholds=best, inner_backend=backend,
                         repeats=repeats)
         report["overlap_min_n"] = int(best.overlap_min_n)
+    if tune_quant:
+        from repro.kernels.tune import autotune_quant as _quant
+        # the quant crossover is traffic-bound: measure on the matrix with
+        # the most nonzeros (largest value stream), where narrowing matters
+        heavy = max(matrices.values(), key=lambda c: int(c.nnz))
+        best = _quant(heavy, ns=quant_ns, backend=backend,
+                      thresholds=best, repeats=repeats)
+        report["quant_min_n"] = int(best.quant_min_n)
     if save_to is not None:
         save_thresholds(best, save_to)
     return best, report

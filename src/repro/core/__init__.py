@@ -8,6 +8,8 @@ from .formats import (BSR, CSR, ELL, BalancedCOO, bsr_to_dense, csr_from_coo,
                       reset_build_counts, row_ids_from_indptr)
 from .plan import (PlanArtifact, PlanBuilder, PlanMeta, SparsePlan, execute,
                    execute_pattern, plan)
+from .quant import (MAX_DYNAMIC_RANGE, QUANT_MODES, dequantize_stream,
+                    int8_decode, int8_encode, quantize_stream, value_bytes)
 from .registry import (LOGICAL_KERNELS, KernelEntry, available, backend_scope,
                        backends_for, default_backend, register, resolve,
                        scoped_backend)

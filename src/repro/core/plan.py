@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import quant as quant_mod
 from . import registry
 from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
                       csr_to_ell, row_ids_from_indptr)
@@ -173,6 +174,17 @@ def _bound_kernel(entry: registry.KernelEntry, interpret, digest: str | None):
     return fn
 
 
+def _quant_logical(name: str, quant: str | None) -> str:
+    """Selector override for quantized plans: the coded value stream lives in
+    the *balanced* substrate, which only the NB kernels read — an rs_* pick
+    would silently execute the float ELL/CSR values and never touch the
+    int8/fp8 stream.  Pin the workload-balanced family, keep the paper's
+    SR/PR reduction choice."""
+    if quant is None:
+        return name
+    return {"rs_sr": "nb_sr", "rs_pr": "nb_pr"}.get(name, name)
+
+
 # ---------------------------------------------------------------------------
 # the frozen artifact
 # ---------------------------------------------------------------------------
@@ -199,6 +211,7 @@ class PlanMeta:
     mesh: Any = None
     inner_backend: str | None = None
     geometry: Any = None             # autotuned TileGeometry, or None
+    quant: str | None = None         # value-stream quant mode ("int8"/"fp8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,7 +247,9 @@ class PlanArtifact:
         return self.meta.topology
 
     def select(self, n: int) -> str:
-        return select_kernel(self.meta.stats, n, self.meta.thresholds)
+        return _quant_logical(
+            select_kernel(self.meta.stats, n, self.meta.thresholds),
+            self.meta.quant)
 
     def __matmul__(self, x):
         return execute(self, x)
@@ -272,7 +287,12 @@ class PlanBuilder:
     mesh: Any = None
     shard_spec: Any = None
     inner_backend: str | None = None
+    # value-stream quantization (DESIGN.md §8): "int8"/"fp8" quantize the
+    # balanced-family substrate per nnz-tile; demoted to None (with a
+    # warning) when any tile's dynamic range would collapse small entries
+    quant: str | None = None
     _substrates: dict = dataclasses.field(default_factory=dict, repr=False)
+    _quant_scales: Any = dataclasses.field(default=None, repr=False)
     _opts: dict = dataclasses.field(default_factory=dict, repr=False)
     _bound: dict = dataclasses.field(default_factory=dict, repr=False)
     _ell_lens: Any = dataclasses.field(default=None, repr=False)
@@ -294,6 +314,19 @@ class PlanBuilder:
                     sub = csr_to_ell(self.csr)
                 elif kind == "balanced":
                     sub = csr_to_balanced(self.csr, tile=self.tile)
+                    if self.quant is not None:
+                        # per-tile quantization with the dynamic-range
+                        # fallback: a blown-up tile demotes the *whole plan*
+                        # to the unquantized stream (partial quantization
+                        # would split the bound-kernel static per tile)
+                        if quant_mod.check_tile_range(sub.vals):
+                            q, sc = quant_mod.quantize_stream(sub.vals,
+                                                              self.quant)
+                            sub = BalancedCOO(sub.rows, sub.cols, q,
+                                              sub.shape)
+                            self._quant_scales = sc
+                        else:
+                            self.quant = None
                 elif kind == "bsr":
                     sub = csr_to_bsr(self.csr, *self.bsr_block)
                 elif kind in ("shard_ell", "shard_balanced"):
@@ -306,7 +339,11 @@ class PlanBuilder:
                         self.csr, self.shard_spec, self.mesh,
                         inner_kind=kind[len("shard_"):], tile=self.tile,
                         inner_backend=(self.inner_backend
-                                       or registry.default_backend()))
+                                       or registry.default_backend()),
+                        quant=self.quant)
+                    if (self.quant is not None and kind == "shard_balanced"
+                            and sub.scales is None):
+                        self.quant = None    # range fallback fired per shard
                 else:
                     raise ValueError(f"unknown substrate {kind!r}")
             self._substrates[kind] = sub
@@ -318,7 +355,8 @@ class PlanBuilder:
 
     # -- selection ----------------------------------------------------------
     def select(self, n: int) -> str:
-        return select_kernel(self.stats, n, self.thresholds)
+        return _quant_logical(select_kernel(self.stats, n, self.thresholds),
+                              self.quant)
 
     def with_thresholds(self, th: SelectorThresholds) -> "PlanBuilder":
         """Same matrix and substrate caches, different decision thresholds.
@@ -334,16 +372,26 @@ class PlanBuilder:
     def topology_key(self) -> str:
         """Pattern fingerprint (``core/cache.py``'s, the one definition of
         "sparsity topology") folded with this plan's layout knobs, values
-        excluded.  The artifact's ``meta.topology``."""
-        if self._topology is None:
+        excluded.  The artifact's ``meta.topology``.  Keyed on the current
+        ``quant`` mode (it changes substrate dtypes, hence treedefs) and
+        recomputed if the dynamic-range fallback demotes it."""
+        if self._topology is None or self._topology[0] != self.quant:
             from .cache import pattern_fingerprint
             with jax.ensure_compile_time_eval():
                 fp = pattern_fingerprint(self.csr)
-            self._topology = hashlib.sha1(
+            digest = hashlib.sha1(
                 (fp + repr((self.tile, tuple(self.bsr_block),
-                            self.geometry))).encode()
+                            self.geometry, self.quant))).encode()
             ).hexdigest()
-        return self._topology
+            self._topology = (self.quant, digest)
+        return self._topology[1]
+
+    def quant_scales(self):
+        """Per-tile f32 dequant scales of the baked quantized substrate
+        (plan aux; ``None`` unless the plan quantized a balanced substrate)."""
+        if self.quant is not None:
+            self.substrate("balanced")
+        return self._quant_scales
 
     # -- resolution ---------------------------------------------------------
     def entry(self, name: str, backend: str | None = None) -> registry.KernelEntry:
@@ -352,8 +400,13 @@ class PlanBuilder:
     def kernel_opts(self, entry: registry.KernelEntry) -> dict:
         """Host-side prep artifacts for this (entry, matrix) pair, cached.
         Runs the entry's ``prep`` hook on the concrete substrate once — this
-        is what keeps ``execute`` traceable for Pallas backends."""
-        key = (entry.logical, entry.backend)
+        is what keeps ``execute`` traceable for Pallas backends.
+
+        The substrate builds *before* the cache key is read: quantized plans
+        may demote ``self.quant`` there (dynamic-range fallback), and the key
+        must reflect the post-fallback mode."""
+        sub = self.substrate(entry.substrate)
+        key = (entry.logical, entry.backend, self.quant)
         opts = self._opts.get(key)
         if opts is None:
             if entry.prep is None:
@@ -364,8 +417,12 @@ class PlanBuilder:
                                  "max_win": self.thresholds.max_win,
                                  "overlap_min_n": self.thresholds.overlap_min_n})
                 with jax.ensure_compile_time_eval():
-                    opts = dict(entry.prep(self.substrate(entry.substrate),
-                                           **ctx))
+                    opts = dict(entry.prep(sub, **ctx))
+            if self.quant is not None and entry.substrate == "balanced":
+                # static mode flag for the kernel wrappers: baked substrates
+                # already carry int8/fp8 vals (scales ride the execute-time
+                # extras, see _run_entry); live streams re-quantize in graph
+                opts["quant"] = self.quant
             self._opts[key] = opts
         return opts
 
@@ -373,11 +430,11 @@ class PlanBuilder:
         """A stable (identity-cached) callable with interpret + prep opts
         baked in — used as the hashable static of the shared custom VJPs, so
         repeated executes of the same plan do not retrace."""
-        key = (entry.logical, entry.backend, interpret)
+        opts = self.kernel_opts(entry)   # may demote self.quant; run first
+        key = (entry.logical, entry.backend, interpret, self.quant)
         fn = self._bound.get(key)
         if fn is None:
-            fn = functools.partial(entry.fn, interpret=interpret,
-                                   **self.kernel_opts(entry))
+            fn = functools.partial(entry.fn, interpret=interpret, **opts)
             self._bound[key] = fn
         return fn
 
@@ -467,6 +524,8 @@ class PlanBuilder:
             elif entry.substrate == "bsr":
                 aux["bsr_map"] = self.bsr_map()
                 aux["bsr_brow"] = self.bsr_brow()
+        if "balanced" in subs and self._quant_scales is not None:
+            aux["quant_scales"] = self._quant_scales
         meta = PlanMeta(
             shape=tuple(self.csr.shape), nnz=self.csr.nnz,
             backend=self.backend, stats=self.stats,
@@ -474,7 +533,7 @@ class PlanBuilder:
             bsr_block=tuple(self.bsr_block), topology=self.topology_key(),
             prep=tuple(sorted(prep)), shard_spec=self.shard_spec,
             mesh=self.mesh, inner_backend=self.inner_backend,
-            geometry=self.geometry)
+            geometry=self.geometry, quant=self.quant)
         return PlanArtifact(substrates=subs, aux=aux, meta=meta)
 
 
@@ -489,7 +548,8 @@ def plan(csr: CSR, *, n_hint: int | None = None,
          bsr_block: tuple = (8, 128), mesh: Any = None,
          shard_axis: str | None = None, shard_kind: str | None = None,
          inner_backend: str | None = None,
-         geometry: TileGeometry | None = None) -> PlanBuilder:
+         geometry: TileGeometry | None = None,
+         quant: str | None = None) -> PlanBuilder:
     """Offline planning front door.
 
     ``n_hint``: anticipated N of the dense operand; when given, the substrate
@@ -514,10 +574,27 @@ def plan(csr: CSR, *, n_hint: int | None = None,
     ``thresholds.partition_cv`` — row-split below, nnz-balanced above) unless
     ``shard_kind`` forces one; ``shard_axis`` defaults to the largest mesh
     axis and ``inner_backend`` to the platform default single-device
-    backend whose kernels run per shard."""
+    backend whose kernels run per shard.
+
+    ``quant`` (DESIGN.md §8): ``"int8"``/``"fp8"`` store the balanced-family
+    value stream quantized per nnz-tile with in-kernel dequant.  Gated by
+    ``thresholds.quant_min_n`` (below it the dequant ALU cost beats the byte
+    savings, so the plan stays unquantized); an fp8 request on a runtime
+    without the dtype demotes to int8; per-tile dynamic-range blowups demote
+    to unquantized at substrate-build time (``core/quant.check_tile_range``)."""
     if backend is None:
         backend = "sharded" if mesh is not None else registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
+    if quant is not None:
+        if quant not in quant_mod.QUANT_MODES:
+            raise ValueError(f"unknown quant mode {quant!r}; expected one of "
+                             f"{quant_mod.QUANT_MODES}")
+        if not quant_mod.supports(quant):
+            warnings.warn(f"quant={quant!r} is not supported by this jax "
+                          "build; demoting to 'int8'", stacklevel=2)
+            quant = "int8"
+        if n_hint is not None and n_hint < th.quant_min_n:
+            quant = None    # selector crossover: not worth it at this N
     stats = matrix_stats(csr)
     if geometry is None and th.geometries:
         from .cache import pattern_fingerprint
@@ -569,6 +646,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         mesh=mesh,
         shard_spec=spec,
         inner_backend=inner_backend,
+        quant=quant,
     )
     if n_hint is not None:
         entry = p.entry(p.select(n_hint))
@@ -600,13 +678,18 @@ def _run_entry(entry: registry.KernelEntry, sub, bound, x, vals, nnz: int,
         # value slabs through the substrate's src map (each nonzero lands in
         # exactly one shard slot, so the gather transpose partitions dvals).
         if vals is not None:
+            # live streams stay float even when the baked slab is int8/fp8:
+            # the inner kernel re-quantizes in graph (fresh per-tile scales)
+            tgt = sub.vals.dtype
+            if quant_mod.is_quantized_dtype(tgt):
+                tgt = jnp.promote_types(vals.dtype, jnp.float32)
             if nnz == 0:
-                v = jnp.zeros(sub.vals.shape, sub.vals.dtype)
+                v = jnp.zeros(sub.vals.shape, tgt)
             else:
                 v = jnp.where(sub.src >= 0,
                               jnp.take(vals.reshape(-1),
                                        jnp.clip(sub.src, 0, nnz - 1)),
-                              0).astype(sub.vals.dtype)
+                              0).astype(tgt)
             sub = dataclasses.replace(sub, vals=v)
         return bound(sub, x)
 
@@ -628,8 +711,14 @@ def _run_entry(entry: registry.KernelEntry, sub, bound, x, vals, nnz: int,
 
     if entry.substrate == "balanced":
         v = sub.vals if vals is None else _stream_to_balanced(vals, sub)
+        extra = ()
+        if vals is None and quant_mod.is_quantized_dtype(sub.vals.dtype):
+            # baked quantized substrate: the per-tile scales (plan aux) ride
+            # the custom-VJP extras so the backward pass can dequantize the
+            # stream for dX (the kernels receive them positionally)
+            extra = (get_aux("quant_scales"),)
         return _exec_balanced((bound, sub.shape), sub.rows, sub.cols,
-                              v.reshape(-1), x)
+                              v.reshape(-1), x, *extra)
     if entry.substrate == "ell":
         lens = get_aux("ell_lens")
         if vals is None:
@@ -670,7 +759,8 @@ def execute(p: "PlanBuilder | PlanArtifact", x: jax.Array, *,
     sub = p.substrate(entry.substrate)
     bound = p.bound_kernel(entry, interpret)
     builder_aux = {"ell_lens": p.ell_lens, "ell_src": p.ell_src,
-                   "bsr_map": p.bsr_map, "bsr_brow": p.bsr_brow}
+                   "bsr_map": p.bsr_map, "bsr_brow": p.bsr_brow,
+                   "quant_scales": p.quant_scales}
     return _run_entry(entry, sub, bound, x, vals, p.csr.nnz,
                       lambda name: builder_aux[name]())
 

@@ -109,6 +109,12 @@ class SelectorThresholds:
     # collective-permute ring (DESIGN.md §7); below it one fused psum wins.
     # Measured per backend by ``kernels/tune.autotune_overlap``.
     overlap_min_n: int = 512
+    # quantized-plan crossover (DESIGN.md §8): a ``quant=`` plan request is
+    # honoured only at dense width N >= this — below it the per-element
+    # dequant ALU cost outweighs the value-stream byte savings.  1 = always
+    # honour; ``kernels/tune.QUANT_NEVER`` = never.  Measured per backend by
+    # ``kernels/tune.autotune_quant``.
+    quant_min_n: int = 1
     # autotuned tile geometries: sorted ((geometry_key, (tile, wb, tile_n)),
     # ...) — a tuple-of-tuples so thresholds stay hashable (they ride
     # ``PlanMeta`` static aux and the ``PlanCache`` key, which is how a
@@ -150,12 +156,20 @@ class SelectorThresholds:
             d["max_win"] = int(self.max_win)
             d["overlap_min_n"] = int(self.overlap_min_n)
             d["geometries"] = {k: list(v) for k, v in self.geometries}
+        if self.quant_min_n != 1:
+            # quantization-calibrated thresholds write the v3 schema (a
+            # strict superset of v2); v2 files load with the default cutoff
+            d["version"] = 3
+            d["max_win"] = int(self.max_win)
+            d["overlap_min_n"] = int(self.overlap_min_n)
+            d["geometries"] = {k: list(v) for k, v in self.geometries}
+            d["quant_min_n"] = int(self.quant_min_n)
         return json.dumps(d, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "SelectorThresholds":
         d = json.loads(text)
-        if d.get("version", 1) not in (1, 2):
+        if d.get("version", 1) not in (1, 2, 3):
             raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
         geoms = tuple(sorted((str(k), tuple(int(x) for x in v))
                              for k, v in d.get("geometries", {}).items()))
@@ -166,6 +180,8 @@ class SelectorThresholds:
                  partition_cv=float(d.get("partition_cv", 1.0)),
                  max_win=int(d.get("max_win", 4096)),
                  overlap_min_n=int(d.get("overlap_min_n", 512)),
+                 # pre-quantization (v1/v2) files: always honour quant=
+                 quant_min_n=int(d.get("quant_min_n", 1)),
                  geometries=geoms)
         th.validate()
         return th
@@ -188,6 +204,9 @@ class SelectorThresholds:
         if self.overlap_min_n < 1:
             raise ValueError(f"overlap_min_n must be >= 1, "
                              f"got {self.overlap_min_n}")
+        if self.quant_min_n < 1:
+            raise ValueError(f"quant_min_n must be >= 1, "
+                             f"got {self.quant_min_n}")
         for key, vals in self.geometries:
             if len(vals) != 3:
                 raise ValueError(f"geometry {key!r} must be (tile, wb, "

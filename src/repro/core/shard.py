@@ -118,27 +118,34 @@ class ShardedSubstrate:
 
     ``src`` maps every value slot back into the global CSR nonzero stream
     (-1 for padding) — the hook that lets live value streams (trainable
-    sparse weights) ride the sharded backend differentiably."""
+    sparse weights) ride the sharded backend differentiably.
+
+    Quantized plans (DESIGN.md §8) stack per-shard dequant ``scales``
+    ``(n_shards, n_tiles)`` exactly like the visit schedules — sliced per
+    shard inside shard_map and threaded to the inner kernel as a tensor
+    argument; ``quant`` names the mode the codes were produced under."""
 
     _meta_fields = ("spec", "mesh", "inner_backend", "inner_kind",
-                    "inner_shape", "shape")
+                    "inner_shape", "shape", "quant")
 
     rows: Any            # (n, T, tile) for balanced; None for ell
     cols: Any            # (n, T, tile) balanced | (n, Ms, w) ell
     vals: Any
     lens: Any            # (n, Ms) for ell; None for balanced
     src: Any             # int32, same shape as vals; -1 = padding
+    scales: Any          # (n, T) f32 per-tile dequant scales; None unquantized
     spec: ShardSpec
     mesh: Any
     inner_backend: str
     inner_kind: str      # "ell" | "balanced"
     inner_shape: Tuple[int, int]
     shape: Tuple[int, int]
+    quant: str | None = None
 
 
 jax.tree_util.register_dataclass(
     ShardedSubstrate,
-    data_fields=["rows", "cols", "vals", "lens", "src"],
+    data_fields=["rows", "cols", "vals", "lens", "src", "scales"],
     meta_fields=list(ShardedSubstrate._meta_fields))
 
 
@@ -174,8 +181,15 @@ def _bal_slab(b0, b1, row_off, sentinel, n_tiles, tile, rows_g, indices, data):
 
 def build_sharded_substrate(csr: CSR, spec: ShardSpec, mesh, *,
                             inner_kind: str, tile: int,
-                            inner_backend: str) -> ShardedSubstrate:
-    """Host-side construction of all per-shard substrates, stacked."""
+                            inner_backend: str,
+                            quant: str | None = None) -> ShardedSubstrate:
+    """Host-side construction of all per-shard substrates, stacked.
+
+    ``quant``: quantize the stacked balanced value slab per (shard, tile)
+    — one f32 scale per nnz-tile, stacked ``(n_shards, n_tiles)`` like the
+    visit schedules.  Falls back to the unquantized slab (``scales=None``)
+    when any tile's dynamic range fails ``core/quant.check_tile_range``;
+    ELL inners never quantize (the mode is an NB-family feature)."""
     indptr = np.asarray(csr.indptr)
     indices = np.asarray(csr.indices)
     data = np.asarray(csr.data)
@@ -242,13 +256,24 @@ def build_sharded_substrate(csr: CSR, spec: ShardSpec, mesh, *,
                 rs.append(r); cs.append(c); vs.append(v); ss.append(sr)
             rows_s, cols_s, vals_s, src_s = map(np.stack, (rs, cs, vs, ss))
 
+    scales_s = None
+    vals_j = None if vals_s is None else jnp.asarray(vals_s)
+    if quant is not None and inner_kind == "balanced" and vals_j is not None:
+        from . import quant as quant_mod
+        if quant_mod.check_tile_range(vals_s, context="sharded substrate"):
+            vals_j, scales_s = quant_mod.quantize_stream(vals_j, quant)
+        else:
+            quant = None
+    else:
+        quant = None
+
     as_j = lambda a: None if a is None else jnp.asarray(a)
     return ShardedSubstrate(
-        rows=as_j(rows_s), cols=as_j(cols_s), vals=as_j(vals_s),
-        lens=as_j(lens_s), src=as_j(src_s),
+        rows=as_j(rows_s), cols=as_j(cols_s), vals=vals_j,
+        lens=as_j(lens_s), src=as_j(src_s), scales=scales_s,
         spec=spec, mesh=mesh, inner_backend=inner_backend,
         inner_kind=inner_kind, inner_shape=tuple(inner_shape),
-        shape=tuple(csr.shape))
+        shape=tuple(csr.shape), quant=quant)
 
 
 # ---------------------------------------------------------------------------
@@ -464,6 +489,14 @@ def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
         tensors = [row_base]
     else:
         statics, tensor_keys, tensors = {}, (), []
+    if sub.inner_kind == "balanced" and sub.scales is not None:
+        # quantized plan: per-shard scales prepend the tensor list so they
+        # land in ``extra[0]`` of the balanced custom VJP (the backward's
+        # dequant convention, core/vjp.py); the inner wrapper receives them
+        # as its ``scales=`` keyword via the tensor_keys zip
+        statics["quant"] = sub.quant
+        tensor_keys = ("scales",) + tensor_keys
+        tensors = [sub.scales] + tensors
     bound = _make_inner(inner, interpret, statics, tensor_keys)
 
     if sub.inner_kind == "balanced":
@@ -584,7 +617,7 @@ def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
     spec = ShardSpec("nnz", axis, n, "psum",
                      bounds=tuple(0 for _ in range(n + 1)))
     sub = ShardedSubstrate(
-        rows=rs, cols=cs, vals=vs, lens=None, src=None, spec=spec, mesh=mesh,
-        inner_backend=backend, inner_kind="balanced",
+        rows=rs, cols=cs, vals=vs, lens=None, src=None, scales=None,
+        spec=spec, mesh=mesh, inner_backend=backend, inner_kind="balanced",
         inner_shape=tuple(shape), shape=tuple(shape))
     return _sharded_exec(sub, x, _logical=impl, interpret=interpret, **opts)

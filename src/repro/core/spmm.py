@@ -188,10 +188,35 @@ def _xla(fn):
     return wrapped
 
 
+def _xla_nb(fn):
+    """Registry wrapper for the balanced family: quantized-plan aware.
+
+    The XLA lowerings are the parity reference for the Pallas in-register
+    dequant (DESIGN.md §8), so they must see the *same* numbers: a baked
+    int8/fp8 substrate decodes in graph (one fused multiply, no persistent
+    f32 copy), and a live float stream on a quantized plan round-trips
+    through the quantizer so xla and pallas backends agree bit-for-bit on
+    what the matrix *is* under quantization."""
+    @functools.wraps(fn)
+    def wrapped(sub, x, scales=None, *, interpret=None, quant=None, **_opts):
+        from . import quant as quant_mod
+        if quant_mod.is_quantized_dtype(sub.vals.dtype):
+            if scales is None:
+                raise ValueError("quantized value stream needs per-tile scales")
+            vals = quant_mod.dequantize_stream(sub.vals, scales)
+            sub = BalancedCOO(sub.rows, sub.cols, vals, sub.shape)
+        elif quant is not None:
+            q, sc = quant_mod.quantize_stream(sub.vals, quant)
+            sub = BalancedCOO(sub.rows, sub.cols,
+                              quant_mod.dequantize_stream(q, sc), sub.shape)
+        return fn(sub, x)
+    return wrapped
+
+
 registry.register("rs_sr", "xla", "ell", _xla(spmm_rs_sr))
 registry.register("rs_pr", "xla", "ell", _xla(spmm_rs_pr))
-registry.register("nb_sr", "xla", "balanced", _xla(spmm_nb_sr))
-registry.register("nb_pr", "xla", "balanced", _xla(spmm_nb_pr))
+registry.register("nb_sr", "xla", "balanced", _xla_nb(spmm_nb_sr))
+registry.register("nb_pr", "xla", "balanced", _xla_nb(spmm_nb_pr))
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,26 @@ def _float0(a):
     return np.zeros(a.shape, jax.dtypes.float0)
 
 
+def _zero_cot(a):
+    """Zero cotangent matching what JAX expects for the primal's dtype:
+    float0 for integer args (pattern arrays, visit schedules), a zeros
+    array for inexact ones (the f32 per-tile scales quantized plans thread
+    through the sharded ``extra`` slot)."""
+    if jnp.issubdtype(jnp.result_type(a), jnp.inexact):
+        return jnp.zeros(a.shape, a.dtype)
+    return _float0(a)
+
+
+def _value_cot(dvals, vals):
+    """The value-stream cotangent: the analytical dA (straight-through for
+    quantized forwards) cast back to the primal dtype — unless the primal is
+    an integer-coded stream (baked int8 substrates), whose cotangent must be
+    symbolic zero."""
+    if jnp.issubdtype(jnp.result_type(vals), jnp.inexact):
+        return dvals.reshape(vals.shape).astype(vals.dtype)
+    return _float0(vals)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _exec_balanced(static, rows, cols, vals, x, *extra):
     """``extra``: integer per-matrix prep artifacts forwarded positionally to
@@ -68,11 +88,18 @@ def _exec_balanced_fwd(static, rows, cols, vals, x, *extra):
 def _exec_balanced_bwd(static, res, g):
     _, shape = static
     rows, cols, vals, x, extra = res
-    r, c, v = rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
+    r, c = rows.reshape(-1), cols.reshape(-1)
+    v = vals.reshape(-1)
+    from .quant import is_quantized_dtype
+    if is_quantized_dtype(vals.dtype) and extra:
+        # baked quantized stream: by convention ``extra[0]`` carries the
+        # per-tile f32 dequant scales (see core/plan._run_entry and the
+        # sharded exec) — dX must see the decoded values, not the codes
+        v = (vals.reshape(rows.shape).astype(jnp.float32)
+             * extra[0][..., None]).reshape(-1)
     dvals, dx = _coo_bwd(r, c, r < shape[0], v, x, g, shape)
-    return (_float0(rows), _float0(cols),
-            dvals.reshape(vals.shape).astype(vals.dtype), dx,
-            *(_float0(e) for e in extra))
+    return (_float0(rows), _float0(cols), _value_cot(dvals, vals), dx,
+            *(_zero_cot(e) for e in extra))
 
 
 _exec_balanced.defvjp(_exec_balanced_fwd, _exec_balanced_bwd)

@@ -9,7 +9,8 @@ from . import csc as _csc        # registers rs_* under "pallas"
 from . import vsr as _vsr        # registers nb_* under "pallas"
 from .ops import spmm, spmm_bsr, spmm_csc, spmm_vsr, spmv_vsr, use_pallas_default
 from .spmv import spmv_vsr_fused
-from .tune import (DEFAULT_CANDIDATES, OVERLAP_NEVER, autotune_geometry,
-                   autotune_overlap, measure_geometry, measure_overlap,
+from .tune import (DEFAULT_CANDIDATES, OVERLAP_NEVER, QUANT_NEVER,
+                   autotune_geometry, autotune_overlap, autotune_quant,
+                   measure_geometry, measure_overlap, measure_quant,
                    modeled_traffic, modeled_traffic_sharded)
 from .vsr import plan_visits, plan_windows, spmm_as_n_spmv_pallas, spmm_vsr_fused

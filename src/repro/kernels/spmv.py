@@ -32,16 +32,24 @@ from repro.core.selector import TileGeometry
 from .vsr import plan_visits, plan_windows
 
 
-def _spmv_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win):
+def _spmv_kernel(rows_ref, cols_ref, vals_ref, base_ref, *refs, m, win, quant):
+    # quantized streams: per-tile scale as a (1,)-block tensor input next to
+    # row_base; dequant in register (see kernels/vsr.py, DESIGN.md §8)
+    if quant:
+        sc_ref, x_ref, o_ref = refs
+    else:
+        x_ref, o_ref = refs
     rows = rows_ref[0, :]
     cols = cols_ref[0, :]
-    vals = vals_ref[0, :]
+    vals = vals_ref[0, :].astype(jnp.float32)
+    if quant:
+        vals = vals * sc_ref[0]
     base = base_ref[0]
     t = rows.shape[0]
     mask = rows < m
     local = jnp.clip(rows - base, 0, win - 1)
 
-    p = vals.astype(jnp.float32) * jnp.take(x_ref[...], cols)          # (T,)
+    p = vals * jnp.take(x_ref[...], cols)                              # (T,)
     p = jnp.where(mask, p, 0.0)
 
     idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
@@ -64,23 +72,31 @@ def _spmv_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win
 
 
 @functools.partial(jax.jit, static_argnames=("m", "win", "interpret"))
-def _spmv_call(rows, cols, vals, row_base, x, *, m, win, interpret):
+def _spmv_call(rows, cols, vals, row_base, x, scales=None, *, m, win,
+               interpret):
     n_tiles, t = rows.shape
     k = x.shape[0]
+    quant = scales is not None
+    in_specs = [
+        pl.BlockSpec((1, t), lambda i: (i, 0)),
+        pl.BlockSpec((1, t), lambda i: (i, 0)),
+        pl.BlockSpec((1, t), lambda i: (i, 0)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+    ]
+    ops = [rows, cols, vals, row_base]
+    if quant:
+        in_specs.append(pl.BlockSpec((1,), lambda i: (i,)))
+        ops.append(scales)
+    in_specs.append(pl.BlockSpec((k,), lambda i: (0,)))
+    ops.append(x)
     partials = pl.pallas_call(
-        functools.partial(_spmv_kernel, m=m, win=win),
+        functools.partial(_spmv_kernel, m=m, win=win, quant=quant),
         grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, win), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_tiles, win), jnp.float32),
         interpret=interpret,
-    )(rows, cols, vals, row_base, x)
+    )(*ops)
 
     idx = row_base[:, None].astype(jnp.int32) + jnp.arange(win, dtype=jnp.int32)[None, :]
     y = jax.ops.segment_sum(partials.reshape(-1), idx.reshape(-1),
@@ -91,17 +107,19 @@ def _spmv_call(rows, cols, vals, row_base, x, *, m, win, interpret):
 def spmv_vsr(bal: BalancedCOO, x: jax.Array, *,
              interpret: bool | None = None,
              row_base: jax.Array | None = None,
-             win: int | None = None) -> jax.Array:
+             win: int | None = None,
+             scales: jax.Array | None = None) -> jax.Array:
     """NB+PR SpMV, spill-and-combine variant (parity reference).  ``x``:
     (K,). ``row_base``/``win`` may be precomputed at plan time (keeps the
-    call traceable with traced values)."""
+    call traceable with traced values).  ``scales``: per-tile dequant scales
+    for quantized value streams."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert x.ndim == 1, "spmv_vsr is the N=1 path; use spmm_vsr for N>1"
     if row_base is None or win is None:
         base, win = plan_windows(bal)
         row_base = jnp.asarray(base)
-    y = _spmv_call(bal.rows, bal.cols, bal.vals, row_base, x,
+    y = _spmv_call(bal.rows, bal.cols, bal.vals, row_base, x, scales,
                    m=bal.shape[0], win=win, interpret=interpret)
     return y.astype(x.dtype)
 
@@ -110,19 +128,26 @@ def spmv_vsr(bal: BalancedCOO, x: jax.Array, *,
 # fused variant: segment-head dumps accumulate into revisited output blocks
 # ---------------------------------------------------------------------------
 
-def _spmv_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
-                       x_ref, o_ref, *, m, wb):
+def _spmv_fused_kernel(vt_ref, vb_ref, vs_ref, *refs, m, wb, quant):
+    # with ``quant`` the per-tile scale rides the scalar-prefetch path as a
+    # fourth prefetch operand, indexed by the visit's tile id
+    if quant:
+        sc_ref, rows_ref, cols_ref, vals_ref, x_ref, o_ref = refs
+    else:
+        rows_ref, cols_ref, vals_ref, x_ref, o_ref = refs
     v = pl.program_id(0)
     rows = rows_ref[0, :]
     cols = cols_ref[0, :]
-    vals = vals_ref[0, :]
+    vals = vals_ref[0, :].astype(jnp.float32)
+    if quant:
+        vals = vals * sc_ref[vt_ref[v]]
     t = rows.shape[0]
     mask = rows < m
     base = vb_ref[v] * wb
     local = jnp.clip(rows - base, 0, wb - 1)
     in_block = (rows - base >= 0) & (rows - base < wb)
 
-    p = vals.astype(jnp.float32) * jnp.take(x_ref[...], cols)          # (T,)
+    p = vals * jnp.take(x_ref[...], cols)                              # (T,)
     p = jnp.where(mask, p, 0.0)
 
     idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
@@ -160,28 +185,32 @@ def _spmv_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("m", "wb", "interpret"))
-def _spmv_fused_call(vt, vb, vs, rows, cols, vals, x, *, m, wb, interpret):
+def _spmv_fused_call(vt, vb, vs, rows, cols, vals, x, scales=None, *, m, wb,
+                     interpret):
     n_tiles, t = rows.shape
     k = x.shape[0]
     mb = -(-m // wb)
     n_visits = vt.shape[0]
+    quant = scales is not None
+    # ``*pf`` so the same index maps serve both scalar-prefetch arities
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4 if quant else 3,
         grid=(n_visits,),
         in_specs=[
-            pl.BlockSpec((1, t), lambda v, vt, vb, vs: (vt[v], 0)),
-            pl.BlockSpec((1, t), lambda v, vt, vb, vs: (vt[v], 0)),
-            pl.BlockSpec((1, t), lambda v, vt, vb, vs: (vt[v], 0)),
-            pl.BlockSpec((k,), lambda v, vt, vb, vs: (0,)),
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((k,), lambda v, vt, *pf: (0,)),
         ],
-        out_specs=pl.BlockSpec((wb,), lambda v, vt, vb, vs: (vb[v],)),
+        out_specs=pl.BlockSpec((wb,), lambda v, vt, vb, *pf: (vb[v],)),
     )
+    prefetch = (vt, vb, vs, scales) if quant else (vt, vb, vs)
     y = pl.pallas_call(
-        functools.partial(_spmv_fused_kernel, m=m, wb=wb),
+        functools.partial(_spmv_fused_kernel, m=m, wb=wb, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mb * wb,), jnp.float32),
         interpret=interpret,
-    )(vt, vb, vs, rows, cols, vals, x)
+    )(*prefetch, rows, cols, vals, x)
     return y[:m]
 
 
@@ -189,11 +218,13 @@ def spmv_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
                    interpret: bool | None = None, wb: int | None = None,
                    visit_tile: jax.Array | None = None,
                    visit_block: jax.Array | None = None,
-                   visit_start: jax.Array | None = None) -> jax.Array:
+                   visit_start: jax.Array | None = None,
+                   scales: jax.Array | None = None) -> jax.Array:
     """Spill-fused NB+PR SpMV: the shuffle-network segment scan with
     segment heads accumulated straight into revisited output blocks.  The
     visit schedule may be precomputed (``plan_visits`` at plan time) so the
-    call stays traceable when ``bal`` carries traced values."""
+    call stays traceable when ``bal`` carries traced values.  ``scales``:
+    per-tile dequant scales for quantized value streams."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert x.ndim == 1, "spmv_vsr_fused is the N=1 path"
@@ -202,6 +233,6 @@ def spmv_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
         vt, vb, vs = plan_visits(bal, wb)
         visit_tile, visit_block, visit_start = map(jnp.asarray, (vt, vb, vs))
     y = _spmv_fused_call(visit_tile, visit_block, visit_start,
-                         bal.rows, bal.cols, bal.vals, x,
+                         bal.rows, bal.cols, bal.vals, x, scales,
                          m=bal.shape[0], wb=wb, interpret=interpret)
     return y.astype(x.dtype)

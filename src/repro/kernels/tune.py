@@ -68,11 +68,13 @@ def measure_geometry(csr: CSR, n: int, geom: TileGeometry, *,
                      thresholds: SelectorThresholds | None = None,
                      impl: str = "nb_pr",
                      interpret: bool | None = None,
+                     quant: str | None = None,
                      repeats: int = 2) -> float:
     """Seconds per call of the NB kernel under one forced geometry."""
     backend = backend or registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
-    p = plan(csr, backend=backend, thresholds=th, geometry=geom, n_hint=n)
+    p = plan(csr, backend=backend, thresholds=th, geometry=geom, n_hint=n,
+             quant=quant)
     return _timed_execute(p, n, impl, interpret, repeats)
 
 
@@ -82,12 +84,17 @@ def autotune_geometry(csr: CSR, *, ns: tuple = (8, 128),
                       candidates: tuple | None = None,
                       impl: str = "nb_pr",
                       interpret: bool | None = None,
+                      quant: str | None = None,
                       repeats: int = 2,
                       include_wildcard: bool = True) -> SelectorThresholds:
     """Measured sweep over candidate geometries for one sparsity pattern.
 
     Returns thresholds extended with one geometry entry per N-bucket (and a
     wildcard entry covering un-hinted plans when ``include_wildcard``).
+    ``quant`` re-tunes under a quantized value stream — shrinking the stream
+    shifts the arithmetic-intensity balance, so the winning geometry can
+    move (typically toward larger ``tile``: more nonzeros amortize each
+    dense-block DMA once the stream is cheap).
     Timing in interpret mode is correctness-grade, not perf-grade — run on
     TPU (or pass precise ``candidates``) before persisting fleet-wide."""
     backend = backend or registry.default_backend()
@@ -98,7 +105,8 @@ def autotune_geometry(csr: CSR, *, ns: tuple = (8, 128),
     for n in ns:
         times = {g: measure_geometry(csr, n, g, backend=backend,
                                      thresholds=th, impl=impl,
-                                     interpret=interpret, repeats=repeats)
+                                     interpret=interpret, quant=quant,
+                                     repeats=repeats)
                  for g in cands}
         best = min(times, key=times.get)
         th = th.with_geometry(geometry_key(backend, fp, n), best)
@@ -116,7 +124,9 @@ def autotune_geometry(csr: CSR, *, ns: tuple = (8, 128),
 
 def modeled_traffic(csr: CSR, n: int, *,
                     geometry: TileGeometry | None = None,
-                    dtype_bytes: int = 4, index_bytes: int = 4) -> dict:
+                    dtype_bytes: int = 4, index_bytes: int = 4,
+                    value_bytes: int | None = None,
+                    quant: str | None = None) -> dict:
     """Per-call modeled HBM bytes of the NB SpMM under both boundary
     resolutions, charged the way the Pallas pipeline actually DMAs: a block
     moves between HBM and VMEM only when its BlockSpec index *changes*
@@ -133,23 +143,42 @@ def modeled_traffic(csr: CSR, n: int, *,
       schedule switches tiles (block crossings and neighbour-borrowing
       dummies re-use the resident tile); output blocks flush exactly once.
       The spill round-trip is gone — boundary rows accumulate in VMEM.
+
+    ``dtype_bytes`` is the *dense-side* element width (X, outputs, spill
+    partials).  The value stream is charged separately at ``value_bytes``,
+    which defaults to the width of ``csr.data``'s actual dtype — a bf16
+    stream is 2 bytes/nonzero, not 4 — and under ``quant`` to the coded
+    width (1 byte for int8/fp8) plus a 4-byte f32 scale per tile load.
     """
     geom = (geometry or TileGeometry()).validate()
     bal = csr_to_balanced(csr, tile=geom.tile)
+    if value_bytes is None:
+        from repro.core import quant as quant_mod
+        value_bytes = quant_mod.value_bytes(csr.data.dtype)
     return modeled_traffic_balanced(bal, n, int(csr.nnz), geometry=geom,
                                     dtype_bytes=dtype_bytes,
-                                    index_bytes=index_bytes)
+                                    index_bytes=index_bytes,
+                                    value_bytes=value_bytes, quant=quant)
 
 
 def modeled_traffic_balanced(bal, n: int, nnz: int, *,
                              geometry: TileGeometry | None = None,
                              win: int | None = None,
                              dtype_bytes: int = 4,
-                             index_bytes: int = 4) -> dict:
+                             index_bytes: int = 4,
+                             value_bytes: int | None = None,
+                             quant: str | None = None) -> dict:
     """The `modeled_traffic` byte model on a prebuilt ``BalancedCOO`` slab —
     the per-shard entry point (``modeled_traffic_sharded`` charges each
     shard's own schedule, but the *spill* path with the max-over-shards
-    ``win``, the shared static the sharded spill wrapper actually pays)."""
+    ``win``, the shared static the sharded spill wrapper actually pays).
+
+    The value stream is charged at its own width: ``value_bytes`` defaults
+    to ``bal.vals``'s dtype width, and ``quant`` narrows it to the coded
+    width (int8/fp8 = 1 byte) plus one 4-byte f32 scale per tile load —
+    index traffic is unchanged, which is why the *stream* reduction caps
+    near (2·index + value)/(2·index + 1) rather than value_bytes×."""
+    from repro.core import quant as quant_mod
     geom = (geometry or TileGeometry()).validate()
     m, k = bal.shape
     win = plan_windows(bal)[1] if win is None else max(int(win), 1)
@@ -162,9 +191,20 @@ def modeled_traffic_balanced(bal, n: int, nnz: int, *,
     n_pad = nb * geom.tile_n
     mb = max(1, -(-m // geom.wb))
 
-    stream = t * (2 * index_bytes + dtype_bytes)      # rows+cols+vals, per load
+    if quant is not None:
+        vb = quant_mod.value_bytes(quant_mod.quant_dtype(quant))
+        scale_bytes = 4                               # one f32 scale per tile
+    else:
+        vb = (quant_mod.value_bytes(bal.vals.dtype)
+              if value_bytes is None else int(value_bytes))
+        scale_bytes = 4 if quant_mod.is_quantized_dtype(bal.vals.dtype) else 0
+
+    value_load = t * vb + scale_bytes                 # vals (+scale), per load
+    stream = t * 2 * index_bytes + value_load         # rows+cols+vals, per load
     xblock = k * geom.tile_n * dtype_bytes            # one (K, tile_n) block
     out = m * n_pad * dtype_bytes
+    spill_value = n_tiles * value_load
+    fused_value = stream_runs * nb * value_load
     spill = (n_tiles * stream
              + n_tiles * nb * xblock                     # X re-read per tile
              + 2 * n_tiles * win * n_pad * dtype_bytes   # partials write+read
@@ -176,6 +216,10 @@ def modeled_traffic_balanced(bal, n: int, nnz: int, *,
     return {
         "spill_bytes": int(spill),
         "fused_bytes": int(fused),
+        "spill_value_bytes": int(spill_value),
+        "fused_value_bytes": int(fused_value),
+        "value_bytes": int(vb),
+        "quant": quant,
         "spill_win": int(win),
         "n_tiles": int(n_tiles),
         "n_visits": n_visits,
@@ -190,7 +234,8 @@ def modeled_traffic_balanced(bal, n: int, nnz: int, *,
 def modeled_traffic_sharded(sub, n: int, *,
                             geometry: TileGeometry | None = None,
                             dtype_bytes: int = 4,
-                            index_bytes: int = 4) -> dict:
+                            index_bytes: int = 4,
+                            quant: str | None = None) -> dict:
     """Per-shard fused-vs-spill HBM bytes for a ``ShardedSubstrate``.
 
     The asymmetry this report exists to show: inside ``shard_map`` the spill
@@ -198,8 +243,22 @@ def modeled_traffic_sharded(sub, n: int, *,
     ``max`` over per-shard windows — a single skewed shard taxes all of them
     — while the fused visit schedules are per-shard data (padding visits are
     free grid steps), so each shard pays only its own boundary crossings.
-    ``per_shard`` carries both paths' bytes per shard; totals sum them."""
+    ``per_shard`` carries both paths' bytes per shard; totals sum them.
+
+    A baked quantized substrate (``sub.quant`` set, int8/fp8 ``sub.vals``)
+    is charged at its coded width automatically; pass ``quant`` to model a
+    what-if narrowing of a float substrate."""
+    from repro.core import quant as quant_mod
     geom = (geometry or TileGeometry()).validate()
+    if quant is None:
+        quant = getattr(sub, "quant", None)
+    value_bytes = None
+    if quant is None and sub.vals is not None:
+        value_bytes = quant_mod.value_bytes(sub.vals.dtype)
+        if quant_mod.is_quantized_dtype(sub.vals.dtype):
+            # baked quantized slab with no recorded mode: charge coded width
+            # + per-tile scales via the quant branch of the per-shard model
+            quant = "int8"
     rows_h = np.asarray(sub.rows)
     cols_h = np.asarray(sub.cols)
     src_h = np.asarray(sub.src)
@@ -213,7 +272,8 @@ def modeled_traffic_sharded(sub, n: int, *,
         nnz_s = int((src_h[s] >= 0).sum())
         per_shard.append(modeled_traffic_balanced(
             bal, n, nnz_s, geometry=geom, win=win,
-            dtype_bytes=dtype_bytes, index_bytes=index_bytes))
+            dtype_bytes=dtype_bytes, index_bytes=index_bytes,
+            value_bytes=value_bytes, quant=quant))
     spill = sum(t["spill_bytes"] for t in per_shard)
     fused = sum(t["fused_bytes"] for t in per_shard)
     return {
@@ -221,6 +281,9 @@ def modeled_traffic_sharded(sub, n: int, *,
         "n_shards": n_shards,
         "spill_bytes": int(spill),
         "fused_bytes": int(fused),
+        "spill_value_bytes": sum(t["spill_value_bytes"] for t in per_shard),
+        "fused_value_bytes": sum(t["fused_value_bytes"] for t in per_shard),
+        "quant": quant,
         "spill_win": int(win),
         "max_visits": max(t["n_visits"] for t in per_shard),
         "flops": sum(t["flops"] for t in per_shard),
@@ -277,3 +340,54 @@ def autotune_overlap(csr: CSR, mesh, *, ns: tuple = (256, 512, 1024),
                 < measure_overlap(csr, mesh, n, chunked=False, **kw)):
             return dataclasses.replace(th, overlap_min_n=int(n))
     return dataclasses.replace(th, overlap_min_n=OVERLAP_NEVER)
+
+
+# ---------------------------------------------------------------------------
+# quant crossover: when does the narrowed value stream pay for its dequant?
+# ---------------------------------------------------------------------------
+
+#: ``quant_min_n`` sentinel for "quantization never wins on this backend"
+QUANT_NEVER = 1 << 30
+
+
+def measure_quant(csr: CSR, n: int, *, quant: str | None = "int8",
+                  backend: str | None = None,
+                  thresholds: SelectorThresholds | None = None,
+                  impl: str = "nb_pr",
+                  interpret: bool | None = None,
+                  repeats: int = 2) -> float:
+    """Seconds per NB-plan call with the value stream quantized to ``quant``
+    (``None`` measures the unquantized baseline with identical thresholds)."""
+    import dataclasses
+    backend = backend or registry.default_backend()
+    th = thresholds if thresholds is not None else default_thresholds()
+    # force the gate open so the requested mode is what actually runs
+    th = dataclasses.replace(th, quant_min_n=1)
+    p = plan(csr, backend=backend, thresholds=th, n_hint=n, quant=quant)
+    return _timed_execute(p, n, impl, interpret, repeats)
+
+
+def autotune_quant(csr: CSR, *, ns: tuple = (8, 32, 128),
+                   quant: str = "int8",
+                   backend: str | None = None,
+                   thresholds: SelectorThresholds | None = None,
+                   impl: str = "nb_pr",
+                   interpret: bool | None = None,
+                   repeats: int = 2) -> SelectorThresholds:
+    """Measure the quantization crossover: the smallest dense width at which
+    the quantized plan beats the unquantized one becomes ``quant_min_n``
+    (``QUANT_NEVER`` when it never wins).  At tiny N the stream narrowing
+    saves little absolute traffic while the in-register dequant adds VPU
+    work per visit; as N grows the dequant amortizes across the widening
+    accumulate and the byte saving dominates — the same measured-crossover
+    shape as ``autotune_overlap``.  Timing off-TPU is correctness-grade;
+    run on real hardware before persisting fleet-wide."""
+    import dataclasses
+    th = thresholds if thresholds is not None else default_thresholds()
+    for n in sorted(ns):
+        kw = dict(backend=backend, thresholds=th, impl=impl,
+                  interpret=interpret, repeats=repeats)
+        if (measure_quant(csr, n, quant=quant, **kw)
+                < measure_quant(csr, n, quant=None, **kw)):
+            return dataclasses.replace(th, quant_min_n=int(n))
+    return dataclasses.replace(th, quant_min_n=QUANT_NEVER)

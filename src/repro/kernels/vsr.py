@@ -138,12 +138,21 @@ def plan_visits(bal: BalancedCOO, wb: int
 # fused kernel: in-kernel spill accumulation over revisited output blocks
 # ---------------------------------------------------------------------------
 
-def _vsr_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
-                      x_ref, o_ref, *, m, wb):
+def _vsr_fused_kernel(vt_ref, vb_ref, vs_ref, *refs, m, wb, quant):
+    # with ``quant`` the per-tile scale rides the scalar-prefetch path as a
+    # fourth prefetch operand (next to the visit schedule): the value stream
+    # stays int8/fp8 all the way into VMEM and is rescaled *in register* —
+    # no dequantized copy ever exists in HBM (DESIGN.md §8).
+    if quant:
+        sc_ref, rows_ref, cols_ref, vals_ref, x_ref, o_ref = refs
+    else:
+        rows_ref, cols_ref, vals_ref, x_ref, o_ref = refs
     v = pl.program_id(1)
     rows = rows_ref[0, :]                      # (T,) global row ids
     cols = cols_ref[0, :]
-    vals = vals_ref[0, :]
+    vals = vals_ref[0, :].astype(jnp.float32)
+    if quant:
+        vals = vals * sc_ref[vt_ref[v]]        # in-register dequant
     t = rows.shape[0]
     base = vb_ref[v] * wb                      # this visit's block row offset
     local = rows - base
@@ -152,7 +161,7 @@ def _vsr_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
 
     # dense-row loading (VDL): one gather covers all N columns of this block
     xg = jnp.take(x_ref[...], cols, axis=0)    # (T, TN)
-    p = vals[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+    p = vals[:, None] * xg.astype(jnp.float32)
 
     # segment reduction as one-hot matmul on the MXU, restricted to the
     # block's rows — (wb, T) instead of the spill path's (WIN, T)
@@ -177,31 +186,35 @@ def _vsr_fused_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, vals_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("m", "wb", "tile_n", "interpret"))
-def _vsr_fused_call(vt, vb, vs, rows, cols, vals, x, *, m, wb, tile_n,
-                    interpret):
+def _vsr_fused_call(vt, vb, vs, rows, cols, vals, x, scales=None, *, m, wb,
+                    tile_n, interpret):
     n_tiles, t = rows.shape
     k, n_pad = x.shape
     nb = n_pad // tile_n
     mb = -(-m // wb)
     n_visits = vt.shape[0]
+    quant = scales is not None
+    # ``*pf`` so the same index maps serve the 3- and 4-operand scalar-
+    # prefetch arities (scales prepend when the stream is quantized).
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,                 # visit_tile/block/start
+        num_scalar_prefetch=4 if quant else 3,
         grid=(nb, n_visits),
         in_specs=[
-            pl.BlockSpec((1, t), lambda j, v, vt, vb, vs: (vt[v], 0)),
-            pl.BlockSpec((1, t), lambda j, v, vt, vb, vs: (vt[v], 0)),
-            pl.BlockSpec((1, t), lambda j, v, vt, vb, vs: (vt[v], 0)),
-            pl.BlockSpec((k, tile_n), lambda j, v, vt, vb, vs: (0, j)),
+            pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((k, tile_n), lambda j, v, vt, *pf: (0, j)),
         ],
         out_specs=pl.BlockSpec((wb, tile_n),
-                               lambda j, v, vt, vb, vs: (vb[v], j)),
+                               lambda j, v, vt, vb, *pf: (vb[v], j)),
     )
+    prefetch = (vt, vb, vs, scales) if quant else (vt, vb, vs)
     out = pl.pallas_call(
-        functools.partial(_vsr_fused_kernel, m=m, wb=wb),
+        functools.partial(_vsr_fused_kernel, m=m, wb=wb, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mb * wb, n_pad), jnp.float32),
         interpret=interpret,
-    )(vt, vb, vs, rows, cols, vals, x)
+    )(*prefetch, rows, cols, vals, x)
     return out[:m]
 
 
@@ -209,10 +222,19 @@ def _vsr_fused_call(vt, vb, vs, rows, cols, vals, x, *, m, wb, tile_n,
 # spill kernel (the parity reference)
 # ---------------------------------------------------------------------------
 
-def _vsr_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win):
+def _vsr_kernel(rows_ref, cols_ref, vals_ref, base_ref, *refs, m, win, quant):
+    # quantized streams carry their per-tile scale as a (1,)-block tensor
+    # input alongside ``row_base`` (same per-tile indexing); dequant happens
+    # in register right after the stream load.
+    if quant:
+        sc_ref, x_ref, o_ref = refs
+    else:
+        x_ref, o_ref = refs
     rows = rows_ref[0, :]                      # (T,) global row ids
     cols = cols_ref[0, :]
-    vals = vals_ref[0, :]
+    vals = vals_ref[0, :].astype(jnp.float32)
+    if quant:
+        vals = vals * sc_ref[0]                # in-register dequant
     base = base_ref[0]
     t = rows.shape[0]
     mask = rows < m                            # sentinel padding drops out
@@ -220,7 +242,7 @@ def _vsr_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win)
 
     # dense-row loading (VDL): one gather covers all N columns of this block
     xg = jnp.take(x_ref[...], cols, axis=0)    # (T, TN)
-    p = vals[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+    p = vals[:, None] * xg.astype(jnp.float32)
 
     # segment reduction as one-hot matmul on the MXU
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (win, t), 0)
@@ -230,24 +252,32 @@ def _vsr_kernel(rows_ref, cols_ref, vals_ref, base_ref, x_ref, o_ref, *, m, win)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "win", "tile_n", "interpret"))
-def _vsr_call(rows, cols, vals, row_base, x, *, m, win, tile_n, interpret):
+def _vsr_call(rows, cols, vals, row_base, x, scales=None, *, m, win, tile_n,
+              interpret):
     n_tiles, t = rows.shape
     k, n_pad = x.shape
     nb = n_pad // tile_n
+    quant = scales is not None
+    in_specs = [
+        pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        pl.BlockSpec((1,), lambda i, j: (i,)),
+    ]
+    ops = [rows, cols, vals, row_base]
+    if quant:
+        in_specs.append(pl.BlockSpec((1,), lambda i, j: (i,)))
+        ops.append(scales)
+    in_specs.append(pl.BlockSpec((k, tile_n), lambda i, j: (0, j)))
+    ops.append(x)
     partials = pl.pallas_call(
-        functools.partial(_vsr_kernel, m=m, win=win),
+        functools.partial(_vsr_kernel, m=m, win=win, quant=quant),
         grid=(n_tiles, nb),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
-            pl.BlockSpec((1,), lambda i, j: (i,)),
-            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, win, tile_n), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n_tiles, win, n_pad), jnp.float32),
         interpret=interpret,
-    )(rows, cols, vals, row_base, x)
+    )(*ops)
 
     # spill combine: tile (t, w) holds the sum for global row row_base[t]+w;
     # one segment-sum merges boundary-crossing rows (the atomics analogue).
@@ -272,11 +302,14 @@ def spmm_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
                    interpret: bool | None = None,
                    visit_tile: jax.Array | None = None,
                    visit_block: jax.Array | None = None,
-                   visit_start: jax.Array | None = None) -> jax.Array:
+                   visit_start: jax.Array | None = None,
+                   scales: jax.Array | None = None) -> jax.Array:
     """Spill-fused NB+PR SpMM: no partials buffer, no post-kernel combine.
 
     The visit schedule may be precomputed (``plan_visits`` at plan time) so
-    the call stays traceable when ``bal`` carries traced values."""
+    the call stays traceable when ``bal`` carries traced values.  With a
+    quantized value stream (int8/fp8 ``bal.vals``) pass the matching
+    per-tile ``scales`` — dequant happens in register (DESIGN.md §8)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     geom = TileGeometry()
@@ -289,7 +322,7 @@ def spmm_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
         visit_tile, visit_block, visit_start = map(jnp.asarray, (vt, vb, vs))
     xp = _pad_n(x2, tile_n)
     y = _vsr_fused_call(visit_tile, visit_block, visit_start,
-                        bal.rows, bal.cols, bal.vals, xp,
+                        bal.rows, bal.cols, bal.vals, xp, scales,
                         m=bal.shape[0], wb=wb, tile_n=tile_n,
                         interpret=interpret)
     y = y[:, :n].astype(x2.dtype)
@@ -299,12 +332,14 @@ def spmm_vsr_fused(bal: BalancedCOO, x: jax.Array, *,
 def spmm_vsr(bal: BalancedCOO, x: jax.Array, *, tile_n: int = 128,
              interpret: bool | None = None,
              row_base: jax.Array | None = None,
-             win: int | None = None) -> jax.Array:
+             win: int | None = None,
+             scales: jax.Array | None = None) -> jax.Array:
     """NB+PR SpMM, spill-and-combine variant (the fused path's parity
     reference).  ``x``: (K, N) — N padded to ``tile_n`` internally.
 
     ``row_base``/``win`` may be precomputed (``plan_windows`` at plan time) so
-    the call stays traceable when ``bal`` carries traced values."""
+    the call stays traceable when ``bal`` carries traced values.  ``scales``:
+    per-tile dequant scales for quantized value streams."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     x2 = x[:, None] if x.ndim == 1 else x
@@ -313,7 +348,7 @@ def spmm_vsr(bal: BalancedCOO, x: jax.Array, *, tile_n: int = 128,
         base, win = plan_windows(bal)
         row_base = jnp.asarray(base)
     xp = _pad_n(x2, tile_n)
-    y = _vsr_call(bal.rows, bal.cols, bal.vals, row_base, xp,
+    y = _vsr_call(bal.rows, bal.cols, bal.vals, row_base, xp, scales,
                   m=bal.shape[0], win=win, tile_n=tile_n, interpret=interpret)
     y = y[:, :n].astype(x2.dtype)
     return y[:, 0] if x.ndim == 1 else y
@@ -370,13 +405,28 @@ def _prep_windows(bal: BalancedCOO, *, geometry: TileGeometry | None = None,
             "wb": geom.wb, "tile_n": geom.tile_n}
 
 
-def _pallas_nb(bal: BalancedCOO, x: jax.Array, *, interpret: bool | None = None,
+def _pallas_nb(bal: BalancedCOO, x: jax.Array, scales: jax.Array | None = None,
+               *, interpret: bool | None = None,
                row_base: jax.Array | None = None, win: int | None = None,
                visit_tile: jax.Array | None = None,
                visit_block: jax.Array | None = None,
                visit_start: jax.Array | None = None,
                wb: int | None = None, tile_n: int | None = None,
-               spill: bool = False):
+               quant: str | None = None, spill: bool = False):
+    # Quantized-plan dispatch (DESIGN.md §8): a *baked* substrate arrives
+    # already int8/fp8 with its plan-aux scales riding the custom-VJP extras
+    # (positional ``scales``); a *live* float stream on a quantized plan
+    # (``with_values``) re-quantizes in graph with fresh per-tile scales —
+    # either way only the narrow stream crosses HBM into the kernel.
+    from repro.core import quant as quant_mod
+    if quant_mod.is_quantized_dtype(bal.vals.dtype):
+        if scales is None:
+            raise ValueError("quantized value stream needs per-tile scales")
+    elif quant is not None:
+        q, scales = quant_mod.quantize_stream(bal.vals, quant)
+        bal = BalancedCOO(bal.rows, bal.cols, q, bal.shape)
+    else:
+        scales = None
     fused = visit_tile is not None and not spill
     if x.ndim == 1:
         from .spmv import spmv_vsr, spmv_vsr_fused
@@ -384,13 +434,16 @@ def _pallas_nb(bal: BalancedCOO, x: jax.Array, *, interpret: bool | None = None,
             return spmv_vsr_fused(bal, x, interpret=interpret, wb=wb,
                                   visit_tile=visit_tile,
                                   visit_block=visit_block,
-                                  visit_start=visit_start)
-        return spmv_vsr(bal, x, interpret=interpret, row_base=row_base, win=win)
+                                  visit_start=visit_start, scales=scales)
+        return spmv_vsr(bal, x, interpret=interpret, row_base=row_base,
+                        win=win, scales=scales)
     if fused:
         return spmm_vsr_fused(bal, x, interpret=interpret, wb=wb,
                               tile_n=tile_n, visit_tile=visit_tile,
-                              visit_block=visit_block, visit_start=visit_start)
+                              visit_block=visit_block, visit_start=visit_start,
+                              scales=scales)
     return spmm_vsr(bal, x, interpret=interpret, row_base=row_base, win=win,
+                    scales=scales,
                     **({} if tile_n is None else {"tile_n": tile_n}))
 
 

@@ -14,6 +14,10 @@ all-reduce is emitted by XLA and is not user-interceptable; the deployable
 lever at that layer is grad dtype (bf16 here, half the wire bytes of f32) —
 recorded in DESIGN.md §4.  shard_map-level manual int8 all-reduce is
 implemented in `repro/train/manual_collectives.py` for the DP-outer variant.
+
+The scalar encode/decode pair lives in ``repro.core.quant`` (shared with the
+quantized value substrates, DESIGN.md §8); the names here are stable
+re-exports for existing training-loop callers.
 """
 from __future__ import annotations
 
@@ -22,16 +26,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-
-def int8_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+from repro.core.quant import int8_decode, int8_encode  # noqa: F401 (re-export)
 
 
 def ef_accumulate(grad: jax.Array, residual: jax.Array):
