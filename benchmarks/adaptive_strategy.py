@@ -10,7 +10,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api import SelectorThresholds, calibrate, sparse
-from repro.core import LOGICAL_KERNELS
+from repro.core import MATMUL_KERNELS
 from repro.core.selector import select_kernel
 from .common import csv_row, geomean, pick_suite, time_fn
 
@@ -29,7 +29,7 @@ def run(full: bool = False, save_thresholds_to: str | None = None):
         for n in NS:
             x = xs[(mname, n)]
             xv = x[:, 0] if n == 1 else x
-            for kname in LOGICAL_KERNELS:
+            for kname in MATMUL_KERNELS:
                 times[(mname, n, kname)] = time_fn(
                     lambda kn=kname: m.matmul(xv, impl=kn))
 
@@ -38,7 +38,7 @@ def run(full: bool = False, save_thresholds_to: str | None = None):
         for mname, m in mats.items():
             for n in NS:
                 choice = select_fn(m, n)
-                oracle = min(times[(mname, n, k)] for k in LOGICAL_KERNELS)
+                oracle = min(times[(mname, n, k)] for k in MATMUL_KERNELS)
                 ratios.append(times[(mname, n, choice)] / oracle)
         return geomean(ratios) - 1.0
 
@@ -53,7 +53,7 @@ def run(full: bool = False, save_thresholds_to: str | None = None):
     paper_loss = loss_of(lambda m, n: select_kernel(m.stats, n, SelectorThresholds.PAPER_GPU))
     rows.append(csv_row("adaptive/rule_loss_vs_oracle", 0.0, f"{rule_loss:.3f}"))
     rows.append(csv_row("adaptive/paperGPU_rule_loss", 0.0, f"{paper_loss:.3f}"))
-    for kname in LOGICAL_KERNELS:
+    for kname in MATMUL_KERNELS:
         single = loss_of(lambda m, n, k=kname: k)
         rows.append(csv_row(f"adaptive/single_{kname}_loss", 0.0, f"{single:.3f}"))
     return rows

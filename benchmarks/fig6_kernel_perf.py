@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from jax.experimental import sparse as jsparse
 
 from repro.api import sparse
-from repro.core import LOGICAL_KERNELS
+from repro.core import MATMUL_KERNELS
 from .common import csv_row, geomean, pick_suite, time_fn
 
 NS = (1, 2, 4, 8, 32, 128)
@@ -32,7 +32,7 @@ def run(full: bool = False):
             xs = x[:, 0] if n == 1 else x
             ours = min(
                 time_fn(lambda kn=kn: m.matmul(xs, impl=kn))
-                for kn in LOGICAL_KERNELS)
+                for kn in MATMUL_KERNELS)
             t_bcoo = time_fn(lambda: bcoo @ xs)
             t_dense = time_fn(lambda: dense @ xs)
             per_n_speedup[n].append(t_bcoo / ours)

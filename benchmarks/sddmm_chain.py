@@ -1,0 +1,111 @@
+"""Fused SDDMM→SpMM chain benchmark (DESIGN.md §9): one-kernel fused chain
+vs the unfused two-kernel pair, swept over R-MAT skew and dense width N.
+
+Per (matrix, N) cell:
+
+1. wall time of both executions (interpret-mode numbers off-TPU are
+   correctness-grade; the modeled columns are the portable signal);
+2. **modeled edge-value HBM bytes** (``repro.kernels.tune
+   .modeled_traffic_chain``): the unfused pair pays the irreducible
+   ``2·nnz·dtype`` round-trip (SDDMM writes every edge score, the SpMM's
+   value stream reads it back) plus the softmax re-read; the fused kernel
+   pays **zero** — scores are recomputed per column block and consumed in
+   VMEM (the FusedMM trade);
+3. max abs error of fused vs unfused — the fusion must be a pure
+   traffic/scheduling change, not a numerics change;
+4. the sharded chain (stacked per-shard visit schedules + cross-shard
+   softmax merge) when more than one device is visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import sparse
+from repro.core.selector import default_thresholds
+from repro.kernels.tune import CHAIN_NEVER, modeled_traffic_chain
+from . import common
+from .common import bytes_derived, csv_row, geomean, pick_suite, time_fn
+
+NS = (8, 128)
+D = 32
+
+
+def run(full: bool = False):
+    suite = pick_suite(full)
+    ns = (8,) if common.QUICK else NS
+    d = 8 if common.QUICK else D
+    rng = np.random.default_rng(0)
+    th_fused = dataclasses.replace(default_thresholds(), chain_fuse_min_n=1)
+    th_unfused = dataclasses.replace(default_thresholds(),
+                                     chain_fuse_min_n=CHAIN_NEVER)
+    rows, reductions = [], []
+    for name, csr in suite.items():
+        m, k = csr.shape
+        a = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32) * 0.1)
+        b = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32) * 0.1)
+        Af = sparse(csr, backend="pallas", thresholds=th_fused,
+                    chain_op="softmax", cache=False)
+        Au = sparse(csr, backend="pallas", thresholds=th_unfused,
+                    chain_op="softmax", cache=False)
+        for n in ns:
+            x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+            traffic = modeled_traffic_chain(csr, n, d)
+            t_fused = time_fn(lambda: Af.chain(a, b, x, transform="softmax"))
+            t_unf = time_fn(lambda: Au.chain(a, b, x, transform="softmax"))
+            err = float(np.abs(
+                np.asarray(Af.chain(a, b, x, transform="softmax"))
+                - np.asarray(Au.chain(a, b, x, transform="softmax"))).max())
+            reductions.append(traffic["bytes_reduction"])
+            rows.append(csv_row(
+                f"sddmm_chain/{name}/n{n}/fused", t_fused * 1e6,
+                bytes_derived(traffic["flops"], traffic["fused_bytes"],
+                              t_fused,
+                              f"edge_bytes={traffic['fused_edge_value_bytes']}"
+                              f"_max_abs_err={err:.2e}")))
+            rows.append(csv_row(
+                f"sddmm_chain/{name}/n{n}/unfused", t_unf * 1e6,
+                bytes_derived(traffic["flops"], traffic["unfused_bytes"],
+                              t_unf,
+                              f"edge_bytes="
+                              f"{traffic['unfused_edge_value_bytes']}")))
+            rows.append(csv_row(
+                f"sddmm_chain/{name}/n{n}/edge_round_trip_eliminated", 0.0,
+                f"{traffic['unfused_edge_value_bytes']}"))
+    rows.append(csv_row("sddmm_chain/geomean_bytes_reduction", 0.0,
+                        f"{geomean(reductions):.2f}"))
+
+    if jax.device_count() > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("shard",))
+        name, csr = next(iter(suite.items()))
+        m, k = csr.shape
+        n = ns[-1]
+        a = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32) * 0.1)
+        b = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32) * 0.1)
+        x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        As = sparse(csr, mesh=mesh, chain_op="softmax", cache=False)
+        A1 = sparse(csr, backend="xla", chain_op="softmax", cache=False)
+        traffic = modeled_traffic_chain(csr, n, d)
+        t = time_fn(lambda: As.chain(a, b, x, transform="softmax"))
+        err = float(np.abs(
+            np.asarray(As.chain(a, b, x, transform="softmax"))
+            - np.asarray(A1.chain(a, b, x, transform="softmax"))).max())
+        rows.append(csv_row(
+            f"sddmm_chain/{name}/n{n}/sharded{jax.device_count()}", t * 1e6,
+            bytes_derived(traffic["flops"], traffic["fused_bytes"], t,
+                          f"edge_bytes={traffic['fused_edge_value_bytes']}"
+                          f"_max_abs_err={err:.2e}")))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

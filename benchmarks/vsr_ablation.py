@@ -8,21 +8,21 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.api import sparse
-from repro.core import LOGICAL_KERNELS
+from repro.core import MATMUL_KERNELS
 from .common import csv_row, pick_suite, time_fn
 
 
 def run(full: bool = False):
     suite = pick_suite(full)
     rows = []
-    wins = {k: 0 for k in LOGICAL_KERNELS}
+    wins = {k: 0 for k in MATMUL_KERNELS}
     win_stats = []
     rng = np.random.default_rng(0)
     for name, csr in suite.items():
         m = sparse(csr, tile=512)
         x = jnp.asarray(rng.standard_normal(csr.shape[1]).astype(np.float32))
         times = {}
-        for kname in LOGICAL_KERNELS:
+        for kname in MATMUL_KERNELS:
             times[kname] = time_fn(lambda kn=kname: m.matmul(x, impl=kn))
         best = min(times, key=times.get)
         wins[best] += 1

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 sys.path.insert(0, "src")
 
 import repro
-from repro.core import LOGICAL_KERNELS
+from repro.core import MATMUL_KERNELS
 
 
 def main():
@@ -39,7 +39,7 @@ def main():
         x = jnp.asarray(rng.standard_normal((A.shape[1], n)).astype(np.float32))
         xv = x[:, 0] if n == 1 else x
         picked = A.plan.select(n)
-        outs = {k: np.asarray(A.matmul(xv, impl=k)) for k in LOGICAL_KERNELS}
+        outs = {k: np.asarray(A.matmul(xv, impl=k)) for k in MATMUL_KERNELS}
         ref = outs["nb_pr"]
         agree = all(np.allclose(o, ref, atol=1e-3) for o in outs.values())
         print(f"N={n:3d}: rules pick {picked}; all four kernels agree: {agree} "

@@ -1,0 +1,99 @@
+"""Train a tiny graph-attention layer with the fused SDDMM→SpMM chain.
+
+    PYTHONPATH=src python examples/train_gat.py
+
+A GAT-style layer over an R-MAT graph: project node features to queries
+``Q = H Wq``, keys ``K = H Wk`` and values ``V = H Wv``, then one
+``sparse_chain`` call computes masked-softmax attention over the graph's
+edges and aggregates the values —
+
+    y = softmax_rows(mask(Q @ K^T / sqrt(d))) @ V
+
+On the Pallas backend the edge scores live only in VMEM: the SDDMM, the
+row softmax and the aggregating SpMM run as one fused kernel (DESIGN.md
+§9), so the ``O(nnz)`` attention stream never round-trips through HBM.
+Gradients flow through both kernels of the chain — the backward is itself
+an SDDMM+SpMM pair — so ``Wq``/``Wk``/``Wv`` all train with plain SGD.
+"""
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro import api
+from repro.core import rmat
+
+
+def main():
+    # 1. the graph: a skewed R-MAT adjacency (self-loops added so softmax
+    #    rows are never empty), planned once and cached by topology
+    csr = rmat(scale=9, edge_factor=8, seed=0)
+    n_nodes = csr.shape[0]
+    dense = np.zeros(csr.shape, np.float32)
+    indptr = np.asarray(csr.indptr)
+    cols = np.asarray(csr.indices)
+    for i in range(n_nodes):
+        dense[i, cols[indptr[i]:indptr[i + 1]]] = 1.0
+        dense[i, i] = 1.0                              # self-loop
+    A = api.sparse(dense, backend="pallas", chain_op="softmax")
+    print(f"graph: {A.shape}, nnz={A.nnz}, backend={A.backend}")
+
+    # 2. features + a 2-layer GAT head trained on a smooth regression target
+    d_in, d_head = 32, 16
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.standard_normal((n_nodes, d_in)).astype(np.float32))
+    target = jnp.asarray(
+        rng.standard_normal((n_nodes, d_head)).astype(np.float32))
+    params = {
+        "wq": jnp.asarray(rng.standard_normal((d_in, d_head)) * 0.1,
+                          jnp.float32),
+        "wk": jnp.asarray(rng.standard_normal((d_in, d_head)) * 0.1,
+                          jnp.float32),
+        "wv": jnp.asarray(rng.standard_normal((d_in, d_head)) * 0.1,
+                          jnp.float32),
+    }
+    alpha = 1.0 / np.sqrt(d_head)
+
+    def forward(p):
+        q, k, v = h @ p["wq"], h @ p["wk"], h @ p["wv"]
+        # one call = SDDMM + masked row softmax + SpMM, fused on Pallas
+        return A.chain(q, k, v, transform="softmax", alpha=alpha)
+
+    def loss_fn(p):
+        err = forward(p) - target
+        return jnp.mean(err * err)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    # 3. plain SGD; the loss must drop and every projection must get grads
+    lr = 0.5
+    losses = []
+    for step in range(20):
+        loss, grads = grad_fn(params)
+        losses.append(float(loss))
+        gnorms = {k: float(jnp.linalg.norm(g)) for k, g in grads.items()}
+        assert all(gn > 0 for gn in gnorms.values()), \
+            f"a projection received zero gradient: {gnorms}"
+        params = {k: w - lr * grads[k] for k, w in params.items()}
+        if step % 5 == 0:
+            print(f"step {step:2d}  loss={losses[-1]:.5f}  "
+                  + "  ".join(f"|g_{k}|={v:.4f}" for k, v in gnorms.items()))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+    print(f"loss {losses[0]:.5f} -> {losses[-1]:.5f} in {len(losses)} steps")
+
+    # 4. cross-check the fused chain against the unfused XLA pair
+    y_fused = forward(params)
+    Au = api.sparse(dense, backend="xla", chain_op="softmax")
+    q, k, v = (h @ params[w] for w in ("wq", "wk", "wv"))
+    y_ref = Au.chain(q, k, v, transform="softmax", alpha=alpha)
+    err = float(jnp.max(jnp.abs(y_fused - y_ref)))
+    print(f"fused vs unfused max abs err: {err:.2e}")
+    assert err < 1e-4
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,7 +38,8 @@ from repro.core.cache import (DEFAULT_CACHE, PlanCache, cached_plan,
                               pattern_fingerprint, plan_key)
 from repro.core.formats import CSR, csr_from_dense
 from repro.core.plan import (PlanArtifact, PlanBuilder, execute,
-                             execute_pattern, plan)
+                             execute_chain, execute_pattern, execute_sddmm,
+                             plan)
 from repro.core.registry import backend_scope, default_backend
 from repro.core.selector import (SelectorThresholds, TileGeometry,
                                  default_thresholds, geometry_key,
@@ -47,9 +48,10 @@ from repro.core.selector import calibrate as calibrate  # noqa: F401 (re-export)
 from repro.core.stats import MatrixStats
 
 __all__ = [
-    "SparseMatrix", "sparse", "pattern_matmul", "use_backend", "use_mesh",
+    "SparseMatrix", "sparse", "sparse_chain", "sddmm", "pattern_matmul",
+    "use_backend", "use_mesh",
     "calibrate", "calibrate_backend", "autotune_geometry", "autotune_overlap",
-    "autotune_quant", "cache_stats",
+    "autotune_quant", "autotune_chain", "cache_stats",
     "clear_cache", "PlanArtifact", "PlanBuilder", "PlanCache",
     "SelectorThresholds", "TileGeometry", "geometry_key",
     "execute", "save_thresholds", "load_thresholds",
@@ -161,6 +163,30 @@ class SparseMatrix:
     def __matmul__(self, x: jax.Array) -> jax.Array:
         return self.matmul(x)
 
+    def sddmm(self, a: jax.Array, b: jax.Array, *,
+              backend: str | None = None,
+              interpret: bool | None = None) -> jax.Array:
+        """Sample ``a @ b.T`` at this operand's nonzero positions — the
+        pattern-only SDDMM (DESIGN.md §9).  Returns the ``(nnz,)``
+        CSR-ordered score stream; feed it to ``with_values`` to build an
+        attention-weighted operand, or use ``chain`` to fuse the consuming
+        SpMM.  This handle's values are not read — only the pattern."""
+        return execute_sddmm(self._plan, a, b, backend=backend,
+                             interpret=interpret)
+
+    def chain(self, a: jax.Array, b: jax.Array, x: jax.Array, *,
+              transform: str = "softmax", alpha: float | None = None,
+              backend: str | None = None,
+              interpret: bool | None = None) -> jax.Array:
+        """The fused SDDMM→SpMM chain: score ``a @ b.T`` at the nonzero
+        positions, transform per row (``identity`` / ``scale`` / masked
+        ``softmax``), and immediately aggregate ``x`` — edge scores live in
+        VMEM only, never HBM (DESIGN.md §9).  Differentiable w.r.t. ``a``,
+        ``b``, and ``x``; the backward pass is itself an SDDMM+SpMM pair."""
+        return execute_chain(self._plan, a, b, x, transform=transform,
+                             alpha=alpha, backend=backend,
+                             interpret=interpret)
+
     # -- derived operands ---------------------------------------------------
     def with_values(self, stream: jax.Array) -> "SparseMatrix":
         """Same pattern and plan, new CSR-ordered nonzero values.  The stream
@@ -262,7 +288,7 @@ def sparse(a, *, backend: str | None = None, mesh=None,
            bsr_block: tuple = (8, 128), n_hint: int | None = None,
            shard_axis: str | None = None, shard_kind: str | None = None,
            geometry: TileGeometry | None = None,
-           quant: str | None = None,
+           quant: str | None = None, chain_op: str | None = None,
            cache: "PlanCache | bool | None" = True) -> SparseMatrix:
     """Build a first-class sparse operand from a CSR or a dense 2-D array.
 
@@ -284,7 +310,12 @@ def sparse(a, *, backend: str | None = None, mesh=None,
     crossover drops it — narrow operands don't amortize the dequant — and a
     value distribution whose per-tile dynamic range breaks the error bound
     falls back to the unquantized plan with a warning.  Quantized and
-    unquantized plans key distinct cache entries."""
+    unquantized plans key distinct cache entries.
+
+    ``chain_op`` tags the plan with the SDDMM→SpMM chain transform it will
+    serve (``sparse_chain`` sets it automatically): chained and plain-SpMM
+    plans over the same pattern key distinct cache entries, so retuning one
+    never evicts the other's compiled executables."""
     csr, values = _as_csr(a)
     if mesh is None:
         mesh, scoped_axis = scoped_mesh()
@@ -322,7 +353,7 @@ def sparse(a, *, backend: str | None = None, mesh=None,
                            mesh=mesh, thresholds=thresholds, tile=tile,
                            bsr_block=tuple(bsr_block), shard_axis=shard_axis,
                            shard_kind=shard_kind, geometry=geometry,
-                           quant=quant)
+                           quant=quant, chain_op=chain_op)
     if values is None and p.csr is not csr:
         # cache hit from a pattern-equal matrix: keep OUR values live unless
         # they are bit-identical to the plan's baked stream
@@ -335,6 +366,43 @@ def sparse(a, *, backend: str | None = None, mesh=None,
         p.substrate(entry.substrate)
         p.kernel_opts(entry)
     return SparseMatrix(p, values=values, cache=cache_obj)
+
+
+def sddmm(pattern, a, b, *, backend: str | None = None, mesh=None,
+          interpret: bool | None = None, **plan_kw) -> jax.Array:
+    """Sampled dense-dense matmul: ``(a @ b.T)`` at ``pattern``'s nonzero
+    positions only, returned as the ``(nnz,)`` CSR-ordered stream.
+
+    ``pattern`` is a CSR, a dense 2-D array (nonzeros define the pattern),
+    or a ``SparseMatrix``; planning shares the same topology-keyed cache as
+    ``sparse()``.  Differentiable w.r.t. ``a`` and ``b``."""
+    A = pattern if isinstance(pattern, SparseMatrix) else (
+        sparse(pattern, backend=backend, mesh=mesh, **plan_kw))
+    return A.sddmm(a, b, backend=backend, interpret=interpret)
+
+
+def sparse_chain(pattern, a, b, x, *, transform: str = "softmax",
+                 alpha: float | None = None, backend: str | None = None,
+                 mesh=None, interpret: bool | None = None,
+                 **plan_kw) -> jax.Array:
+    """The fused SDDMM→(transform)→SpMM chain over ``pattern``'s nonzeros:
+
+        ``y[i] = sum_j  t(a[i] · b[j])[ij] * x[j]``   for (i,j) in pattern
+
+    with ``t`` = ``identity``, ``scale`` (multiply by ``alpha``), or masked
+    row ``softmax`` (graph attention).  On the Pallas backend the chain runs
+    as one kernel — edge scores are computed, transformed, and consumed in
+    VMEM without an HBM round-trip (DESIGN.md §9); the
+    ``chain_fuse_min_n`` threshold (``autotune_chain``) gates fusion by
+    dense width.  Plans are cached per ``(topology, transform)`` — the
+    ``chain_op`` key segment.  Differentiable w.r.t. ``a``, ``b``, ``x``."""
+    if isinstance(pattern, SparseMatrix):
+        A = pattern
+    else:
+        A = sparse(pattern, backend=backend, mesh=mesh, chain_op=transform,
+                   **plan_kw)
+    return A.chain(a, b, x, transform=transform, alpha=alpha,
+                   backend=backend, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +450,18 @@ def autotune_quant(csr_or_matrix, **kwargs) -> SelectorThresholds:
     dequant cost (``QUANT_NEVER`` when it never does; DESIGN.md §8;
     ``repro.kernels.tune.autotune_quant`` for the knobs)."""
     from repro.kernels.tune import autotune_quant as _tune
+    csr = (csr_or_matrix.plan.csr if isinstance(csr_or_matrix, SparseMatrix)
+           else csr_or_matrix)
+    return _tune(csr, **kwargs)
+
+
+def autotune_chain(csr_or_matrix, **kwargs) -> SelectorThresholds:
+    """Measure the chain-fusion crossover for one pattern and return
+    thresholds with the winning ``chain_fuse_min_n`` — the smallest dense
+    width at which the one-kernel fused SDDMM→SpMM chain beats the unfused
+    two-kernel pair (``CHAIN_NEVER`` when it never does; DESIGN.md §9;
+    ``repro.kernels.tune.autotune_chain`` for the knobs)."""
+    from repro.kernels.tune import autotune_chain as _tune
     csr = (csr_or_matrix.plan.csr if isinstance(csr_or_matrix, SparseMatrix)
            else csr_or_matrix)
     return _tune(csr, **kwargs)

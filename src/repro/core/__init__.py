@@ -7,12 +7,12 @@ from .formats import (BSR, CSR, ELL, BalancedCOO, bsr_to_dense, csr_from_coo,
                       csr_from_dense, csr_to_balanced, csr_to_bsr, csr_to_ell,
                       reset_build_counts, row_ids_from_indptr)
 from .plan import (PlanArtifact, PlanBuilder, PlanMeta, SparsePlan, execute,
-                   execute_pattern, plan)
+                   execute_chain, execute_pattern, execute_sddmm, plan)
 from .quant import (MAX_DYNAMIC_RANGE, QUANT_MODES, dequantize_stream,
                     int8_decode, int8_encode, quantize_stream, value_bytes)
-from .registry import (LOGICAL_KERNELS, KernelEntry, available, backend_scope,
-                       backends_for, default_backend, register, resolve,
-                       scoped_backend)
+from .registry import (LOGICAL_KERNELS, MATMUL_KERNELS, KernelEntry, available,
+                       backend_scope, backends_for, default_backend, register,
+                       resolve, scoped_backend)
 from .rmat import rmat, rmat_suite, rmat_suite_small
 from .selector import (PreparedMatrix, SelectorThresholds, TileGeometry,
                        adaptive_spmm, calibrate, default_thresholds,

@@ -52,8 +52,8 @@ from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
 from .selector import (SelectorThresholds, TileGeometry, default_thresholds,
                        select_kernel)
 from .stats import MatrixStats, balanced_tile_span, matrix_stats
-from .vjp import (_exec_balanced, _exec_bsr, _exec_ell,  # noqa: F401 (re-export)
-                  _stream_to_balanced)
+from .vjp import (_exec_balanced, _exec_bsr, _exec_chain,  # noqa: F401 (re-export)
+                  _exec_ell, _exec_sddmm, _stream_to_balanced)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +212,7 @@ class PlanMeta:
     inner_backend: str | None = None
     geometry: Any = None             # autotuned TileGeometry, or None
     quant: str | None = None         # value-stream quant mode ("int8"/"fp8")
+    chain_op: str | None = None      # chain transform the plan was keyed for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -291,6 +292,11 @@ class PlanBuilder:
     # balanced-family substrate per nnz-tile; demoted to None (with a
     # warning) when any tile's dynamic range would collapse small entries
     quant: str | None = None
+    # SDDMM→SpMM chain transform this plan is keyed for (DESIGN.md §9).
+    # Purely a cache-segmentation tag: ``execute_chain`` takes the transform
+    # per call, but cached plans for different chain ops must not alias
+    # (their prep/bound caches hold transform-specific partials).
+    chain_op: str | None = None
     _substrates: dict = dataclasses.field(default_factory=dict, repr=False)
     _quant_scales: Any = dataclasses.field(default=None, repr=False)
     _opts: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -508,7 +514,12 @@ class PlanBuilder:
             elif n is not None:
                 kernels = (self.select(n),)
             else:
-                kernels = registry.LOGICAL_KERNELS
+                kernels = registry.MATMUL_KERNELS
+        for name in kernels:
+            if name in ("sddmm", "chain"):
+                raise ValueError(
+                    f"{name!r} cannot be finalized into a PlanArtifact; use "
+                    "execute_sddmm/execute_chain on the PlanBuilder")
         subs: dict[str, Any] = {}
         aux: dict[str, Any] = {}
         prep: list = []
@@ -533,7 +544,8 @@ class PlanBuilder:
             bsr_block=tuple(self.bsr_block), topology=self.topology_key(),
             prep=tuple(sorted(prep)), shard_spec=self.shard_spec,
             mesh=self.mesh, inner_backend=self.inner_backend,
-            geometry=self.geometry, quant=self.quant)
+            geometry=self.geometry, quant=self.quant,
+            chain_op=self.chain_op)
         return PlanArtifact(substrates=subs, aux=aux, meta=meta)
 
 
@@ -549,7 +561,8 @@ def plan(csr: CSR, *, n_hint: int | None = None,
          shard_axis: str | None = None, shard_kind: str | None = None,
          inner_backend: str | None = None,
          geometry: TileGeometry | None = None,
-         quant: str | None = None) -> PlanBuilder:
+         quant: str | None = None,
+         chain_op: str | None = None) -> PlanBuilder:
     """Offline planning front door.
 
     ``n_hint``: anticipated N of the dense operand; when given, the substrate
@@ -581,7 +594,11 @@ def plan(csr: CSR, *, n_hint: int | None = None,
     ``thresholds.quant_min_n`` (below it the dequant ALU cost beats the byte
     savings, so the plan stays unquantized); an fp8 request on a runtime
     without the dtype demotes to int8; per-tile dynamic-range blowups demote
-    to unquantized at substrate-build time (``core/quant.check_tile_range``)."""
+    to unquantized at substrate-build time (``core/quant.check_tile_range``).
+
+    ``chain_op`` (DESIGN.md §9) tags the plan with the SDDMM→SpMM chain
+    transform it will serve — a cache-segmentation key for ``PlanCache``, not
+    a behavioural switch (``execute_chain`` takes the transform per call)."""
     if backend is None:
         backend = "sharded" if mesh is not None else registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
@@ -647,6 +664,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         shard_spec=spec,
         inner_backend=inner_backend,
         quant=quant,
+        chain_op=chain_op,
     )
     if n_hint is not None:
         entry = p.entry(p.select(n_hint))
@@ -747,6 +765,9 @@ def execute(p: "PlanBuilder | PlanArtifact", x: jax.Array, *,
     forces a logical kernel (oracle / ablation mode); ``backend`` overrides
     the plan's backend for this call (builders only — artifacts are frozen
     per backend); ``interpret`` is forwarded to Pallas backends."""
+    if impl in ("sddmm", "chain"):
+        raise ValueError(f"impl {impl!r} takes dense operands, not a value "
+                         "stream; use execute_sddmm / execute_chain")
     if isinstance(p, PlanArtifact):
         return _execute_artifact(p, x, vals=vals, impl=impl, backend=backend,
                                  interpret=interpret)
@@ -789,6 +810,150 @@ def _execute_artifact(art: PlanArtifact, x, *, vals, impl, backend, interpret):
                       lambda name: art.aux[name])
 
 
+# ---------------------------------------------------------------------------
+# SDDMM + fused chain entries (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _chain_pattern(p: PlanBuilder, entry: registry.KernelEntry):
+    """The (rows, cols) pattern arrays the sddmm/chain custom VJPs take as
+    primals.  Single-device: the balanced slab's arrays.  Sharded row-split
+    substrates carry shard-*local* row ids (sentinel ``m_pad``), which would
+    corrupt the flat segment-sum backward — lift them to global ids here
+    (global = local + shard row offset; sentinel → ``m``); the sharded
+    wrapper converts back to local inside ``shard_map``."""
+    key = ("chain_pattern", entry.substrate)
+    pat = p._opts.get(key)
+    if pat is None:
+        m = int(p.csr.shape[0])
+        if entry.substrate == "shard_balanced":
+            sub = p.substrate("shard_balanced")
+            spec = sub.spec
+            with jax.ensure_compile_time_eval():
+                if spec.kind == "row":
+                    rl = np.asarray(sub.rows).astype(np.int64)
+                    offs = (np.arange(spec.n_shards, dtype=np.int64)
+                            * spec.m_pad)[:, None, None]
+                    rg = np.where(rl < spec.m_pad, rl + offs, m)
+                    rows = jnp.asarray(rg.astype(np.int32))
+                else:
+                    rows = sub.rows    # nnz split: already global
+            pat = (rows, sub.cols)
+        else:
+            sub = p.substrate("balanced")
+            pat = (sub.rows, sub.cols)
+        p._opts[key] = pat
+    return pat
+
+
+def _chain_bound(p: PlanBuilder, entry: registry.KernelEntry, interpret,
+                 extra: dict):
+    """Identity-cached partial for the sddmm/chain kernels: bakes interpret,
+    the matrix shape, the per-call statics (transform/alpha) and the prep
+    opts.  The quantized-plan mode flag is stripped — chains take dense
+    operands, there is no value stream to decode."""
+    opts = {k: v for k, v in p.kernel_opts(entry).items() if k != "quant"}
+    key = (entry.logical, entry.backend, interpret,
+           tuple(sorted(extra.items())))
+    fn = p._bound.get(key)
+    if fn is None:
+        if entry.substrate.startswith("shard"):
+            sub = p.substrate(entry.substrate)
+            extra = dict(extra, mesh=p.mesh, spec=sub.spec,
+                         inner_backend=extra.pop("inner_backend",
+                                                 sub.inner_backend))
+        fn = functools.partial(entry.fn, interpret=interpret,
+                               shape=tuple(p.csr.shape), **extra, **opts)
+        p._bound[key] = fn
+    return fn
+
+
+def execute_sddmm(p: PlanBuilder, a: jax.Array, b: jax.Array, *,
+                  backend: str | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Sampled dense-dense matmul over the plan's pattern:
+    ``e[i] = <A[row_i], B[col_i]>`` for every nonzero, returned as the
+    CSR-ordered ``(nnz,)`` f32 edge-score stream.  Differentiable w.r.t.
+    ``a`` and ``b`` (the backward is a pair of segment-sums over the same
+    pattern — SpMM-shaped, per DESIGN.md §9)."""
+    if isinstance(p, PlanArtifact):
+        raise TypeError("execute_sddmm needs a PlanBuilder; PlanArtifacts "
+                        "do not carry the chain kernels")
+    m, k = (int(s) for s in p.csr.shape)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[1]:
+        raise ValueError(f"sddmm needs A (m, d) and B (k, d); got "
+                         f"{a.shape} and {b.shape}")
+    if a.shape[0] != m or b.shape[0] != k:
+        raise ValueError(f"operand rows {a.shape[0]}/{b.shape[0]} do not "
+                         f"match the pattern shape {(m, k)}")
+    entry = p.entry("sddmm", backend)
+    rows, cols = _chain_pattern(p, entry)
+    bound = _chain_bound(p, entry, interpret, {})
+    slab = _exec_sddmm((bound, (m, k)), rows, cols, a, b)
+    nnz = p.csr.nnz
+    if entry.substrate == "shard_balanced":
+        # stacked per-shard slabs scatter back to the global stream through
+        # the substrate's src map (each nonzero lands in exactly one slot)
+        sub = p.substrate("shard_balanced")
+        src = sub.src.reshape(-1)
+        e = jnp.where(src >= 0, slab.reshape(-1), 0.0)
+        return jax.ops.segment_sum(e, jnp.where(src >= 0, src, nnz),
+                                   num_segments=nnz + 1)[:nnz]
+    # balanced tiling is row-major over the CSR stream: flatten-and-trim
+    # restores CSR order
+    return slab.reshape(-1)[:nnz]
+
+
+def execute_chain(p: PlanBuilder, a: jax.Array, b: jax.Array, x: jax.Array,
+                  *, transform: str = "identity", alpha=None,
+                  backend: str | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused SDDMM→``transform``→SpMM over the plan's pattern:
+    ``y = T(mask(A @ B^T)) @ X`` where the mask is the sparsity pattern and
+    ``T`` is identity / ``alpha``-scale / masked row softmax of
+    ``alpha * scores``.  On the Pallas backend the edge scores never touch
+    HBM (kernels/fused_chain.py); the xla lowering is the unfused two-kernel
+    reference.  Differentiable w.r.t. ``a``, ``b`` and ``x`` — the backward
+    is itself an SDDMM (for dW) plus segment-sums (core/vjp.py)."""
+    if isinstance(p, PlanArtifact):
+        raise TypeError("execute_chain needs a PlanBuilder; PlanArtifacts "
+                        "do not carry the chain kernels")
+    if transform not in ("identity", "scale", "softmax"):
+        raise ValueError(f"unknown chain transform {transform!r}; expected "
+                         "'identity', 'scale' or 'softmax'")
+    m, k = (int(s) for s in p.csr.shape)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    x = jnp.asarray(x)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[1]:
+        raise ValueError(f"chain needs A (m, d) and B (k, d); got "
+                         f"{a.shape} and {b.shape}")
+    if a.shape[0] != m or b.shape[0] != k:
+        raise ValueError(f"operand rows {a.shape[0]}/{b.shape[0]} do not "
+                         f"match the pattern shape {(m, k)}")
+    if x.ndim not in (1, 2) or x.shape[0] != k:
+        raise ValueError(f"chain needs X (k,) or (k, n) with k={k}; "
+                         f"got {x.shape}")
+    n = 1 if x.ndim == 1 else x.shape[1]
+    backend = backend or p.backend
+    al = None if alpha is None else float(alpha)
+    extra: dict = {"transform": transform, "alpha": al}
+    # fused-chain crossover (thresholds.chain_fuse_min_n): below the cutoff
+    # the per-column-block score recompute costs more than the 2*nnz edge
+    # bytes it saves, so run the unfused two-kernel xla reference instead
+    if backend == "pallas" and n < p.thresholds.chain_fuse_min_n:
+        backend = "xla"
+    elif backend == "sharded":
+        inner = p.inner_backend or registry.default_backend()
+        if inner == "pallas" and n < p.thresholds.chain_fuse_min_n:
+            extra["inner_backend"] = "xla"
+    entry = p.entry("chain", backend)
+    rows, cols = _chain_pattern(p, entry)
+    bound = _chain_bound(p, entry, interpret, extra)
+    return _exec_chain((bound, (m, k), transform, al), rows, cols, a, b, x)
+
+
 # module-level bound-kernel cache for the plan-free training entry
 _PATTERN_BOUND: dict = {}
 
@@ -798,7 +963,8 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
                     backend: str | None = None,
                     interpret: bool | None = None,
                     mesh: Any = None,
-                    shard_axis: str | None = None) -> jax.Array:
+                    shard_axis: str | None = None,
+                    quant: str | None = None) -> jax.Array:
     """Differentiable SpMM over a bare BalancedCOO-layout pattern — the
     training entry for sparse-weight layers (no CSR, values are live params).
     rows/cols may be traced (scanned per-layer patterns); they are real args
@@ -807,7 +973,22 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
 
     ``mesh`` (or ``backend="sharded"``) routes through the sharded backend:
     the pattern's tiles — already fixed-nnz quotas — split evenly across
-    ``shard_axis`` and partials psum (core/shard.py)."""
+    ``shard_axis`` and partials psum (core/shard.py).
+
+    ``quant`` ("int8"/"fp8", DESIGN.md §8) re-quantizes the live value stream
+    in graph with fresh per-tile scales, so only the narrow stream crosses
+    HBM into the kernel — the same coded substrates ``plan(quant=...)``
+    reaches, without a plan.  rs_* picks are pinned to their nb_* siblings
+    (the coded stream lives in the balanced layout)."""
+    if quant is not None:
+        if quant not in quant_mod.QUANT_MODES:
+            raise ValueError(f"unknown quant mode {quant!r}; expected one of "
+                             f"{quant_mod.QUANT_MODES}")
+        if not quant_mod.supports(quant):
+            warnings.warn(f"quant={quant!r} is not supported by this jax "
+                          "build; demoting to 'int8'", stacklevel=2)
+            quant = "int8"
+        impl = _quant_logical(impl, quant)
     if mesh is not None or backend == "sharded":
         if mesh is None:
             raise ValueError("backend='sharded' needs mesh=...")
@@ -815,7 +996,7 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
         return shard_mod.execute_pattern_sharded(
             rows, cols, vals, tuple(shape), x, mesh=mesh, axis=shard_axis,
             impl=impl, interpret=interpret,
-            backend=None if backend == "sharded" else backend)
+            backend=None if backend == "sharded" else backend, quant=quant)
     explicit = backend is not None
     backend = backend or registry.default_backend()
     entry = registry.resolve(impl, backend)
@@ -838,9 +1019,9 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
         with jax.ensure_compile_time_eval():
             r = np.asarray(rows)
         digest = hashlib.sha1(r.tobytes()).hexdigest()
-        key = (entry, interpret, tuple(shape), r.shape, digest)
+        key = (entry, interpret, quant, tuple(shape), r.shape, digest)
     else:
-        key = (entry, interpret)
+        key = (entry, interpret, quant)
     bound = _PATTERN_BOUND.get(key)
     if bound is None:
         if len(_PATTERN_BOUND) >= 256:   # bound the per-pattern cache
@@ -849,6 +1030,9 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
         if entry.prep is not None:
             opts = dict(entry.prep(BalancedCOO(
                 rows, cols, jnp.zeros(rows.shape, vals.dtype), tuple(shape))))
+        if quant is not None:
+            # live-stream mode flag: the kernel wrappers quantize in graph
+            opts["quant"] = quant
         bound = functools.partial(entry.fn, interpret=interpret, **opts)
         _PATTERN_BOUND[key] = bound
     return _exec_balanced((bound, tuple(shape)), rows, cols,

@@ -32,7 +32,15 @@ from typing import Callable, Optional
 
 import jax
 
-LOGICAL_KERNELS: tuple[str, ...] = ("rs_sr", "rs_pr", "nb_sr", "nb_pr")
+#: the paper's 2x2 SpMM space — the kernels ``execute`` dispatches between.
+MATMUL_KERNELS: tuple[str, ...] = ("rs_sr", "rs_pr", "nb_sr", "nb_pr")
+
+#: every logical kernel the registry knows: the 2x2 SpMM grid plus the GNN
+#: training pair — ``sddmm`` (sample A @ B^T at the pattern's nonzeros) and
+#: ``chain`` (SDDMM → per-row transform → SpMM, fused on Pallas).  The two
+#: extras take raw pattern arrays, not substrates; ``execute_sddmm`` /
+#: ``execute_chain`` in ``core/plan.py`` are their only call sites.
+LOGICAL_KERNELS: tuple[str, ...] = MATMUL_KERNELS + ("sddmm", "chain")
 
 #: substrate format each *logical* kernel consumes on the reference (XLA)
 #: backend; physical backends may substitute their own (BSR does, and the

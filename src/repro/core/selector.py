@@ -115,6 +115,13 @@ class SelectorThresholds:
     # honour; ``kernels/tune.QUANT_NEVER`` = never.  Measured per backend by
     # ``kernels/tune.autotune_quant``.
     quant_min_n: int = 1
+    # fused-chain crossover (DESIGN.md §9): a Pallas SDDMM→SpMM chain runs
+    # fused only at dense width N >= this — the fused kernel recomputes edge
+    # scores once per column block, so at tiny N the recompute can cost more
+    # than the 2*nnz edge-value bytes it saves.  1 = always fuse;
+    # ``kernels/tune.CHAIN_NEVER`` = never (unfused two-kernel pair).
+    # Measured per backend by ``kernels/tune.autotune_chain``.
+    chain_fuse_min_n: int = 1
     # autotuned tile geometries: sorted ((geometry_key, (tile, wb, tile_n)),
     # ...) — a tuple-of-tuples so thresholds stay hashable (they ride
     # ``PlanMeta`` static aux and the ``PlanCache`` key, which is how a
@@ -164,12 +171,21 @@ class SelectorThresholds:
             d["overlap_min_n"] = int(self.overlap_min_n)
             d["geometries"] = {k: list(v) for k, v in self.geometries}
             d["quant_min_n"] = int(self.quant_min_n)
+        if self.chain_fuse_min_n != 1:
+            # chain-calibrated thresholds write the v4 schema (a strict
+            # superset of v3); older files load with the always-fuse default
+            d["version"] = 4
+            d["max_win"] = int(self.max_win)
+            d["overlap_min_n"] = int(self.overlap_min_n)
+            d["geometries"] = {k: list(v) for k, v in self.geometries}
+            d["quant_min_n"] = int(self.quant_min_n)
+            d["chain_fuse_min_n"] = int(self.chain_fuse_min_n)
         return json.dumps(d, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "SelectorThresholds":
         d = json.loads(text)
-        if d.get("version", 1) not in (1, 2, 3):
+        if d.get("version", 1) not in (1, 2, 3, 4):
             raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
         geoms = tuple(sorted((str(k), tuple(int(x) for x in v))
                              for k, v in d.get("geometries", {}).items()))
@@ -182,6 +198,8 @@ class SelectorThresholds:
                  overlap_min_n=int(d.get("overlap_min_n", 512)),
                  # pre-quantization (v1/v2) files: always honour quant=
                  quant_min_n=int(d.get("quant_min_n", 1)),
+                 # pre-chain (v1-v3) files: always fuse
+                 chain_fuse_min_n=int(d.get("chain_fuse_min_n", 1)),
                  geometries=geoms)
         th.validate()
         return th
@@ -207,6 +225,9 @@ class SelectorThresholds:
         if self.quant_min_n < 1:
             raise ValueError(f"quant_min_n must be >= 1, "
                              f"got {self.quant_min_n}")
+        if self.chain_fuse_min_n < 1:
+            raise ValueError(f"chain_fuse_min_n must be >= 1, "
+                             f"got {self.chain_fuse_min_n}")
         for key, vals in self.geometries:
             if len(vals) != 3:
                 raise ValueError(f"geometry {key!r} must be (tile, wb, "
@@ -344,7 +365,7 @@ def calibrate(
     ``save_to`` persists the winner as JSON so ``plan()`` auto-loads it via
     ``$REPRO_THRESHOLDS``."""
     from .plan import plan
-    from .registry import LOGICAL_KERNELS
+    from .registry import MATMUL_KERNELS
 
     plans = {k: plan(v) for k, v in matrices.items()}
     if times is None:
@@ -352,7 +373,7 @@ def calibrate(
         times = {}
         for mname, p in plans.items():
             for n in ns:
-                for kname in LOGICAL_KERNELS:
+                for kname in MATMUL_KERNELS:
                     times[(mname, n, kname)] = time_fn(kname, p, n)
 
     def loss(th: SelectorThresholds) -> float:
@@ -360,7 +381,7 @@ def calibrate(
         for mname, p in plans.items():
             for n in ns:
                 chosen = times[(mname, n, select_kernel(p.stats, n, th))]
-                oracle = min(times[(mname, n, k)] for k in LOGICAL_KERNELS)
+                oracle = min(times[(mname, n, k)] for k in MATMUL_KERNELS)
                 ratios.append(chosen / oracle)
         return float(np.exp(np.mean(np.log(ratios))))  # geomean slowdown
 

@@ -464,7 +464,7 @@ def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
                   interpret=None, row_base=None, win=None,
                   visit_tile=None, visit_block=None, visit_start=None,
                   wb=None, tile_n=None, overlap_min_n=None,
-                  spill: bool = False):
+                  spill: bool = False, quant: str | None = None):
     """Run the inner kernel per shard under shard_map; reduce per the spec.
 
     With stacked visit schedules in the prep opts the inner path is the
@@ -497,6 +497,10 @@ def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
         statics["quant"] = sub.quant
         tensor_keys = ("scales",) + tensor_keys
         tensors = [sub.scales] + tensors
+    elif quant is not None and sub.inner_kind == "balanced":
+        # live float slab on a quantized request (the pattern entry): the
+        # inner kernels re-quantize in graph with fresh per-shard-tile scales
+        statics["quant"] = quant
     bound = _make_inner(inner, interpret, statics, tensor_keys)
 
     if sub.inner_kind == "balanced":
@@ -541,11 +545,175 @@ def _sharded_exec(sub: ShardedSubstrate, x, *, _logical: str,
     return y
 
 
-for _logical in registry.LOGICAL_KERNELS:
+for _logical in registry.MATMUL_KERNELS:
     _sub_kind = "shard_ell" if _logical.startswith("rs") else "shard_balanced"
     registry.register(_logical, "sharded", _sub_kind,
                       functools.partial(_sharded_exec, _logical=_logical),
                       prep=functools.partial(_sharded_prep, _logical=_logical))
+
+
+# ---------------------------------------------------------------------------
+# sharded SDDMM + fused chain (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+# Both take the *stacked* pattern arrays with GLOBAL row ids as primals (the
+# plan layer lifts row-split local rows; see plan._chain_pattern) so the flat
+# segment-sum backwards of core/vjp.py stay correct — the conversion back to
+# shard-local ids happens here, inside shard_map.  Following Bharadwaj et al.
+# (PAPERS.md), the SDDMM and the chain's SpMM half share one co-partitioning:
+# the same ShardSpec, the same stacked visit schedules, the same replicated
+# dense operands.
+
+def _row_shard_operands(spec: ShardSpec, a):
+    """Row-split helpers: per-shard global row offsets ``(n_shards,)`` and
+    the A operand padded to ``n_shards * m_pad`` rows and stacked per shard
+    (shard s owns global rows ``[s * m_pad, (s + 1) * m_pad)``)."""
+    S, m_pad = spec.n_shards, spec.m_pad
+    offs = jnp.arange(S, dtype=jnp.int32) * m_pad
+    a_pad = jnp.pad(a, ((0, S * m_pad - a.shape[0]), (0, 0)))
+    return offs, a_pad.reshape(S, m_pad, a.shape[1])
+
+
+def _sddmm_sharded(rows, cols, a, b, *, interpret=None, shape=None,
+                   mesh=None, spec=None, inner_backend=None, **_opts):
+    """Per-shard SDDMM under shard_map: each shard scores its own slab with
+    the single-device kernel; the stacked score slabs concat back out (the
+    plan layer scatters them to the global stream through ``sub.src``)."""
+    m, k = (int(s) for s in shape)
+    inner = registry.resolve("sddmm", inner_backend)
+    row_split = spec.kind == "row"
+    if row_split:
+        offs, a_sh = _row_shard_operands(spec, a)
+        inner_shape = (spec.m_pad, k)
+        ops = (rows, cols, offs, a_sh, b)
+        in_specs = (P(spec.axis),) * 4 + (P(),)
+    else:
+        inner_shape = (m, k)
+        ops = (rows, cols, a, b)
+        in_specs = (P(spec.axis),) * 2 + (P(), P())
+
+    def local(*args):
+        if row_split:
+            rg, cg, off, a_s, bb = args
+            rg, cg, off, a_s = rg[0], cg[0], off[0], a_s[0]
+            rl = jnp.where(rg < m, rg - off, inner_shape[0])
+        else:
+            rg, cg, a_s, bb = args
+            rl, cg = rg[0], cg[0]
+        return inner.fn(rl, cg, a_s, bb, interpret=interpret,
+                        shape=inner_shape)
+
+    out = shard_map(local, mesh=mesh, in_specs=in_specs,
+                    out_specs=P(spec.axis), check_rep=False)(*ops)
+    return out.reshape(rows.shape)
+
+
+def _chain_sharded(rows, cols, a, b, x, *, interpret=None, shape=None,
+                   transform: str = "identity", alpha=None, mesh=None,
+                   spec=None, inner_backend=None, visit_tile=None,
+                   visit_block=None, visit_start=None, row_base=None,
+                   win=None, wb=None, tile_n=None, overlap_min_n=None,
+                   **_opts):
+    """Sharded fused SDDMM→transform→SpMM.
+
+    Row-split shards own disjoint rows, so the softmax statistics are
+    shard-local and the reduction is the concat ``out_specs``.  nnz-split
+    shards span rows: pass 1 runs per shard and the statistics merge with
+    the online-softmax collectives (``pmax`` of row maxes, ``psum`` of
+    rescaled sums) before pass 2; output partials psum — or, at ``N >=
+    overlap_min_n``, ride the width-chunked ``ppermute`` ring with the
+    stats computed once outside the chunk loop (they are X-independent)."""
+    from .spmm import chain_stats_xla, chain_xla
+    m, k = (int(s) for s in shape)
+    row_split = spec.kind == "row"
+    fused = inner_backend == "pallas" and visit_tile is not None
+    if fused:
+        from repro.kernels.fused_chain import chain_pallas, chain_stats_pallas
+
+    x2 = x[:, None] if x.ndim == 1 else x
+    ops = [rows, cols]
+    specs = [P(spec.axis), P(spec.axis)]
+    if row_split:
+        offs, a_sh = _row_shard_operands(spec, a)
+        ops += [offs, a_sh]
+        specs += [P(spec.axis), P(spec.axis)]
+        inner_shape = (spec.m_pad, k)
+    else:
+        ops.append(a)
+        specs.append(P())
+        inner_shape = (m, k)
+    ops += [b, x2]
+    specs += [P(), P()]
+    if fused:
+        ops += [visit_tile, visit_block, visit_start]
+        specs += [P(spec.axis)] * 3
+
+    chunk_w = tile_n if tile_n is not None else 128
+    chunked = (spec.reduction == "psum" and spec.n_shards > 1
+               and overlap_min_n is not None and x.ndim == 2
+               and x.shape[1] >= max(int(overlap_min_n), chunk_w + 1))
+
+    def local(*args):
+        it = iter(args)
+        rg = next(it)[0]
+        cg = next(it)[0]
+        if row_split:
+            off = next(it)[0]
+            a_s = next(it)[0]
+            rl = jnp.where(rg < m, rg - off, inner_shape[0])
+        else:
+            a_s = next(it)
+            rl = rg
+        bb = next(it)
+        xx = next(it)
+        if fused:
+            vt = next(it)[0]
+            vb = next(it)[0]
+            vs = next(it)[0]
+
+        stats = None
+        if transform == "softmax" and not row_split and spec.n_shards > 1:
+            # cross-shard softmax merge: each shard's (max, sum) over its
+            # own nonzeros fold into the global per-row statistics
+            if fused:
+                rm_l, rs_l = chain_stats_pallas(
+                    rl, cg, a_s, bb, interpret=interpret, shape=inner_shape,
+                    alpha=alpha, wb=wb, visit_tile=vt, visit_block=vb,
+                    visit_start=vs)
+            else:
+                rm_l, rs_l = chain_stats_xla(rl, cg, a_s, bb,
+                                             shape=inner_shape, alpha=alpha)
+            rm_g = jax.lax.pmax(rm_l, spec.axis)
+            rs_g = jax.lax.psum(rs_l * jnp.exp(rm_l - rm_g), spec.axis)
+            stats = (rm_g, rs_g)
+
+        def run(xc):
+            if fused:
+                return chain_pallas(rl, cg, a_s, bb, xc, interpret=interpret,
+                                    shape=inner_shape, transform=transform,
+                                    alpha=alpha, visit_tile=vt,
+                                    visit_block=vb, visit_start=vs, wb=wb,
+                                    tile_n=tile_n, stats=stats)
+            return chain_xla(rl, cg, a_s, bb, xc, shape=inner_shape,
+                             transform=transform, alpha=alpha, stats=stats)
+
+        if spec.reduction != "psum":
+            return run(xx)
+        if chunked:
+            return _overlapped_ring(run, xx, chunk_w, spec.axis,
+                                    spec.n_shards)
+        return jax.lax.psum(run(xx), spec.axis)
+
+    out_specs = P(spec.axis) if spec.reduction == "concat" else P()
+    y = shard_map(local, mesh=mesh, in_specs=tuple(specs),
+                  out_specs=out_specs, check_rep=False)(*ops)
+    if spec.reduction == "concat":
+        y = y[:m]    # strip the per-shard row padding
+    return y[:, 0] if x.ndim == 1 else y
+
+
+registry.register("sddmm", "sharded", "shard_balanced", _sddmm_sharded)
+registry.register("chain", "sharded", "shard_balanced", _chain_sharded,
+                  prep=functools.partial(_sharded_prep, _logical="chain"))
 
 
 # ---------------------------------------------------------------------------
@@ -562,7 +730,7 @@ _PATTERN_PREP: "OrderedDict" = OrderedDict()
 def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
                             axis: str | None = None, impl: str = "nb_pr",
                             backend: str | None = None,
-                            interpret=None):
+                            interpret=None, quant: str | None = None):
     """Tile-split a bare BalancedCOO-layout pattern across ``axis``.
 
     The pattern is already nnz-balanced (fixed quota per tile), so an equal
@@ -620,4 +788,5 @@ def execute_pattern_sharded(rows, cols, vals, shape, x, *, mesh,
         rows=rs, cols=cs, vals=vs, lens=None, src=None, scales=None,
         spec=spec, mesh=mesh, inner_backend=backend, inner_kind="balanced",
         inner_shape=tuple(shape), shape=tuple(shape))
-    return _sharded_exec(sub, x, _logical=impl, interpret=interpret, **opts)
+    return _sharded_exec(sub, x, _logical=impl, interpret=interpret,
+                         quant=quant, **opts)

@@ -177,6 +177,105 @@ def _acc_dtype(a, b):
 
 
 # ---------------------------------------------------------------------------
+# SDDMM + the unfused chain: the GNN training pair, XLA reference lowerings
+# ---------------------------------------------------------------------------
+
+#: masked-softmax sentinel: a finite stand-in for -inf so empty rows (whose
+#: row-max never updates) produce exp(z - NEG) with z = NEG, i.e. exp(0)=1
+#: damped by a zero validity mask — never a NaN from inf - inf.
+SOFTMAX_NEG = -1e30
+
+#: row-sum floor for the masked-softmax divide: rows with no valid nonzeros
+#: have sum 0 and must produce 0 weights, not NaN.
+SOFTMAX_EPS = 1e-30
+
+
+def _sddmm_flat(r, c, a, b, valid):
+    """Flat edge scores ``e[i] = <A[r[i]], B[c[i]]>`` in f32, 0 at padding."""
+    ag = jnp.take(a.astype(jnp.float32), jnp.where(valid, r, 0), axis=0)
+    bg = jnp.take(b.astype(jnp.float32), jnp.where(valid, c, 0), axis=0)
+    return jnp.where(valid, jnp.sum(ag * bg, axis=-1), 0.0)
+
+
+def _softmax_stats(z, r, valid, m):
+    """Per-row (max, sum-of-exp) of masked scores — the two-pass softmax
+    statistics, each ``(m + 1,)``.  Empty rows get ``(SOFTMAX_NEG, 0)``;
+    sentinel-row entries land in the dropped trailing segment."""
+    rr = jnp.where(valid, r, m)
+    zm = jnp.where(valid, z, SOFTMAX_NEG)
+    rm = jax.ops.segment_max(zm, rr, num_segments=m + 1)
+    rm = jnp.maximum(rm, SOFTMAX_NEG)          # empty segments: -inf → NEG
+    p = jnp.where(valid, jnp.exp(z - jnp.take(rm, rr)), 0.0)
+    rs = jax.ops.segment_sum(p, rr, num_segments=m + 1)
+    return rm, rs
+
+
+def chain_weights(e, r, valid, m, transform: str, alpha, stats=None):
+    """Apply the chain's per-row transform to flat f32 edge scores.
+
+    ``identity`` passes scores through, ``scale`` multiplies by ``alpha``,
+    ``softmax`` is the masked row softmax of ``alpha * e`` over the pattern's
+    nonzeros (rows with no nonzeros produce all-zero weights).  ``stats``
+    substitutes precomputed ``(row_max, row_sum)`` arrays for the local
+    two-pass statistics — the sharded nnz-split backend combines per-shard
+    stats across devices and replays them here.  Shared by the unfused XLA
+    chain, the chain VJP's recompute, and the sharded wrapper."""
+    al = 1.0 if alpha is None else float(alpha)
+    if transform == "identity":
+        return jnp.where(valid, e, 0.0)
+    if transform == "scale":
+        return jnp.where(valid, al * e, 0.0)
+    if transform == "softmax":
+        z = al * e
+        rr = jnp.where(valid, r, m)
+        rm, rs = _softmax_stats(z, r, valid, m) if stats is None else stats
+        p = jnp.where(valid, jnp.exp(z - jnp.take(rm, rr)), 0.0)
+        return p / jnp.maximum(jnp.take(rs, rr), SOFTMAX_EPS)
+    raise ValueError(f"unknown chain transform {transform!r}; expected "
+                     "'identity', 'scale' or 'softmax'")
+
+
+def sddmm_xla(rows, cols, a, b, *, interpret=None, shape=None, **_opts):
+    """XLA SDDMM over a BalancedCOO-layout pattern: sample ``A @ B^T`` at the
+    nonzero positions.  Returns an f32 slab shaped like ``rows`` (sentinel
+    padding rows score 0); ``execute_sddmm`` flattens to the CSR-ordered
+    ``(nnz,)`` stream."""
+    m = int(shape[0])
+    r = rows.reshape(-1)
+    valid = r < m
+    e = _sddmm_flat(r, cols.reshape(-1), a, b, valid)
+    return e.reshape(rows.shape)
+
+
+def chain_stats_xla(rows, cols, a, b, *, interpret=None, shape=None,
+                    alpha=None, **_opts):
+    """Per-row softmax statistics of the scaled edge scores, each ``(m+1,)``
+    — the XLA sibling of the Pallas stats pass; the sharded nnz-split
+    backend merges these across shards before the weighted SpMM."""
+    m = int(shape[0])
+    r = rows.reshape(-1)
+    valid = r < m
+    e = _sddmm_flat(r, cols.reshape(-1), a, b, valid)
+    al = 1.0 if alpha is None else float(alpha)
+    return _softmax_stats(al * e, r, valid, m)
+
+
+def chain_xla(rows, cols, a, b, x, *, interpret=None, shape=None,
+              transform: str = "identity", alpha=None, stats=None, **_opts):
+    """Unfused SDDMM → transform → SpMM reference: materializes the edge
+    stream in the graph (the 2×nnz×dtype HBM round trip the fused Pallas
+    kernel deletes) and feeds it to ``spmm_nb_pr``.  ``stats`` substitutes
+    externally combined softmax statistics (the sharded cross-shard merge)."""
+    m = int(shape[0])
+    r = rows.reshape(-1)
+    valid = r < m
+    e = _sddmm_flat(r, cols.reshape(-1), a, b, valid)
+    w = chain_weights(e, r, valid, m, transform, alpha, stats=stats)
+    bal = BalancedCOO(rows, cols, w.reshape(rows.shape), tuple(shape))
+    return spmm_nb_pr(bal, x)
+
+
+# ---------------------------------------------------------------------------
 # registry: these four ARE the reference ("xla") backend
 # ---------------------------------------------------------------------------
 
@@ -217,6 +316,10 @@ registry.register("rs_sr", "xla", "ell", _xla(spmm_rs_sr))
 registry.register("rs_pr", "xla", "ell", _xla(spmm_rs_pr))
 registry.register("nb_sr", "xla", "balanced", _xla_nb(spmm_nb_sr))
 registry.register("nb_pr", "xla", "balanced", _xla_nb(spmm_nb_pr))
+# the GNN pair takes raw pattern arrays, not substrates — only the
+# execute_sddmm/execute_chain front doors call these
+registry.register("sddmm", "xla", "balanced", sddmm_xla)
+registry.register("chain", "xla", "balanced", chain_xla)
 
 
 # ---------------------------------------------------------------------------

@@ -169,6 +169,100 @@ def _exec_bsr_bwd(static, res, g):
 _exec_bsr.defvjp(_exec_bsr_fwd, _exec_bsr_bwd)
 
 
+# ---------------------------------------------------------------------------
+# the GNN pair: SDDMM and the SDDMM→transform→SpMM chain
+# ---------------------------------------------------------------------------
+#
+# Both take *global* pattern arrays (row ids in [0, m), any sentinel >= m for
+# padding) and the raw dense operands — no substrate, because the pattern IS
+# the plan's pattern and the values are computed, not stored.  The forward is
+# whatever physical kernel the registry resolved (fused Pallas, unfused XLA,
+# the shard_map wrapper — the custom VJP wraps the *whole* sharded call, so
+# cross-shard softmax stats never need a per-shard backward).  The backward
+# is the analytic dual pair: dW is itself an SDDMM of (G, X), and dA is an
+# SpMM with dE as the value stream — computed in flat XLA math so one
+# backward serves every backend and layout.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_sddmm(static, rows, cols, a, b):
+    bound_fn, shape = static
+    return bound_fn(rows, cols, a, b)
+
+
+def _exec_sddmm_fwd(static, rows, cols, a, b):
+    return _exec_sddmm(static, rows, cols, a, b), (rows, cols, a, b)
+
+
+def _exec_sddmm_bwd(static, res, g):
+    _, (m, k) = static
+    rows, cols, a, b = res
+    r, c = rows.reshape(-1), cols.reshape(-1)
+    valid = r < m
+    gf = jnp.where(valid, g.reshape(-1).astype(jnp.float32), 0.0)
+    rr = jnp.where(valid, r, m)
+    ag = jnp.take(a.astype(jnp.float32), jnp.where(valid, r, 0), axis=0)
+    bg = jnp.take(b.astype(jnp.float32), c, axis=0)
+    da = jax.ops.segment_sum(gf[:, None] * bg, rr, num_segments=m + 1)[:m]
+    db = jax.ops.segment_sum(gf[:, None] * ag, c, num_segments=k)
+    return (_float0(rows), _float0(cols),
+            da.astype(a.dtype), db.astype(b.dtype))
+
+
+_exec_sddmm.defvjp(_exec_sddmm_fwd, _exec_sddmm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_chain(static, rows, cols, a, b, x):
+    bound_fn = static[0]
+    return bound_fn(rows, cols, a, b, x)
+
+
+def _exec_chain_fwd(static, rows, cols, a, b, x):
+    return _exec_chain(static, rows, cols, a, b, x), (rows, cols, a, b, x)
+
+
+def _exec_chain_bwd(static, res, g):
+    """Recompute-and-differentiate: edge scores are *nowhere* in HBM (that is
+    the point of the fused forward), so the backward recomputes E and W with
+    flat segment ops, then applies the transform's jacobian — for softmax,
+    dE = α·W∘(dW − rowsum(W∘dW))."""
+    from .spmm import _sddmm_flat, _softmax_stats, chain_weights
+    _, (m, k), transform, alpha = static
+    rows, cols, a, b, x = res
+    r, c = rows.reshape(-1), cols.reshape(-1)
+    valid = r < m
+    rr = jnp.where(valid, r, m)
+    al = 1.0 if alpha is None else float(alpha)
+    e = _sddmm_flat(r, c, a, b, valid)
+    w = chain_weights(e, r, valid, m, transform, alpha)
+    g2, _ = _as_2d(g)
+    x2, _ = _as_2d(x)
+    gr = jnp.take(g2.astype(jnp.float32), jnp.where(valid, r, 0), axis=0)
+    gr = jnp.where(valid[:, None], gr, 0.0)
+    xc = jnp.take(x2.astype(jnp.float32), c, axis=0)
+    dw = jnp.sum(gr * xc, axis=-1)                       # SDDMM of (G, X)
+    if transform == "identity":
+        de = dw
+    elif transform == "scale":
+        de = al * dw
+    else:                                                # masked softmax
+        s = jax.ops.segment_sum(w * dw, rr, num_segments=m + 1)
+        de = al * w * (dw - jnp.take(s, rr))
+    de = jnp.where(valid, de, 0.0)
+    ag = jnp.take(a.astype(jnp.float32), jnp.where(valid, r, 0), axis=0)
+    bg = jnp.take(b.astype(jnp.float32), c, axis=0)
+    da = jax.ops.segment_sum(de[:, None] * bg, rr, num_segments=m + 1)[:m]
+    db = jax.ops.segment_sum(de[:, None] * ag, c, num_segments=k)
+    dx = jax.ops.segment_sum(w[:, None] * gr, c, num_segments=k)
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    return (_float0(rows), _float0(cols), da.astype(a.dtype),
+            db.astype(b.dtype), dx)
+
+
+_exec_chain.defvjp(_exec_chain_fwd, _exec_chain_bwd)
+
+
 def _stream_to_balanced(stream: jax.Array, bal: BalancedCOO) -> jax.Array:
     """Pad the CSR-ordered nonzero stream to the tile grid (row-major order is
     preserved by construction, so this is a pure pad+reshape)."""

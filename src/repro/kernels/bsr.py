@@ -156,5 +156,5 @@ def _bsr_entry(bsr: BSR, x, *, interpret: bool | None = None,
                     blockell=(blocks, bcols_flat, wb))
 
 
-for _logical in registry.LOGICAL_KERNELS:
+for _logical in registry.MATMUL_KERNELS:
     registry.register(_logical, "bsr", "bsr", _bsr_entry, prep=_prep_bell)

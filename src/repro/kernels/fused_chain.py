@@ -1,0 +1,351 @@
+"""Fused SDDMM→SpMM chain — graph-attention message passing on one schedule.
+
+GNN training needs the SpMM's dual: SDDMM, sampling ``A @ B^T`` at the
+pattern's nonzeros (edge scores from endpoint features).  Attention-style
+message passing then transforms the scores per row (masked softmax) and
+immediately feeds them back into an SpMM over the *same* pattern.  Run as two
+kernels, the edge-score stream makes an HBM round trip: ``nnz`` f32 written by
+the SDDMM, ``nnz`` read back by the SpMM — pure traffic, no flops
+(``kernels/tune.modeled_traffic_chain`` charges exactly this).
+
+The fused kernel eliminates it.  The observation making fusion natural here is
+that the SDDMM's *output* pattern is the SpMM's *input* pattern, so one
+``plan_visits`` schedule (kernels/vsr.py) drives both: each visit gathers the
+endpoint feature rows, computes its tile's scores on the spot, applies the
+transform, and accumulates ``w * X[cols]`` into the revisited ``(wb, tile_n)``
+output block — scores live only in VMEM registers.  The trade is FusedMM's:
+scores are recomputed once per column block (``nb`` times), swapping ``2*nnz``
+value bytes of HBM for gather/dot recompute out of feature rows that are in
+VMEM anyway.
+
+Masked softmax needs row totals before any weight can be formed, so it runs
+two passes over the same schedule (same shape as the PR 4 spill-fused
+accumulation): pass 1 folds each visit's per-row ``(max, sum-of-exp)`` into
+``(mb, wb)`` stat blocks with the online-softmax update, pass 2 reads the
+finished stats alongside each visit.  Stats are ``2 * m`` floats of traffic —
+independent of nnz — vs. the ``2 * nnz`` the unfused pair moves.  Empty rows
+keep ``(SOFTMAX_NEG, 0)`` and produce all-zero weights; the ``-1e30`` sentinel
+(never ``-inf``) keeps ``exp`` finite everywhere it is *selected* from.
+
+The sharded nnz-split backend reuses pass 1 per shard and merges stats with
+``pmax`` / rescaled ``psum`` before pass 2 (core/shard.py), which is why
+``chain_stats_pallas`` is exposed separately from ``chain_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import registry
+from repro.core.formats import BalancedCOO
+from repro.core.selector import TileGeometry
+from repro.core.spmm import SOFTMAX_EPS, SOFTMAX_NEG
+
+from .vsr import _pad_n, _prep_windows, plan_visits
+
+#: per-row transforms the chain supports between its SDDMM and SpMM halves
+CHAIN_TRANSFORMS: tuple[str, ...] = ("identity", "scale", "softmax")
+
+
+def _pad_2d(a: jax.Array, row_mult: int = 8, col_mult: int = 128) -> jax.Array:
+    """Pad a feature matrix to sublane/lane multiples.  Row padding is inert
+    (gather indices stay below the true row count) and zero column padding
+    adds nothing to the score dot products."""
+    r, c = a.shape
+    rp = -(-r // row_mult) * row_mult
+    cp = -(-c // col_mult) * col_mult
+    if rp != r or cp != c:
+        a = jnp.pad(a, ((0, rp - r), (0, cp - c)))
+    return a
+
+
+def _tile_scores(rows, cols, a_ref, b_ref, m):
+    """In-kernel SDDMM for one nnz-tile: gather both endpoint feature rows
+    (the VDL idiom — one gather per side covers the whole feature dim) and
+    dot them.  Returns masked f32 scores and the validity mask."""
+    mask = rows < m
+    ag = jnp.take(a_ref[...], jnp.where(mask, rows, 0), axis=0)
+    bg = jnp.take(b_ref[...], cols, axis=0)
+    e = jnp.sum(ag.astype(jnp.float32) * bg.astype(jnp.float32), axis=-1)
+    return jnp.where(mask, e, 0.0), mask
+
+
+# ---------------------------------------------------------------------------
+# standalone SDDMM: one grid step per nnz-tile, scores written tile-in-place
+# ---------------------------------------------------------------------------
+
+def _sddmm_kernel(rows_ref, cols_ref, a_ref, b_ref, o_ref, *, m):
+    e, _ = _tile_scores(rows_ref[0, :], cols_ref[0, :], a_ref, b_ref, m)
+    o_ref[0, :] = e
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def _sddmm_call(rows, cols, a, b, *, m, interpret):
+    n_tiles, t = rows.shape
+    ma, d = a.shape
+    kb, _ = b.shape
+    return pl.pallas_call(
+        functools.partial(_sddmm_kernel, m=m),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((ma, d), lambda i: (0, 0)),
+            pl.BlockSpec((kb, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, a, b)
+
+
+def sddmm_pallas(rows, cols, a, b, *, interpret: bool | None = None,
+                 shape=None, **_opts):
+    """Pallas SDDMM over a balanced slab: f32 edge scores shaped like
+    ``rows`` (sentinel entries score 0).  Needs no visit schedule — scores
+    are tile-local — so it works on traced patterns with no prep hook."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = int(shape[0])
+    ap = _pad_2d(jnp.asarray(a))
+    bp = _pad_2d(jnp.asarray(b))
+    return _sddmm_call(rows, cols, ap, bp, m=m, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused chain pass 1 (softmax only): online row (max, sum-of-exp) over visits
+# ---------------------------------------------------------------------------
+
+def _chain_stats_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, a_ref,
+                        b_ref, rm_ref, rs_ref, *, m, wb, alpha):
+    v = pl.program_id(0)
+    rows = rows_ref[0, :]
+    e, mask0 = _tile_scores(rows, cols_ref[0, :], a_ref, b_ref, m)
+    z = alpha * e
+    base = vb_ref[v] * wb
+    local = rows - base
+    mask = mask0 & (local >= 0) & (local < wb)
+    local = jnp.clip(local, 0, wb - 1)
+    t = rows.shape[0]
+
+    # per-visit row stats: scatter the tile's scores onto the block's rows
+    # (same one-hot select as the SpMM reduction) and reduce along the tile
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (wb, t), 0)
+    sel = (local[None, :] == row_iota) & mask[None, :]
+    zt = jnp.where(sel, z[None, :], SOFTMAX_NEG)
+    m_tile = jnp.max(zt, axis=1)                              # (wb,)
+    p_tile = jnp.where(sel, jnp.exp(zt - m_tile[:, None]), 0.0)
+    s_tile = jnp.sum(p_tile, axis=1)
+
+    # online-softmax fold across a block's consecutive visits; rows the visit
+    # does not touch combine as the identity (NEG, 0).  Padding visits
+    # (vs == 2, stacked sharded schedules) take neither branch.
+    @pl.when(vs_ref[v] == 1)
+    def _():
+        rm_ref[0, :] = m_tile
+        rs_ref[0, :] = s_tile
+
+    @pl.when(vs_ref[v] == 0)
+    def _():
+        m_old = rm_ref[0, :]
+        m_new = jnp.maximum(m_old, m_tile)
+        rm_ref[0, :] = m_new
+        rs_ref[0, :] = (rs_ref[0, :] * jnp.exp(m_old - m_new)
+                        + s_tile * jnp.exp(m_tile - m_new))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "wb", "alpha", "interpret"))
+def _chain_stats_call(vt, vb, vs, rows, cols, a, b, *, m, wb, alpha,
+                      interpret):
+    n_tiles, t = rows.shape
+    ma, d = a.shape
+    kb, _ = b.shape
+    mb = -(-m // wb)
+    n_visits = vt.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_visits,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((ma, d), lambda v, *pf: (0, 0)),
+            pl.BlockSpec((kb, d), lambda v, *pf: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, wb), lambda v, vt, vb, *pf: (vb[v], 0)),
+            pl.BlockSpec((1, wb), lambda v, vt, vb, *pf: (vb[v], 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_chain_stats_kernel, m=m, wb=wb, alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((mb, wb), jnp.float32),
+                   jax.ShapeDtypeStruct((mb, wb), jnp.float32)],
+        interpret=interpret,
+    )(vt, vb, vs, rows, cols, a, b)
+
+
+# ---------------------------------------------------------------------------
+# fused chain pass 2: recompute scores, transform, accumulate w * X[cols]
+# ---------------------------------------------------------------------------
+
+def _chain_kernel(vt_ref, vb_ref, vs_ref, *refs, m, wb, transform, alpha):
+    if transform == "softmax":
+        rows_ref, cols_ref, a_ref, b_ref, rm_ref, rs_ref, x_ref, o_ref = refs
+    else:
+        rows_ref, cols_ref, a_ref, b_ref, x_ref, o_ref = refs
+    v = pl.program_id(1)
+    rows = rows_ref[0, :]
+    cols = cols_ref[0, :]
+    e, mask0 = _tile_scores(rows, cols, a_ref, b_ref, m)
+    base = vb_ref[v] * wb
+    local = rows - base
+    mask = mask0 & (local >= 0) & (local < wb)
+    local = jnp.clip(local, 0, wb - 1)
+
+    # per-row transform, in register — the edge weight never leaves VMEM
+    if transform == "identity":
+        w = e
+    elif transform == "scale":
+        w = alpha * e
+    else:
+        z = alpha * e
+        zc = jnp.where(mask, z - jnp.take(rm_ref[0, :], local), SOFTMAX_NEG)
+        w = jnp.exp(zc) / jnp.maximum(jnp.take(rs_ref[0, :], local),
+                                      SOFTMAX_EPS)
+    w = jnp.where(mask, w, 0.0)
+
+    # SpMM half: VDL gather of X rows, one-hot segment matmul on the MXU
+    xg = jnp.take(x_ref[...], cols, axis=0)
+    p = w[:, None] * xg.astype(jnp.float32)
+    t = rows.shape[0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (wb, t), 0)
+    onehot = jnp.where((local[None, :] == row_iota) & mask[None, :], 1.0, 0.0)
+    contrib = jnp.dot(onehot, p, preferred_element_type=jnp.float32)
+
+    @pl.when(vs_ref[v] == 1)
+    def _():
+        o_ref[...] = contrib
+
+    @pl.when(vs_ref[v] == 0)
+    def _():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("m", "wb", "tile_n", "transform",
+                                             "alpha", "interpret"))
+def _chain_apply_call(vt, vb, vs, rows, cols, a, b, x, rm, rs, *, m, wb,
+                      tile_n, transform, alpha, interpret):
+    n_tiles, t = rows.shape
+    ma, d = a.shape
+    kb, _ = b.shape
+    k, n_pad = x.shape
+    nb = n_pad // tile_n
+    mb = -(-m // wb)
+    n_visits = vt.shape[0]
+    in_specs = [
+        pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+        pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+        pl.BlockSpec((ma, d), lambda j, v, *pf: (0, 0)),
+        pl.BlockSpec((kb, d), lambda j, v, *pf: (0, 0)),
+    ]
+    ops = [rows, cols, a, b]
+    if transform == "softmax":
+        in_specs += [
+            pl.BlockSpec((1, wb), lambda j, v, vt, vb, *pf: (vb[v], 0)),
+            pl.BlockSpec((1, wb), lambda j, v, vt, vb, *pf: (vb[v], 0)),
+        ]
+        ops += [rm, rs]
+    in_specs.append(pl.BlockSpec((k, tile_n), lambda j, v, *pf: (0, j)))
+    ops.append(x)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        # visits iterate innermost so each output block's visits stay
+        # consecutive grid steps — the revisited-block accumulation contract
+        grid=(nb, n_visits),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((wb, tile_n),
+                               lambda j, v, vt, vb, *pf: (vb[v], j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_chain_kernel, m=m, wb=wb, transform=transform,
+                          alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * wb, n_pad), jnp.float32),
+        interpret=interpret,
+    )(vt, vb, vs, *ops)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def chain_stats_pallas(rows, cols, a, b, *, interpret: bool | None = None,
+                       shape=None, alpha=None, wb: int | None = None,
+                       visit_tile=None, visit_block=None, visit_start=None,
+                       **_opts):
+    """Pass 1 alone: ``(mb, wb)`` row (max, sum-of-exp) blocks.  The sharded
+    nnz-split backend calls this per shard and merges before pass 2."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = int(shape[0])
+    wb = TileGeometry().wb if wb is None else wb
+    al = 1.0 if alpha is None else float(alpha)
+    ap = _pad_2d(jnp.asarray(a))
+    bp = _pad_2d(jnp.asarray(b))
+    return _chain_stats_call(visit_tile, visit_block, visit_start, rows, cols,
+                             ap, bp, m=m, wb=wb, alpha=al, interpret=interpret)
+
+
+def chain_pallas(rows, cols, a, b, x, *, interpret: bool | None = None,
+                 shape=None, transform: str = "identity", alpha=None,
+                 visit_tile=None, visit_block=None, visit_start=None,
+                 wb: int | None = None, tile_n: int | None = None,
+                 stats=None, row_base=None, win=None, **_opts):
+    """Fused SDDMM→``transform``→SpMM over one visit schedule: edge scores
+    never touch HBM.  The schedule may be precomputed (``_prep_windows`` at
+    plan time) so the call stays traceable; ``stats`` substitutes externally
+    combined softmax statistics (the sharded backend's cross-shard merge)."""
+    if transform not in CHAIN_TRANSFORMS:
+        raise ValueError(f"unknown chain transform {transform!r}; "
+                         f"expected one of {CHAIN_TRANSFORMS}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    geom = TileGeometry()
+    wb = geom.wb if wb is None else wb
+    tile_n = geom.tile_n if tile_n is None else tile_n
+    m = int(shape[0])
+    al = 1.0 if alpha is None else float(alpha)
+    if visit_tile is None or visit_block is None or visit_start is None:
+        bal = BalancedCOO(rows, cols, jnp.zeros(rows.shape, jnp.float32),
+                          (m, int(shape[1])))
+        visit_tile, visit_block, visit_start = map(
+            jnp.asarray, plan_visits(bal, wb))
+    x2 = x[:, None] if x.ndim == 1 else x
+    n = x2.shape[1]
+    xp = _pad_n(x2, tile_n)
+    ap = _pad_2d(jnp.asarray(a))
+    bp = _pad_2d(jnp.asarray(b))
+    rm = rs = None
+    if transform == "softmax":
+        if stats is None:
+            rm, rs = _chain_stats_call(visit_tile, visit_block, visit_start,
+                                       rows, cols, ap, bp, m=m, wb=wb,
+                                       alpha=al, interpret=interpret)
+        else:
+            rm, rs = stats
+    y = _chain_apply_call(visit_tile, visit_block, visit_start, rows, cols,
+                          ap, bp, xp, rm, rs, m=m, wb=wb, tile_n=tile_n,
+                          transform=transform, alpha=al, interpret=interpret)
+    y = y[:, :n].astype(x2.dtype)
+    return y[:, 0] if x.ndim == 1 else y
+
+
+registry.register("sddmm", "pallas", "balanced", sddmm_pallas)
+registry.register("chain", "pallas", "balanced", chain_pallas,
+                  prep=_prep_windows)

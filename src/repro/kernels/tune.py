@@ -343,6 +343,142 @@ def autotune_overlap(csr: CSR, mesh, *, ns: tuple = (256, 512, 1024),
 
 
 # ---------------------------------------------------------------------------
+# chain traffic + fuse crossover: SDDMM->SpMM with edge scores kept in VMEM
+# ---------------------------------------------------------------------------
+
+#: ``chain_fuse_min_n`` sentinel for "the fused chain never wins"
+CHAIN_NEVER = 1 << 30
+
+
+def modeled_traffic_chain(csr: CSR, n: int, d: int, *,
+                          transform: str = "softmax",
+                          geometry: TileGeometry | None = None,
+                          dtype_bytes: int = 4,
+                          index_bytes: int = 4) -> dict:
+    """Per-call modeled HBM bytes of the SDDMM→(transform)→SpMM chain under
+    both executions (DESIGN.md §9).
+
+    * **unfused** (two kernels): the SDDMM writes every edge score to HBM
+      (``nnz·dtype``), the transform reads and rewrites the stream
+      (softmax: 2·nnz·dtype more), and the SpMM's value stream reads it back
+      — the irreducible **edge-value round-trip is 2·nnz·dtype** (one write
+      + one read) even before per-visit stream re-loads.
+    * **fused** (one kernel): edge scores are recomputed per column block
+      and consumed in-register — **0 edge-value HBM bytes**.  The price is
+      the FusedMM trade: the ``A``/``B`` feature gathers are re-charged per
+      column-block pass (``nb``×) plus once more for the softmax stats pass,
+      and softmax row stats round-trip as two ``(m,)`` f32 vectors.
+
+    ``d`` is the feature width of ``A (m,d)`` / ``B (k,d)``; ``n`` the dense
+    width of ``X (k,n)``.  Flops count both kernels: ``2·nnz·(d+n)``.
+    """
+    geom = (geometry or TileGeometry()).validate()
+    bal = csr_to_balanced(csr, tile=geom.tile)
+    m, k = csr.shape
+    nnz = int(csr.nnz)
+    vt, _, _ = plan_visits(bal, geom.wb)
+    n_tiles, t = bal.rows.shape
+    n_visits = int(len(vt))
+    stream_runs = int(1 + np.count_nonzero(vt[1:] != vt[:-1])) if n_visits else 0
+    nb = max(1, -(-n // geom.tile_n))
+    n_pad = nb * geom.tile_n
+    mb = max(1, -(-m // geom.wb))
+    softmax = transform == "softmax"
+
+    idx_load = t * 2 * index_bytes                    # rows+cols, per tile load
+    ab_pass = (m + k) * d * dtype_bytes               # A and B resident once
+    xblock = k * geom.tile_n * dtype_bytes            # one (K, tile_n) block
+    out = mb * geom.wb * n_pad * dtype_bytes          # blocks flushed once
+    stats_vec = 2 * mb * geom.wb * 4                  # rm + rs, f32
+
+    # -- unfused: SDDMM pass + transform round-trip + fused-NB SpMM pass
+    edge_rt = 2 * nnz * dtype_bytes                   # SDDMM write + SpMM read
+    transform_rt = 2 * nnz * dtype_bytes if softmax else 0
+    unfused = (n_tiles * idx_load + ab_pass           # SDDMM: stream + A,B
+               + stream_runs * nb * idx_load          # SpMM stream re-loads
+               + nb * xblock + out                    # one pass over X, flush
+               + edge_rt + transform_rt)
+
+    # -- fused: (stats pass when softmax) + apply pass; edge values stay VMEM
+    stats_pass = (stream_runs * idx_load + ab_pass + stats_vec) if softmax else 0
+    stats_reload = n_visits * nb * 2 * geom.wb * 4 if softmax else 0
+    fused = (stats_pass
+             + stream_runs * nb * idx_load            # pattern re-read per pass
+             + ab_pass                                # A,B resident once
+             + nb * xblock + out + stats_reload)
+
+    flops = 2 * nnz * (d + n)
+    return {
+        "fused_bytes": int(fused),
+        "unfused_bytes": int(unfused),
+        "fused_edge_value_bytes": 0,
+        "unfused_edge_value_bytes": int(edge_rt),
+        "unfused_transform_bytes": int(transform_rt),
+        "transform": transform,
+        "n_tiles": int(n_tiles),
+        "n_visits": n_visits,
+        "stream_runs": stream_runs,
+        "flops": int(flops),
+        "fused_ai": flops / max(fused, 1),
+        "unfused_ai": flops / max(unfused, 1),
+        "bytes_reduction": unfused / max(fused, 1),
+    }
+
+
+def measure_chain(csr: CSR, n: int, d: int, *, fused: bool,
+                  transform: str = "softmax",
+                  backend: str = "pallas",
+                  thresholds: SelectorThresholds | None = None,
+                  interpret: bool | None = None,
+                  repeats: int = 2) -> float:
+    """Seconds per chain call with the fuse gate forced open
+    (``fused=True`` → the one-kernel Pallas chain) or shut (``fused=False``
+    → the gate falls back to the unfused XLA pair)."""
+    import dataclasses
+    from repro.core.plan import execute_chain
+    th = thresholds if thresholds is not None else default_thresholds()
+    th = dataclasses.replace(th, chain_fuse_min_n=1 if fused else CHAIN_NEVER)
+    p = plan(csr, backend=backend, thresholds=th, n_hint=n,
+             chain_op=transform)
+    m, k = csr.shape
+    a = jnp.ones((m, d), jnp.float32) * 0.01
+    b = jnp.ones((k, d), jnp.float32) * 0.01
+    x = jnp.ones((k, n), jnp.float32)
+    f = jax.jit(lambda aa, bb, xx: execute_chain(
+        p, aa, bb, xx, transform=transform, interpret=interpret))
+    jax.block_until_ready(f(a, b, x))     # compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(max(1, repeats)):
+        jax.block_until_ready(f(a, b, x))
+    return (time.perf_counter() - t0) / max(1, repeats)
+
+
+def autotune_chain(csr: CSR, *, ns: tuple = (8, 32, 128), d: int = 32,
+                   transform: str = "softmax",
+                   backend: str = "pallas",
+                   thresholds: SelectorThresholds | None = None,
+                   interpret: bool | None = None,
+                   repeats: int = 2) -> SelectorThresholds:
+    """Measure the chain-fusion crossover: the smallest dense width at which
+    the one-kernel fused chain beats the unfused SDDMM+SpMM pair becomes
+    ``chain_fuse_min_n`` (``CHAIN_NEVER`` when fusion never wins).  At tiny N
+    the fused kernel's per-column-block score recompute (the FusedMM trade)
+    can cost more than the edge-value round-trip it avoids; as N grows the
+    recompute amortizes while the unfused round-trip stays ``2·nnz·dtype``.
+    Timing off-TPU is correctness-grade; run on real hardware before
+    persisting fleet-wide."""
+    import dataclasses
+    th = thresholds if thresholds is not None else default_thresholds()
+    for n in sorted(ns):
+        kw = dict(transform=transform, backend=backend, thresholds=th,
+                  interpret=interpret, repeats=repeats)
+        if (measure_chain(csr, n, d, fused=True, **kw)
+                < measure_chain(csr, n, d, fused=False, **kw)):
+            return dataclasses.replace(th, chain_fuse_min_n=int(n))
+    return dataclasses.replace(th, chain_fuse_min_n=CHAIN_NEVER)
+
+
+# ---------------------------------------------------------------------------
 # quant crossover: when does the narrowed value stream pay for its dequant?
 # ---------------------------------------------------------------------------
 

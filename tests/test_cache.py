@@ -110,6 +110,70 @@ def test_facade_hit_is_value_correct(rng):
                                atol=1e-3)
 
 
+def test_key_product_geometry_quant_mesh_chain_op(rng):
+    """Key segmentation across the full (geometry x quant x mesh x chain-op)
+    product: every combination builds its own plan, every repeat is a pure
+    hit — no dimension aliases another."""
+    from jax.sharding import Mesh
+    from repro.core import TileGeometry
+    csr, _ = random_csr(rng, 24, 24, 0.3)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("shard",))
+    geoms = (None, TileGeometry(tile=256, wb=32, tile_n=128))
+    quants = (None, "int8")
+    meshes = (None, mesh)
+    chain_ops = (None, "softmax")
+    cache = PlanCache(capacity=64)
+    plans = {}
+    for g in geoms:
+        for q in quants:
+            for mm in meshes:
+                for c in chain_ops:
+                    plans[(g, q, mm is not None, c)] = cached_plan(
+                        csr, cache=cache,
+                        backend="sharded" if mm is not None else "xla",
+                        mesh=mm, geometry=g, quant=q, chain_op=c)
+    n_combos = len(geoms) * len(quants) * len(meshes) * len(chain_ops)
+    assert len({id(p) for p in plans.values()}) == n_combos
+    s = cache.stats()
+    assert s["builds"] == n_combos and s["misses"] == n_combos
+    assert s["hits"] == 0 and s["evictions"] == 0
+    # the full product again: pure hits, same objects
+    for (g, q, has_mesh, c), built in plans.items():
+        p = cached_plan(csr, cache=cache,
+                        backend="sharded" if has_mesh else "xla",
+                        mesh=mesh if has_mesh else None,
+                        geometry=g, quant=q, chain_op=c)
+        assert p is built
+    s = cache.stats()
+    assert s["builds"] == n_combos and s["hits"] == n_combos
+
+
+def test_mixed_workload_counters_and_eviction(rng):
+    """Counters under a mixed chain/quant/geometry workload with a tight
+    LRU bound: evictions hit the least-recently-used segment, and a
+    re-request of an evicted segment rebuilds instead of aliasing."""
+    from repro.core import TileGeometry
+    csr, _ = random_csr(rng, 16, 16, 0.4)
+    cache = PlanCache(capacity=3)
+
+    def mk(**kw):
+        return cached_plan(csr, cache=cache, backend="xla", **kw)
+
+    p_plain = mk()
+    p_chain = mk(chain_op="softmax")
+    p_quant = mk(quant="int8")
+    assert p_plain is not p_chain and p_chain is not p_quant
+    assert cache.stats()["builds"] == 3
+    assert mk(chain_op="softmax") is p_chain      # hit, promotes chain
+    assert mk() is p_plain                        # hit, promotes plain
+    mk(geometry=TileGeometry(tile=256, wb=32, tile_n=128))  # evicts quant
+    s = cache.stats()
+    assert s["evictions"] == 1 and s["size"] == 3 and s["hits"] == 2
+    assert mk(chain_op="softmax") is p_chain      # survived the eviction
+    assert mk(quant="int8") is not p_quant        # evicted: fresh build
+    assert cache.stats()["builds"] == 5
+
+
 # ---------------------------------------------------------------------------
 # serve-engine regression: repeated expert topology ⇒ zero new plans per tick
 # ---------------------------------------------------------------------------

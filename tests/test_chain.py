@@ -1,0 +1,318 @@
+"""SDDMM + fused SDDMM→SpMM chains (DESIGN.md §9).
+
+The fifth logical kernel and its fusion: ``sddmm`` samples ``A @ B^T`` at
+the pattern's nonzeros; ``chain`` transforms the scores per row (identity /
+scale / masked softmax) and immediately aggregates ``X`` — on the Pallas
+backend in one kernel, edge scores never touching HBM.  Everything here is
+checked against a dense masked reference, for outputs AND grads, including
+the softmax edge cases (empty rows, rows spanning output-block boundaries).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SelectorThresholds, csr_from_dense
+from repro.core.plan import execute, execute_chain, execute_sddmm, plan
+
+from conftest import random_csr
+
+BACKENDS = ("xla", "pallas")
+TRANSFORMS = (("identity", None), ("scale", 0.5),
+              ("softmax", None), ("softmax", 0.7))
+
+
+def _problem(rng, m=37, k=29, d=16, n=24, density=0.15, empty_rows=(5, 30)):
+    """A pattern with guaranteed-empty rows (softmax edge case) plus dense
+    operands; returns (csr, mask, A, B, X)."""
+    dense = ((rng.random((m, k)) < density)
+             * rng.standard_normal((m, k))).astype(np.float32)
+    for r in empty_rows:
+        dense[r, :] = 0.0
+    csr = csr_from_dense(dense)
+    mask = dense != 0
+    a = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32) * 0.3)
+    x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    return csr, mask, a, b, x
+
+
+def _dense_chain(mask, a, b, x, transform, alpha):
+    """The dense masked reference for every transform."""
+    z = np.asarray(a) @ np.asarray(b).T
+    al = 1.0 if alpha is None else alpha
+    if transform == "identity":
+        w = np.where(mask, z, 0.0)
+    elif transform == "scale":
+        w = np.where(mask, al * z, 0.0)
+    else:
+        zm = np.where(mask, al * z, -np.inf)
+        rmax = np.max(zm, axis=1, keepdims=True)
+        rmax = np.where(np.isfinite(rmax), rmax, 0.0)   # empty rows
+        e = np.where(mask, np.exp(zm - rmax), 0.0)
+        w = e / np.maximum(e.sum(axis=1, keepdims=True), 1e-30)
+    return w @ np.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# SDDMM: the sampled dense-dense matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sddmm_matches_dense(rng, backend):
+    csr, mask, a, b, _ = _problem(rng)
+    p = plan(csr, backend=backend)
+    e = execute_sddmm(p, a, b)
+    ref = (np.asarray(a) @ np.asarray(b).T)[mask.nonzero()]
+    assert e.shape == (csr.nnz,)          # CSR-ordered flat stream
+    np.testing.assert_allclose(np.asarray(e), ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sddmm_grads_match_dense(rng, backend):
+    csr, mask, a, b, _ = _problem(rng)
+    p = plan(csr, backend=backend)
+    mj = jnp.asarray(mask)
+
+    def f(aa, bb):
+        return jnp.sum(jnp.cos(execute_sddmm(p, aa, bb)))
+
+    def f_dense(aa, bb):
+        return jnp.sum(jnp.where(mj, jnp.cos(aa @ bb.T), 0.0))
+
+    ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(f_dense, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# the chain: outputs against the dense masked reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("transform,alpha", TRANSFORMS)
+def test_chain_matches_dense(rng, backend, transform, alpha):
+    csr, mask, a, b, x = _problem(rng)
+    p = plan(csr, backend=backend)
+    y = execute_chain(p, a, b, x, transform=transform, alpha=alpha)
+    ref = _dense_chain(mask, a, b, x, transform, alpha)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=5e-5)
+
+
+def test_chain_fused_matches_unfused(rng):
+    """The acceptance bar: the one-kernel Pallas chain is bit-for-tolerance
+    equal to the unfused XLA SDDMM+SpMM pair — fusion is a traffic change,
+    not a numerics change."""
+    csr, mask, a, b, x = _problem(rng, m=61, k=43, d=8, n=16)
+    pf = plan(csr, backend="pallas")
+    pu = plan(csr, backend="xla")
+    for transform, alpha in TRANSFORMS:
+        yf = execute_chain(pf, a, b, x, transform=transform, alpha=alpha)
+        yu = execute_chain(pu, a, b, x, transform=transform, alpha=alpha)
+        np.testing.assert_allclose(np.asarray(yf), np.asarray(yu), atol=2e-5)
+
+
+def test_chain_matvec_and_row_spanning_blocks(rng):
+    """1-D x (matvec form) and a row whose nonzeros span several balanced
+    tiles / output blocks — the multi-visit online-softmax path."""
+    m, k = 40, 600
+    dense = np.zeros((m, k), np.float32)
+    dense[3, :] = rng.standard_normal(k).astype(np.float32)  # spans tiles
+    dense[7, ::5] = 1.0
+    csr = csr_from_dense(dense)
+    mask = dense != 0
+    a = jnp.asarray(rng.standard_normal((m, 8)).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.standard_normal((k, 8)).astype(np.float32) * 0.3)
+    x1 = jnp.asarray(rng.standard_normal((k,)).astype(np.float32))
+    for backend in BACKENDS:
+        p = plan(csr, backend=backend)
+        y = execute_chain(p, a, b, x1, transform="softmax")
+        ref = _dense_chain(mask, a, b, np.asarray(x1)[:, None],
+                           "softmax", None)[:, 0]
+        assert y.shape == (m,)
+        np.testing.assert_allclose(np.asarray(y), ref, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# grads: the backward pass is itself an SDDMM+SpMM pair
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_chain_grads_match_dense(rng, backend):
+    csr, mask, a, b, x = _problem(rng)
+    p = plan(csr, backend=backend)
+    mj = jnp.asarray(mask)
+
+    def f(aa, bb, xx):
+        return jnp.sum(jnp.sin(execute_chain(p, aa, bb, xx,
+                                             transform="softmax")))
+
+    def f_dense(aa, bb, xx):
+        z = jnp.where(mj, aa @ bb.T, -1e30)
+        w = jnp.where(mj, jax.nn.softmax(z, axis=1), 0.0)
+        return jnp.sum(jnp.sin(w @ xx))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(a, b, x)
+    r = jax.grad(f_dense, argnums=(0, 1, 2))(a, b, x)
+    for gi, ri in zip(g, r):
+        np.testing.assert_allclose(np.asarray(gi), np.asarray(ri), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# the fuse gate: chain_fuse_min_n decides one-kernel vs two-kernel
+# ---------------------------------------------------------------------------
+
+def test_chain_fuse_gate(rng):
+    from repro.kernels.tune import CHAIN_NEVER
+    csr, mask, a, b, x = _problem(rng)
+    ref = _dense_chain(mask, a, b, x, "softmax", None)
+
+    # gate shut: the pallas plan must fall back to the unfused XLA pair —
+    # visible in the plan's bound-kernel cache, which keys on the backend
+    # the dispatch actually resolved
+    th = dataclasses.replace(SelectorThresholds(), chain_fuse_min_n=CHAIN_NEVER)
+    p = plan(csr, backend="pallas", thresholds=th)
+    y = execute_chain(p, a, b, x, transform="softmax")
+    np.testing.assert_allclose(np.asarray(y), ref, atol=5e-5)
+    bound_backends = {k[1] for k in p._bound if k[0] == "chain"}
+    assert bound_backends == {"xla"}
+
+    # gate open (the default "always fuse"): the fused kernel runs
+    p2 = plan(csr, backend="pallas")
+    y2 = execute_chain(p2, a, b, x, transform="softmax")
+    np.testing.assert_allclose(np.asarray(y2), ref, atol=5e-5)
+    assert {k[1] for k in p2._bound if k[0] == "chain"} == {"pallas"}
+
+
+def test_thresholds_v4_roundtrip_and_validation():
+    th = dataclasses.replace(SelectorThresholds(), chain_fuse_min_n=64)
+    s = th.to_json()
+    assert json.loads(s)["version"] == 4
+    assert SelectorThresholds.from_json(s).chain_fuse_min_n == 64
+    # pre-chain files default to "always fuse"
+    th3 = dataclasses.replace(SelectorThresholds(), quant_min_n=8)
+    assert SelectorThresholds.from_json(th3.to_json()).chain_fuse_min_n == 1
+    with pytest.raises(ValueError):
+        dataclasses.replace(SelectorThresholds(),
+                            chain_fuse_min_n=0).validate()
+
+
+def test_autotune_chain_sets_threshold(rng):
+    from repro.api import autotune_chain
+    csr, _, _, _, _ = _problem(rng, m=24, k=20, d=4, n=8, empty_rows=(5,))
+    th = autotune_chain(csr, ns=(8,), d=4, repeats=1)
+    assert isinstance(th.chain_fuse_min_n, int)
+    assert th.chain_fuse_min_n >= 1
+
+
+# ---------------------------------------------------------------------------
+# traffic model: the acceptance numbers
+# ---------------------------------------------------------------------------
+
+def test_modeled_traffic_chain_edge_bytes(rng):
+    from repro.kernels.tune import modeled_traffic_chain
+    csr, _, _, _, _ = _problem(rng, m=64, k=48)
+    t = modeled_traffic_chain(csr, 128, 32)
+    assert t["fused_edge_value_bytes"] == 0
+    assert t["unfused_edge_value_bytes"] == 2 * csr.nnz * 4
+    assert t["unfused_transform_bytes"] == 2 * csr.nnz * 4   # softmax re-read
+    ti = modeled_traffic_chain(csr, 128, 32, transform="identity")
+    assert ti["unfused_transform_bytes"] == 0
+    assert t["fused_bytes"] > 0 and t["unfused_bytes"] > 0
+    assert t["flops"] == 2 * csr.nnz * (32 + 128)
+
+
+# ---------------------------------------------------------------------------
+# guards and plumbing
+# ---------------------------------------------------------------------------
+
+def test_chain_validation(rng):
+    csr, _, a, b, x = _problem(rng)
+    p = plan(csr, backend="xla")
+    with pytest.raises(ValueError):
+        execute_chain(p, a, b, x, transform="sigmoid")
+    with pytest.raises(ValueError):
+        execute_sddmm(p, a[:, :4], b)         # feature widths disagree
+    with pytest.raises(ValueError):
+        execute(p, x, impl="sddmm")           # not a matmul kernel
+    with pytest.raises(ValueError):
+        p.finalize(8, kernels=("nb_pr", "chain"))
+
+
+def test_plan_cache_segments_on_chain_op(rng):
+    from repro.core.cache import PlanCache, cached_plan
+    csr, _, _, _, _ = _problem(rng)
+    cache = PlanCache(capacity=8)
+    p1 = cached_plan(csr, cache=cache, backend="xla")
+    p2 = cached_plan(csr, cache=cache, backend="xla", chain_op="softmax")
+    p3 = cached_plan(csr, cache=cache, backend="xla", chain_op="softmax")
+    assert p1 is not p2 and p2 is p3
+    assert p2.chain_op == "softmax"
+    assert cache.stats()["builds"] == 2 and cache.stats()["hits"] == 1
+
+
+def test_api_sparse_chain_and_methods(rng):
+    from repro import api
+    csr, mask, a, b, x = _problem(rng)
+    y = api.sparse_chain(csr, a, b, x, transform="softmax", backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(y), _dense_chain(mask, a, b, x, "softmax", None), atol=5e-5)
+    e = api.sddmm(csr, a, b)
+    ref = (np.asarray(a) @ np.asarray(b).T)[mask.nonzero()]
+    np.testing.assert_allclose(np.asarray(e), ref, atol=2e-5)
+    A = api.sparse(csr, backend="pallas")
+    np.testing.assert_allclose(np.asarray(A.chain(a, b, x)), np.asarray(y),
+                               atol=2e-5)
+    # the chain scores round-trip into an attention-weighted operand
+    w = A.sddmm(a, b)
+    yw = A.with_values(w) @ x
+    ref_id = _dense_chain(mask, a, b, x, "identity", None)
+    np.testing.assert_allclose(np.asarray(yw), ref_id, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded: stacked per-shard schedules + cross-shard softmax merge
+# ---------------------------------------------------------------------------
+
+needs_devices = pytest.mark.skipif(jax.device_count() < 2,
+                                   reason="needs >= 2 devices")
+
+
+@needs_devices
+@pytest.mark.parametrize("kind", ("row", "nnz"))
+@pytest.mark.parametrize("inner", ("xla", "pallas"))
+def test_sharded_chain_parity(rng, kind, inner):
+    from jax.sharding import Mesh
+    csr, mask, a, b, x = _problem(rng, m=53, k=41, d=8, n=16)
+    mesh = Mesh(np.array(jax.devices()), ("shard",))
+    p = plan(csr, backend="sharded", mesh=mesh, shard_kind=kind,
+             inner_backend=inner)
+    y = execute_chain(p, a, b, x, transform="softmax")
+    ref = _dense_chain(mask, a, b, x, "softmax", None)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=5e-5)
+    e = execute_sddmm(p, a, b)
+    ref_e = (np.asarray(a) @ np.asarray(b).T)[mask.nonzero()]
+    np.testing.assert_allclose(np.asarray(e), ref_e, atol=2e-5)
+
+
+@needs_devices
+def test_sharded_chain_grads(rng):
+    from jax.sharding import Mesh
+    csr, mask, a, b, x = _problem(rng, m=53, k=41, d=8, n=16)
+    mesh = Mesh(np.array(jax.devices()), ("shard",))
+    ps = plan(csr, backend="sharded", mesh=mesh, shard_kind="nnz",
+              inner_backend="pallas")
+    pr = plan(csr, backend="xla")
+
+    def loss(p):
+        return lambda aa, bb, xx: jnp.sum(jnp.sin(
+            execute_chain(p, aa, bb, xx, transform="softmax")))
+
+    gs = jax.grad(loss(ps), argnums=(0, 1, 2))(a, b, x)
+    gr = jax.grad(loss(pr), argnums=(0, 1, 2))(a, b, x)
+    for gi, ri in zip(gs, gr):
+        np.testing.assert_allclose(np.asarray(gi), np.asarray(ri), atol=5e-4)

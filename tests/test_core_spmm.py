@@ -6,7 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import (LOGICAL_KERNELS, SelectorThresholds, csr_from_dense,
+from repro.core import (MATMUL_KERNELS, SelectorThresholds, csr_from_dense,
                         execute, execute_pattern, matrix_stats, plan, rmat,
                         select_kernel, spmm_as_n_spmv)
 from repro.kernels.ref import ref_spmm_csr
@@ -16,7 +16,7 @@ from conftest import random_csr
 
 
 @pytest.mark.parametrize("n", [1, 2, 4, 7, 32])
-@pytest.mark.parametrize("impl", LOGICAL_KERNELS)
+@pytest.mark.parametrize("impl", MATMUL_KERNELS)
 def test_all_kernels_match_oracle(rng, n, impl):
     csr, a = random_csr(rng, 61, 47, 0.12)
     p = plan(csr, tile=64)
@@ -30,7 +30,7 @@ def test_spmv_1d_path(rng):
     csr, a = random_csr(rng, 30, 40, 0.2)
     p = plan(csr, tile=32)
     x = rng.standard_normal(40).astype(np.float32)
-    for impl in LOGICAL_KERNELS:
+    for impl in MATMUL_KERNELS:
         got = np.asarray(execute(p, jnp.asarray(x), impl=impl))
         assert got.shape == (30,)
         np.testing.assert_allclose(got, a @ x, atol=1e-4)
@@ -72,7 +72,7 @@ def test_empty_rows_and_matrix():
     a[2, 3] = 2.0
     p = plan(csr_from_dense(a), tile=8)
     x = jnp.ones((6, 3), jnp.float32)
-    for impl in LOGICAL_KERNELS:
+    for impl in MATMUL_KERNELS:
         y = np.asarray(execute(p, x, impl=impl))
         assert y[2, 0] == 2.0 and np.all(y[[0, 1, 3, 4]] == 0)
 
@@ -99,7 +99,7 @@ def test_property_kernels_agree(seed, n, density):
     a = (rng.random((m, k)) * (rng.random((m, k)) < density)).astype(np.float32)
     p = plan(csr_from_dense(a), tile=32)
     x = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
-    outs = [np.asarray(execute(p, x, impl=i)) for i in LOGICAL_KERNELS]
+    outs = [np.asarray(execute(p, x, impl=i)) for i in MATMUL_KERNELS]
     for o in outs[1:]:
         np.testing.assert_allclose(o, outs[0], atol=1e-3)
 
@@ -110,7 +110,7 @@ def test_linearity_property(rng):
     p = plan(csr, tile=32)
     x = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
     y = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
-    for impl in LOGICAL_KERNELS:
+    for impl in MATMUL_KERNELS:
         f = lambda v: execute(p, v, impl=impl)
         np.testing.assert_allclose(np.asarray(f(x + y)),
                                    np.asarray(f(x) + f(y)), atol=1e-3)

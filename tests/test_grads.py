@@ -6,7 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import LOGICAL_KERNELS, csr_from_dense, execute, execute_pattern, plan
+from repro.core import MATMUL_KERNELS, csr_from_dense, execute, execute_pattern, plan
 
 from conftest import random_csr
 
@@ -23,7 +23,7 @@ def _dense_grads(csr, a, x):
 
 
 @pytest.mark.parametrize("n", [1, 5])
-@pytest.mark.parametrize("impl", LOGICAL_KERNELS)
+@pytest.mark.parametrize("impl", MATMUL_KERNELS)
 def test_execute_grads_match_dense(rng, impl, n):
     csr, a = random_csr(rng, 33, 27, 0.2)
     p = plan(csr, tile=16)
@@ -39,7 +39,7 @@ def test_execute_grads_match_dense(rng, impl, n):
     np.testing.assert_allclose(np.asarray(gx), np.asarray(gd_x), atol=1e-3)
 
 
-@pytest.mark.parametrize("impl", LOGICAL_KERNELS)
+@pytest.mark.parametrize("impl", MATMUL_KERNELS)
 def test_execute_grads_under_jit(rng, impl):
     csr, a = random_csr(rng, 20, 20, 0.25)
     p = plan(csr, tile=8)
@@ -68,7 +68,7 @@ def test_pallas_backend_grads(rng, impl):
     np.testing.assert_allclose(np.asarray(gx), np.asarray(gd_x), atol=2e-3)
 
 
-@pytest.mark.parametrize("impl", LOGICAL_KERNELS)
+@pytest.mark.parametrize("impl", MATMUL_KERNELS)
 def test_bsr_backend_grads(rng, impl):
     """Block-level custom VJP for the "bsr" backend (formerly forward-only):
     value- and dense-operand grads against the dense reference, for every
@@ -149,7 +149,7 @@ def test_grad_of_vals_only_when_x_constant(rng):
     csr, a = random_csr(rng, 16, 16, 0.3)
     p = plan(csr, tile=8)
     x = jnp.asarray(rng.standard_normal((16, 2)).astype(np.float32))
-    for impl in LOGICAL_KERNELS:
+    for impl in MATMUL_KERNELS:
         g = jax.grad(lambda v: execute(p, x, vals=v, impl=impl).sum())(csr.data)
         assert g.shape == csr.data.shape
         assert np.isfinite(np.asarray(g)).all()

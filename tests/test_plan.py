@@ -5,7 +5,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import (LOGICAL_KERNELS, SelectorThresholds, available,
+from repro.core import (MATMUL_KERNELS, SelectorThresholds, available,
                         backends_for, csr_from_dense, execute,
                         load_thresholds, plan, resolve, save_thresholds)
 from repro.core import formats
@@ -57,13 +57,16 @@ def test_n_hint_prewarms_selected_substrate(rng):
 
 def test_registry_covers_the_2x2_space_per_backend():
     for backend in ("xla", "pallas"):
-        for name in LOGICAL_KERNELS:
+        for name in MATMUL_KERNELS:
             e = resolve(name, backend)
             assert e.logical == name and e.backend == backend
             assert e.substrate in ("ell", "balanced")
     # the block-granule backend registers too (the formerly-orphaned path)
     assert resolve("nb_pr", "bsr").substrate == "bsr"
-    assert len(available("xla")) == 4
+    # xla carries the full logical surface: the 2x2 grid + sddmm + chain
+    from repro.core import LOGICAL_KERNELS
+    assert {e.logical for e in available("xla")} == set(LOGICAL_KERNELS)
+    assert len(available("xla")) == len(LOGICAL_KERNELS)
 
 
 def test_registry_unknown_lookups():
@@ -133,7 +136,7 @@ def test_calibrate_save_to(rng, tmp_path):
     csr, _ = random_csr(rng, 16, 16, 0.3)
     from repro.core import calibrate
     times = {("m", n, k): 1.0 + (k != "nb_pr")
-             for n in (1, 8) for k in LOGICAL_KERNELS}
+             for n in (1, 8) for k in MATMUL_KERNELS}
     path = str(tmp_path / "cal.json")
     th, report = calibrate({"m": csr}, (1, 8), times=times, save_to=path)
     assert load_thresholds(path) == th

@@ -11,7 +11,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import (LOGICAL_KERNELS, SelectorThresholds, csr_from_dense,
+from repro.core import (MATMUL_KERNELS, SelectorThresholds, csr_from_dense,
                         execute, execute_pattern, make_shard_spec,
                         matrix_stats, plan, rmat, select_partition)
 from repro.core.shard import build_sharded_substrate
@@ -130,7 +130,7 @@ def test_row_partitioner_invariants(m, k, density, n):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("kind", ["row", "nnz"])
-@pytest.mark.parametrize("impl", LOGICAL_KERNELS)
+@pytest.mark.parametrize("impl", MATMUL_KERNELS)
 def test_sharded_matches_xla_backend(kind, impl):
     csr = _skewed_csr()
     p_ref = plan(csr)
@@ -151,7 +151,7 @@ def test_sharded_grads_match_single_device(kind):
     p_sh = plan(csr, backend="sharded", mesh=_mesh(), shard_kind=kind, tile=64)
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.standard_normal((csr.shape[1], 6)).astype(np.float32))
-    for impl in LOGICAL_KERNELS:
+    for impl in MATMUL_KERNELS:
         f_sh = lambda v, xx: (execute(p_sh, xx, vals=v, impl=impl) ** 2).sum()
         f_ref = lambda v, xx: (execute(p_ref, xx, vals=v, impl=impl) ** 2).sum()
         gv, gx = jax.grad(f_sh, argnums=(0, 1))(csr.data, x)
