@@ -57,9 +57,10 @@ def main() -> None:
     if args.quick:
         common.set_quick(True)
 
-    from . import (adaptive_strategy, csc_ablation, fig6_kernel_perf,
-                   moe_dispatch, plan_cache, roofline, sddmm_chain,
-                   sharded_spmm, spill_fusion, vdl_ablation, vsr_ablation)
+    from . import (adaptive_strategy, attention, csc_ablation,
+                   fig6_kernel_perf, moe_dispatch, plan_cache, roofline,
+                   sddmm_chain, sharded_spmm, spill_fusion, vdl_ablation,
+                   vsr_ablation)
 
     benches = {
         "plan_cache": lambda: plan_cache.run(args.full),
@@ -75,6 +76,7 @@ def main() -> None:
         "sharded_spmm": lambda: sharded_spmm.run(args.full),
         "spill_fusion": lambda: spill_fusion.run(args.full),
         "sddmm_chain": lambda: sddmm_chain.run(args.full),
+        "attention": lambda: attention.run(args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

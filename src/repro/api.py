@@ -34,12 +34,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attention import (AttentionMask, AttentionSpec, SparseAttention,
+                             attention_plan, bigbird, build_mask,
+                             dense_attention, from_block_mask,
+                             scoped_plan_cache, sliding_window,
+                             sparse_attention)
 from repro.core.cache import (DEFAULT_CACHE, PlanCache, cached_plan,
                               pattern_fingerprint, plan_key)
 from repro.core.formats import CSR, csr_from_dense
 from repro.core.plan import (PlanArtifact, PlanBuilder, execute,
-                             execute_chain, execute_pattern, execute_sddmm,
-                             plan)
+                             execute_attention, execute_chain,
+                             execute_pattern, execute_sddmm, plan)
 from repro.core.registry import backend_scope, default_backend
 from repro.core.selector import (SelectorThresholds, TileGeometry,
                                  default_thresholds, geometry_key,
@@ -51,10 +56,14 @@ __all__ = [
     "SparseMatrix", "sparse", "sparse_chain", "sddmm", "pattern_matmul",
     "use_backend", "use_mesh",
     "calibrate", "calibrate_backend", "autotune_geometry", "autotune_overlap",
-    "autotune_quant", "autotune_chain", "cache_stats",
+    "autotune_quant", "autotune_chain", "autotune_attention", "cache_stats",
     "clear_cache", "PlanArtifact", "PlanBuilder", "PlanCache",
     "SelectorThresholds", "TileGeometry", "geometry_key",
     "execute", "save_thresholds", "load_thresholds",
+    # block-sparse attention (DESIGN.md §10)
+    "AttentionMask", "AttentionSpec", "SparseAttention", "attention_plan",
+    "bigbird", "build_mask", "dense_attention", "from_block_mask",
+    "scoped_plan_cache", "sliding_window", "sparse_attention",
 ]
 
 
@@ -465,6 +474,17 @@ def autotune_chain(csr_or_matrix, **kwargs) -> SelectorThresholds:
     csr = (csr_or_matrix.plan.csr if isinstance(csr_or_matrix, SparseMatrix)
            else csr_or_matrix)
     return _tune(csr, **kwargs)
+
+
+def autotune_attention(specs, **kwargs) -> SelectorThresholds:
+    """Measure the fused-attention crossover over a set of
+    ``AttentionSpec``s and return thresholds with the winning
+    ``attn_fuse_min_seq`` — the smallest sequence length at which the fused
+    Pallas attention chain beats the unfused SDDMM+softmax+SpMM reference
+    (``ATTN_NEVER`` when it never does; DESIGN.md §10;
+    ``repro.kernels.tune.autotune_attention`` for the knobs)."""
+    from repro.kernels.tune import autotune_attention as _tune
+    return _tune(specs, **kwargs)
 
 
 def calibrate_backend(save_to: str | None = None, *,

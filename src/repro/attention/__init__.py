@@ -1,0 +1,20 @@
+"""Block-sparse attention subsystem (DESIGN.md §10).
+
+Pattern builders compile symbolic window specs into block masks + token-level
+CSR patterns on the existing substrates; the module layer routes them through
+PlanBuilder/PlanCache into the fused sparse-softmax attention chain.  This
+package is internal — reach it through ``repro.api`` (``sparse_attention``,
+``SparseAttention``, the spec builders), per the facade boundary.
+"""
+from .module import (SparseAttention, attention_plan, scoped_plan_cache,
+                     sparse_attention, spec_mask)
+from .patterns import (PATTERN_KINDS, AttentionMask, AttentionSpec, bigbird,
+                       build_mask, dense_attention, expected_band_blocks,
+                       from_block_mask, sliding_window)
+
+__all__ = [
+    "AttentionMask", "AttentionSpec", "PATTERN_KINDS", "SparseAttention",
+    "attention_plan", "bigbird", "build_mask", "dense_attention",
+    "expected_band_blocks", "from_block_mask", "scoped_plan_cache",
+    "sliding_window", "sparse_attention", "spec_mask",
+]

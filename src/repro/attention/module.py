@@ -1,0 +1,159 @@
+"""The attention front door: spec → cached plan → fused execute.
+
+``sparse_attention`` is the functional entry (batched Q/K/V with any number
+of leading dims), ``SparseAttention`` the stateful layer-style wrapper that
+holds one spec and its plan handle.  Both route every mask through
+``cached_plan``, so one ``PlanBuilder`` (substrates, visit schedules,
+compiled Pallas executables) is shared by every layer, head, and request
+that presents the same ``(spec, thresholds, backend, mesh)`` — the
+PlanCache's hit counters make that sharing observable (DESIGN.md §10).
+
+``scoped_plan_cache`` lets a host (the ServeEngine) redirect attention plan
+builds into *its* cache for the dynamic extent of a call without threading a
+cache argument through the model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import DEFAULT_CACHE, PlanCache, cached_plan
+from repro.core.plan import execute_attention
+from repro.core.selector import SelectorThresholds
+
+from .patterns import AttentionMask, AttentionSpec, build_mask
+
+_SCOPED = threading.local()
+
+
+@contextlib.contextmanager
+def scoped_plan_cache(cache: PlanCache):
+    """Make ``cache`` the default attention plan cache in the dynamic extent
+    (thread-local; nestable — innermost wins)."""
+    stack = getattr(_SCOPED, "stack", None)
+    if stack is None:
+        stack = _SCOPED.stack = []
+    stack.append(cache)
+    try:
+        yield cache
+    finally:
+        stack.pop()
+
+
+def _resolve_cache(cache) -> PlanCache | None:
+    """Explicit cache > scoped cache > process default; ``False`` disables."""
+    if cache is False:
+        return None
+    if isinstance(cache, PlanCache):
+        return cache
+    stack = getattr(_SCOPED, "stack", None)
+    if stack:
+        return stack[-1]
+    return DEFAULT_CACHE
+
+
+# masks are deterministic functions of their spec, and specs are frozen and
+# hashable — memoize the numpy compilation step process-wide
+_MASKS: dict[AttentionSpec, AttentionMask] = {}
+_MASKS_LOCK = threading.Lock()
+
+
+def spec_mask(spec: AttentionSpec) -> AttentionMask:
+    with _MASKS_LOCK:
+        mask = _MASKS.get(spec)
+        if mask is None:
+            mask = _MASKS[spec] = build_mask(spec)
+    return mask
+
+
+def attention_plan(spec: AttentionSpec, *,
+                   thresholds: SelectorThresholds | None = None,
+                   backend: str | None = None, mesh=None, cache=True):
+    """The ``PlanBuilder`` for a spec's token-level mask, via the resolved
+    PlanCache (``cache=False`` builds uncached).  ``chain_op="attn"``
+    segments attention plans from same-pattern chain/SpMM plans."""
+    mask = spec_mask(spec)
+    resolved = _resolve_cache(cache)
+    if resolved is None:
+        from repro.core.plan import plan
+        return plan(mask.csr, thresholds=thresholds, backend=backend,
+                    mesh=mesh, chain_op="attn")
+    return cached_plan(mask.csr, cache=resolved, backend=backend,
+                       thresholds=thresholds, mesh=mesh, chain_op="attn")
+
+
+def sparse_attention(spec: AttentionSpec, q: jax.Array, k: jax.Array,
+                     v: jax.Array, *, scale: float | None = None,
+                     bias: jax.Array | None = None,
+                     thresholds: SelectorThresholds | None = None,
+                     backend: str | None = None, mesh=None, cache=True,
+                     interpret: bool | None = None) -> jax.Array:
+    """Block-sparse attention ``softmax_mask(scale * QK^T + bias) @ V``.
+
+    ``q``/``k``/``v`` are ``(..., seq, head_dim)`` with matching leading
+    dims (batch, heads, ...); each leading slice runs through the *same*
+    plan, so the mask artifact is built once.  ``bias`` is an optional flat
+    ``(nnz,)`` per-edge additive stream shared across leading dims.  Rows
+    the mask leaves fully masked produce exact-zero outputs."""
+    q, k, v = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+    if q.shape != k.shape or q.shape[:-1] != v.shape[:-1]:
+        raise ValueError(f"q/k/v leading shapes must match; got {q.shape}, "
+                         f"{k.shape}, {v.shape}")
+    if q.shape[-2] != spec.seq:
+        raise ValueError(f"spec.seq={spec.seq} but operands have sequence "
+                         f"length {q.shape[-2]}")
+    p = attention_plan(spec, thresholds=thresholds, backend=backend,
+                       mesh=mesh, cache=cache)
+    if q.ndim == 2:
+        return execute_attention(p, q, k, v, scale=scale, bias=bias,
+                                 interpret=interpret)
+    lead = q.shape[:-2]
+    qf = q.reshape((-1,) + q.shape[-2:])
+    kf = k.reshape((-1,) + k.shape[-2:])
+    vf = v.reshape((-1,) + v.shape[-2:])
+    outs = [execute_attention(p, qf[i], kf[i], vf[i], scale=scale, bias=bias,
+                              interpret=interpret)
+            for i in range(qf.shape[0])]
+    return jnp.stack(outs).reshape(lead + (spec.seq, v.shape[-1]))
+
+
+class SparseAttention:
+    """One spec, one (lazily built, cached) plan, many calls.
+
+    The layer-style handle transformer code holds per attention module:
+    construction is free, the mask artifact is built on first call and
+    shared through the PlanCache with every other module using the same
+    spec (the ISSUE's cross-layer reuse contract)."""
+
+    def __init__(self, spec: AttentionSpec, *,
+                 thresholds: SelectorThresholds | None = None,
+                 backend: str | None = None, mesh=None, cache=True):
+        self.spec = spec
+        self.thresholds = thresholds
+        self.backend = backend
+        self.mesh = mesh
+        self.cache = cache
+
+    @property
+    def mask(self) -> AttentionMask:
+        return spec_mask(self.spec)
+
+    @property
+    def plan(self):
+        return attention_plan(self.spec, thresholds=self.thresholds,
+                              backend=self.backend, mesh=self.mesh,
+                              cache=self.cache)
+
+    def __call__(self, q, k, v, *, scale=None, bias=None, interpret=None):
+        return sparse_attention(self.spec, q, k, v, scale=scale, bias=bias,
+                                thresholds=self.thresholds,
+                                backend=self.backend, mesh=self.mesh,
+                                cache=self.cache, interpret=interpret)
+
+    def __repr__(self) -> str:
+        s = self.spec
+        return (f"SparseAttention({s.kind}, seq={s.seq}, block={s.block}, "
+                f"window={s.window}, causal={s.causal})")

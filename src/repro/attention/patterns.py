@@ -1,0 +1,220 @@
+"""Attention pattern builders: window specs → block masks → CSR substrates.
+
+The bridge between transformer-side attention specs and the sparse engine
+(DESIGN.md §10).  A frozen :class:`AttentionSpec` names a block-sparse
+pattern symbolically — sliding window, causal sliding window, BigBird-style
+window+global+random, or dense fallback — and :func:`build_mask` compiles it
+into an :class:`AttentionMask`: a boolean block mask, a token-granularity
+``CSR`` pattern (the thing ``plan()`` consumes, so the selector keys on real
+row statistics), and block-level stats (blocks/row mean + CV) that mirror
+the selector's Insight-2 signal one granularity up.
+
+Everything here is host-side numpy, deterministic (BigBird's random blocks
+come from a seeded ``np.random.Generator``), and cheap relative to kernel
+compilation — masks are built once per (spec, seq-bucket) and shared across
+layers/heads/requests through the PlanCache.
+
+Causality is enforced at *token* granularity: diagonal blocks of a causal
+mask keep only their lower triangle in the CSR pattern, so the fused kernel
+never needs a runtime causal mask — masked positions simply have no edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.formats import CSR
+
+#: spec kinds build_mask understands
+PATTERN_KINDS = ("sliding_window", "bigbird", "dense", "block_mask")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Symbolic description of one block-sparse attention pattern.
+
+    ``window`` counts *blocks* on each side of the diagonal (the diagonal
+    block is always included, so ``window=0`` is block-diagonal attention).
+    ``n_global`` marks the first ``n_global`` block rows/columns fully
+    attended (BigBird's global tokens); ``n_random`` adds that many seeded
+    random blocks per block row.  ``block_mask`` carries an explicit
+    (nb, nb) boolean mask for ``kind="block_mask"`` (stored as a tuple of
+    tuples so the spec stays hashable — it is a PlanCache key component).
+    """
+
+    kind: str
+    seq: int
+    block: int = 64
+    window: int = 1
+    causal: bool = False
+    n_global: int = 0
+    n_random: int = 0
+    seed: int = 0
+    block_mask: tuple = ()
+
+    def __post_init__(self):
+        if self.kind not in PATTERN_KINDS:
+            raise ValueError(f"unknown pattern kind {self.kind!r}; "
+                             f"expected one of {PATTERN_KINDS}")
+        if self.seq < 1:
+            raise ValueError(f"seq must be >= 1, got {self.seq}")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+        if self.window < 0:
+            raise ValueError(f"window must be >= 0, got {self.window}")
+        if self.n_global < 0 or self.n_random < 0:
+            raise ValueError("n_global/n_random must be >= 0")
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-self.seq // self.block)  # ceil
+
+
+def sliding_window(seq: int, window: int, *, block: int = 64,
+                   causal: bool = False) -> AttentionSpec:
+    """Band attention: each block row attends ``window`` blocks each side of
+    the diagonal (``causal=True`` keeps only the past side, trimmed to the
+    token-level lower triangle)."""
+    return AttentionSpec("sliding_window", seq, block=block, window=window,
+                         causal=causal)
+
+
+def bigbird(seq: int, window: int, n_global: int, n_random: int, *,
+            block: int = 64, seed: int = 0,
+            causal: bool = False) -> AttentionSpec:
+    """BigBird-style pattern: sliding window + ``n_global`` global block
+    rows/cols + ``n_random`` seeded random blocks per block row."""
+    return AttentionSpec("bigbird", seq, block=block, window=window,
+                         causal=causal, n_global=n_global,
+                         n_random=n_random, seed=seed)
+
+
+def dense_attention(seq: int, *, block: int = 64,
+                    causal: bool = False) -> AttentionSpec:
+    """Dense fallback: every block active (causal trims the upper triangle).
+    Useful as the correctness baseline and for short sequences below the
+    ``attn_fuse_min_seq`` crossover."""
+    return AttentionSpec("dense", seq, block=block, window=0, causal=causal)
+
+
+def from_block_mask(block_mask, seq: int, *, block: int = 64,
+                    causal: bool = False) -> AttentionSpec:
+    """Wrap an explicit (nb, nb) boolean block mask as a spec (hashable)."""
+    bm = np.asarray(block_mask, dtype=bool)
+    nb = -(-seq // block)
+    if bm.shape != (nb, nb):
+        raise ValueError(f"block_mask shape {bm.shape} != ({nb}, {nb}) "
+                         f"for seq={seq}, block={block}")
+    return AttentionSpec("block_mask", seq, block=block, causal=causal,
+                         block_mask=tuple(tuple(bool(x) for x in row)
+                                          for row in bm))
+
+
+# ---------------------------------------------------------------------------
+# mask compilation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionMask:
+    """A compiled pattern: the (nb, nb) boolean block mask, the exact
+    token-granularity CSR the planner consumes, and block-level stats."""
+
+    spec: AttentionSpec
+    csr: CSR
+    block_mask: np.ndarray          # (nb, nb) bool
+    nnz_blocks: int
+    stats: dict                     # blocks/row mean, cv, density
+
+    @property
+    def seq(self) -> int:
+        return self.spec.seq
+
+
+def _block_mask(spec: AttentionSpec) -> np.ndarray:
+    nb = spec.n_blocks
+    if spec.kind == "block_mask":
+        bm = np.array(spec.block_mask, dtype=bool)
+    elif spec.kind == "dense":
+        bm = np.ones((nb, nb), dtype=bool)
+    else:  # sliding_window / bigbird share the band core
+        i = np.arange(nb)[:, None]
+        j = np.arange(nb)[None, :]
+        d = j - i
+        lo = -spec.window
+        hi = 0 if spec.causal else spec.window
+        bm = (d >= lo) & (d <= hi)
+        if spec.kind == "bigbird":
+            g = min(spec.n_global, nb)
+            bm[:g, :] = True
+            bm[:, :g] = True
+            if spec.n_random:
+                rng = np.random.default_rng(spec.seed)
+                for r in range(nb):
+                    # sample without replacement among the still-inactive
+                    # blocks of this row (past-only when causal)
+                    limit = (r + 1) if spec.causal else nb
+                    off = np.flatnonzero(~bm[r, :limit])
+                    if off.size:
+                        take = min(spec.n_random, off.size)
+                        bm[r, rng.choice(off, size=take, replace=False)] = True
+    if spec.causal:
+        # no block strictly above the diagonal survives causal masking
+        bm &= (np.arange(nb)[:, None] - np.arange(nb)[None, :]) >= 0
+    return bm
+
+
+def _token_csr(spec: AttentionSpec, bm: np.ndarray) -> CSR:
+    """Expand the block mask to an exact token-level CSR: entries only where
+    query ``i`` < seq, key ``j`` < seq, the covering block is active, and
+    (when causal) ``j <= i``.  Column indices within a row are sorted."""
+    s, b = spec.seq, spec.block
+    indptr = np.zeros(s + 1, dtype=np.int32)
+    cols_per_row: list[np.ndarray] = []
+    for i in range(s):
+        jb = np.flatnonzero(bm[i // b])  # active block columns of this row
+        cols = (jb[:, None] * b + np.arange(b)[None, :]).ravel()
+        cols = cols[cols < s]
+        if spec.causal:
+            cols = cols[cols <= i]
+        cols_per_row.append(cols.astype(np.int32))
+        indptr[i + 1] = indptr[i] + cols.size
+    indices = (np.concatenate(cols_per_row) if cols_per_row
+               else np.zeros(0, np.int32))
+    data = np.ones(indices.shape[0], dtype=np.float32)
+    return CSR(indptr=indptr, indices=indices, data=data, shape=(s, s))
+
+
+def build_mask(spec: AttentionSpec) -> AttentionMask:
+    """Compile a spec into its block mask + token CSR + block stats."""
+    bm = _block_mask(spec)
+    if not bm.any():
+        raise ValueError(f"spec {spec.kind!r} produced an empty mask "
+                         f"(seq={spec.seq}, block={spec.block})")
+    blocks_per_row = bm.sum(axis=1).astype(np.float64)
+    mean = float(blocks_per_row.mean())
+    cv = float(blocks_per_row.std() / mean) if mean > 0 else 0.0
+    stats = {
+        "n_blocks": int(spec.n_blocks),
+        "nnz_blocks": int(bm.sum()),
+        "blocks_per_row_mean": mean,
+        "blocks_per_row_cv": cv,
+        "block_density": float(bm.mean()),
+    }
+    return AttentionMask(spec=spec, csr=_token_csr(spec, bm), block_mask=bm,
+                         nnz_blocks=int(bm.sum()), stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# closed forms (test oracles)
+# ---------------------------------------------------------------------------
+
+def expected_band_blocks(nb: int, window: int, *, causal: bool = False) -> int:
+    """Closed-form active-block count of a (possibly causal) sliding-window
+    band on an ``nb x nb`` block grid with ``window`` blocks per side."""
+    w = min(window, nb - 1)
+    if causal:
+        # full rows have w+1 blocks; the first w rows are truncated
+        return nb * (w + 1) - w * (w + 1) // 2
+    return nb * (2 * w + 1) - w * (w + 1)

@@ -52,8 +52,8 @@ from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
 from .selector import (SelectorThresholds, TileGeometry, default_thresholds,
                        select_kernel)
 from .stats import MatrixStats, balanced_tile_span, matrix_stats
-from .vjp import (_exec_balanced, _exec_bsr, _exec_chain,  # noqa: F401 (re-export)
-                  _exec_ell, _exec_sddmm, _stream_to_balanced)
+from .vjp import (_exec_attn, _exec_balanced, _exec_bsr,  # noqa: F401 (re-export)
+                  _exec_chain, _exec_ell, _exec_sddmm, _stream_to_balanced)
 
 
 # ---------------------------------------------------------------------------
@@ -516,10 +516,11 @@ class PlanBuilder:
             else:
                 kernels = registry.MATMUL_KERNELS
         for name in kernels:
-            if name in ("sddmm", "chain"):
+            if name in ("sddmm", "chain", "attn_chain"):
                 raise ValueError(
                     f"{name!r} cannot be finalized into a PlanArtifact; use "
-                    "execute_sddmm/execute_chain on the PlanBuilder")
+                    "execute_sddmm/execute_chain/execute_attention on the "
+                    "PlanBuilder")
         subs: dict[str, Any] = {}
         aux: dict[str, Any] = {}
         prep: list = []
@@ -952,6 +953,76 @@ def execute_chain(p: PlanBuilder, a: jax.Array, b: jax.Array, x: jax.Array,
     rows, cols = _chain_pattern(p, entry)
     bound = _chain_bound(p, entry, interpret, extra)
     return _exec_chain((bound, (m, k), transform, al), rows, cols, a, b, x)
+
+
+def execute_attention(p: PlanBuilder, q: jax.Array, k: jax.Array,
+                      v: jax.Array, *, scale: float | None = None,
+                      bias: jax.Array | None = None,
+                      backend: str | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Block-sparse attention over the plan's pattern (DESIGN.md §10):
+    ``y = softmax_mask(scale * QK^T + bias) @ V`` where the mask is the
+    sparsity pattern.  ``scale`` defaults to ``head_dim**-0.5``; ``bias``
+    is an optional additive per-edge stream in CSR nonzero order (``(nnz,)``
+    — relative-position / ALiBi hooks).  Without a bias this *is* the
+    softmax chain, so it rides the ``chain`` registry entries — including
+    the sharded cross-shard softmax merge; with a bias it dispatches the
+    ``attn_chain`` kernels (fused Pallas / unfused XLA).  Differentiable
+    w.r.t. ``q``, ``k``, ``v`` and ``bias``.  Rows the mask leaves empty
+    produce exact-zero output rows."""
+    if isinstance(p, PlanArtifact):
+        raise TypeError("execute_attention needs a PlanBuilder; "
+                        "PlanArtifacts do not carry the chain kernels")
+    m, kdim = (int(s) for s in p.csr.shape)
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    if q.ndim != 2 or k.ndim != 2 or q.shape[1] != k.shape[1]:
+        raise ValueError(f"attention needs Q (m, d) and K (k, d); got "
+                         f"{q.shape} and {k.shape}")
+    if q.shape[0] != m or k.shape[0] != kdim:
+        raise ValueError(f"operand rows {q.shape[0]}/{k.shape[0]} do not "
+                         f"match the pattern shape {(m, kdim)}")
+    if v.ndim not in (1, 2) or v.shape[0] != kdim:
+        raise ValueError(f"attention needs V (k,) or (k, n) with k={kdim}; "
+                         f"got {v.shape}")
+    sc = float(q.shape[1]) ** -0.5 if scale is None else float(scale)
+    backend = backend or p.backend
+    # fused-attention crossover (thresholds.attn_fuse_min_seq): short
+    # sequences amortize the visit-schedule setup poorly — run the unfused
+    # xla reference below the cutoff
+    extra: dict = {}
+    if backend == "pallas" and m < p.thresholds.attn_fuse_min_seq:
+        backend = "xla"
+    elif backend == "sharded":
+        inner = p.inner_backend or registry.default_backend()
+        if inner == "pallas" and m < p.thresholds.attn_fuse_min_seq:
+            extra["inner_backend"] = "xla"
+    if bias is None:
+        # softmax chain with alpha = scale: reuse the chain entries (the
+        # sharded one merges softmax stats across shards — grad-exact)
+        entry = p.entry("chain", backend)
+        rows, cols = _chain_pattern(p, entry)
+        bound = _chain_bound(p, entry, interpret,
+                             dict(extra, transform="softmax", alpha=sc))
+        return _exec_chain((bound, (m, kdim), "softmax", sc),
+                           rows, cols, q, k, v)
+    if backend == "sharded":
+        raise NotImplementedError(
+            "sharded block-sparse attention does not support an additive "
+            "bias stream yet; drop bias= or use a single-device backend")
+    bias = jnp.asarray(bias)
+    if bias.ndim != 1 or bias.shape[0] != p.csr.nnz:
+        raise ValueError(f"bias must be a flat ({p.csr.nnz},) per-edge "
+                         f"stream in CSR order; got {bias.shape}")
+    entry = p.entry("attn_chain", backend)
+    rows, cols = _chain_pattern(p, entry)
+    bound = _chain_bound(p, entry, interpret, dict(extra, scale=sc))
+    # the flat stream rides the balanced slab layout (pure pad+reshape, so
+    # the bias cotangent flows back to the flat stream automatically)
+    slab = _stream_to_balanced(bias.astype(jnp.float32),
+                               p.substrate("balanced"))
+    return _exec_attn((bound, (m, kdim), sc), rows, cols, q, k, slab, v)
 
 
 # module-level bound-kernel cache for the plan-free training entry

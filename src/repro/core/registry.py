@@ -40,7 +40,10 @@ MATMUL_KERNELS: tuple[str, ...] = ("rs_sr", "rs_pr", "nb_sr", "nb_pr")
 #: ``chain`` (SDDMM → per-row transform → SpMM, fused on Pallas).  The two
 #: extras take raw pattern arrays, not substrates; ``execute_sddmm`` /
 #: ``execute_chain`` in ``core/plan.py`` are their only call sites.
-LOGICAL_KERNELS: tuple[str, ...] = MATMUL_KERNELS + ("sddmm", "chain")
+#: ``attn_chain`` is the chain's attention sibling — softmax with a score
+#: scale and an additive per-edge bias slab (``execute_attention``).
+LOGICAL_KERNELS: tuple[str, ...] = MATMUL_KERNELS + ("sddmm", "chain",
+                                                     "attn_chain")
 
 #: substrate format each *logical* kernel consumes on the reference (XLA)
 #: backend; physical backends may substitute their own (BSR does, and the

@@ -122,6 +122,13 @@ class SelectorThresholds:
     # ``kernels/tune.CHAIN_NEVER`` = never (unfused two-kernel pair).
     # Measured per backend by ``kernels/tune.autotune_chain``.
     chain_fuse_min_n: int = 1
+    # block-sparse attention crossover (DESIGN.md §10): the fused Pallas
+    # attention chain runs only at sequence length >= this — short sequences
+    # amortize the visit-schedule setup poorly and the unfused XLA path (or
+    # plain dense attention) wins.  1 = always fuse;
+    # ``kernels/tune.ATTN_NEVER`` = never.  Measured per backend by
+    # ``kernels/tune.autotune_attention``.
+    attn_fuse_min_seq: int = 1
     # autotuned tile geometries: sorted ((geometry_key, (tile, wb, tile_n)),
     # ...) — a tuple-of-tuples so thresholds stay hashable (they ride
     # ``PlanMeta`` static aux and the ``PlanCache`` key, which is how a
@@ -180,12 +187,22 @@ class SelectorThresholds:
             d["geometries"] = {k: list(v) for k, v in self.geometries}
             d["quant_min_n"] = int(self.quant_min_n)
             d["chain_fuse_min_n"] = int(self.chain_fuse_min_n)
+        if self.attn_fuse_min_seq != 1:
+            # attention-calibrated thresholds write the v5 schema (a strict
+            # superset of v4); older files load with the always-fuse default
+            d["version"] = 5
+            d["max_win"] = int(self.max_win)
+            d["overlap_min_n"] = int(self.overlap_min_n)
+            d["geometries"] = {k: list(v) for k, v in self.geometries}
+            d["quant_min_n"] = int(self.quant_min_n)
+            d["chain_fuse_min_n"] = int(self.chain_fuse_min_n)
+            d["attn_fuse_min_seq"] = int(self.attn_fuse_min_seq)
         return json.dumps(d, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "SelectorThresholds":
         d = json.loads(text)
-        if d.get("version", 1) not in (1, 2, 3, 4):
+        if d.get("version", 1) not in (1, 2, 3, 4, 5):
             raise ValueError(f"unsupported thresholds version {d.get('version')!r}")
         geoms = tuple(sorted((str(k), tuple(int(x) for x in v))
                              for k, v in d.get("geometries", {}).items()))
@@ -200,6 +217,8 @@ class SelectorThresholds:
                  quant_min_n=int(d.get("quant_min_n", 1)),
                  # pre-chain (v1-v3) files: always fuse
                  chain_fuse_min_n=int(d.get("chain_fuse_min_n", 1)),
+                 # pre-attention (v1-v4) files: always fuse
+                 attn_fuse_min_seq=int(d.get("attn_fuse_min_seq", 1)),
                  geometries=geoms)
         th.validate()
         return th
@@ -228,6 +247,9 @@ class SelectorThresholds:
         if self.chain_fuse_min_n < 1:
             raise ValueError(f"chain_fuse_min_n must be >= 1, "
                              f"got {self.chain_fuse_min_n}")
+        if self.attn_fuse_min_seq < 1:
+            raise ValueError(f"attn_fuse_min_seq must be >= 1, "
+                             f"got {self.attn_fuse_min_seq}")
         for key, vals in self.geometries:
             if len(vals) != 3:
                 raise ValueError(f"geometry {key!r} must be (tile, wb, "

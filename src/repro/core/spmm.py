@@ -235,6 +235,47 @@ def chain_weights(e, r, valid, m, transform: str, alpha, stats=None):
                      "'identity', 'scale' or 'softmax'")
 
 
+def attn_weights(e, bias, r, valid, m, scale, stats=None):
+    """Masked row softmax of ``scale * e + bias`` — the attention chain's
+    transform (DESIGN.md §10).  ``bias`` is the flat per-edge additive bias
+    (0 when the spec has none); ``stats`` substitutes externally merged
+    ``(row_max, row_sum)`` as in :func:`chain_weights`.  Shared by the
+    unfused XLA attention chain and the attention VJP's recompute."""
+    z = float(scale) * e + bias
+    rr = jnp.where(valid, r, m)
+    rm, rs = _softmax_stats(z, r, valid, m) if stats is None else stats
+    p = jnp.where(valid, jnp.exp(z - jnp.take(rm, rr)), 0.0)
+    return p / jnp.maximum(jnp.take(rs, rr), SOFTMAX_EPS)
+
+
+def attn_stats_xla(rows, cols, q, k, bias, *, interpret=None, shape=None,
+                   scale=1.0, **_opts):
+    """Per-row softmax statistics of ``scale * QK^T + bias`` at the pattern's
+    nonzeros, each ``(m+1,)`` — the stats half of the two-pass attention
+    chain (merged across shards by the sharded backend)."""
+    m = int(shape[0])
+    r = rows.reshape(-1)
+    valid = r < m
+    e = _sddmm_flat(r, cols.reshape(-1), q, k, valid)
+    z = float(scale) * e + bias.reshape(-1).astype(jnp.float32)
+    return _softmax_stats(z, r, valid, m)
+
+
+def attn_chain_xla(rows, cols, q, k, bias, v, *, interpret=None, shape=None,
+                   scale=1.0, stats=None, **_opts):
+    """Unfused attention reference: SDDMM QK^T → masked softmax of
+    ``scale * e + bias`` → SpMM against V, with the edge stream materialized
+    in the graph (the score bytes the fused Pallas kernel keeps in VMEM)."""
+    m = int(shape[0])
+    r = rows.reshape(-1)
+    valid = r < m
+    e = _sddmm_flat(r, cols.reshape(-1), q, k, valid)
+    w = attn_weights(e, bias.reshape(-1).astype(jnp.float32), r, valid, m,
+                     scale, stats=stats)
+    bal = BalancedCOO(rows, cols, w.reshape(rows.shape), tuple(shape))
+    return spmm_nb_pr(bal, v)
+
+
 def sddmm_xla(rows, cols, a, b, *, interpret=None, shape=None, **_opts):
     """XLA SDDMM over a BalancedCOO-layout pattern: sample ``A @ B^T`` at the
     nonzero positions.  Returns an f32 slab shaped like ``rows`` (sentinel
@@ -320,6 +361,7 @@ registry.register("nb_pr", "xla", "balanced", _xla_nb(spmm_nb_pr))
 # execute_sddmm/execute_chain front doors call these
 registry.register("sddmm", "xla", "balanced", sddmm_xla)
 registry.register("chain", "xla", "balanced", chain_xla)
+registry.register("attn_chain", "xla", "balanced", attn_chain_xla)
 
 
 # ---------------------------------------------------------------------------

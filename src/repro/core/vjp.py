@@ -263,6 +263,60 @@ def _exec_chain_bwd(static, res, g):
 _exec_chain.defvjp(_exec_chain_fwd, _exec_chain_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_attn(static, rows, cols, q, k, bias, x):
+    """Block-sparse attention family (DESIGN.md §10): forward is the bound
+    physical ``attn_chain`` kernel (fused Pallas / unfused XLA); ``bias`` is
+    the additive per-edge bias as a balanced slab shaped like ``rows``."""
+    bound_fn = static[0]
+    return bound_fn(rows, cols, q, k, bias, x)
+
+
+def _exec_attn_fwd(static, rows, cols, q, k, bias, x):
+    return _exec_attn(static, rows, cols, q, k, bias, x), (rows, cols, q, k,
+                                                           bias, x)
+
+
+def _exec_attn_bwd(static, res, g):
+    """Recompute-and-differentiate, as in the chain backward: scores are
+    VMEM-only in the forward, so W is recomputed flat and the softmax
+    jacobian applied — dZ = W∘(dW − rowsum(W∘dW)), dE = scale·dZ,
+    dBias = dZ (the bias enters Z additively)."""
+    from .spmm import _sddmm_flat, attn_weights
+    _, (m, kdim), scale = static
+    rows, cols, q, k, bias, x = res
+    r, c = rows.reshape(-1), cols.reshape(-1)
+    valid = r < m
+    rr = jnp.where(valid, r, m)
+    sc = float(scale)
+    e = _sddmm_flat(r, c, q, k, valid)
+    bf = jnp.where(valid, bias.reshape(-1).astype(jnp.float32), 0.0)
+    w = attn_weights(e, bf, r, valid, m, sc)
+    g2, _ = _as_2d(g)
+    x2, _ = _as_2d(x)
+    gr = jnp.take(g2.astype(jnp.float32), jnp.where(valid, r, 0), axis=0)
+    gr = jnp.where(valid[:, None], gr, 0.0)
+    xc = jnp.take(x2.astype(jnp.float32), c, axis=0)
+    dw = jnp.sum(gr * xc, axis=-1)                       # SDDMM of (G, X)
+    s = jax.ops.segment_sum(w * dw, rr, num_segments=m + 1)
+    dz = jnp.where(valid, w * (dw - jnp.take(s, rr)), 0.0)
+    de = sc * dz
+    qg = jnp.take(q.astype(jnp.float32), jnp.where(valid, r, 0), axis=0)
+    kg = jnp.take(k.astype(jnp.float32), c, axis=0)
+    dq = jax.ops.segment_sum(de[:, None] * kg, rr, num_segments=m + 1)[:m]
+    dk = jax.ops.segment_sum(de[:, None] * qg, c, num_segments=kdim)
+    dx = jax.ops.segment_sum(w[:, None] * gr, c, num_segments=kdim)
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    dbias = dz.reshape(bias.shape).astype(
+        bias.dtype if jnp.issubdtype(jnp.result_type(bias), jnp.inexact)
+        else jnp.float32)
+    return (_float0(rows), _float0(cols), dq.astype(q.dtype),
+            dk.astype(k.dtype), dbias, dx)
+
+
+_exec_attn.defvjp(_exec_attn_fwd, _exec_attn_bwd)
+
+
 def _stream_to_balanced(stream: jax.Array, bal: BalancedCOO) -> jax.Array:
     """Pad the CSR-ordered nonzero stream to the tile grid (row-major order is
     preserved by construction, so this is a pure pad+reshape)."""

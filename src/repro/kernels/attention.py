@@ -1,0 +1,244 @@
+"""Fused block-sparse attention chain — SDDMM QK^T → masked softmax → SpMM·V.
+
+The attention sibling of ``fused_chain`` (DESIGN.md §10): per-(batch, head)
+block-sparse attention *is* the PR 7 chain with ``transform="softmax"`` and
+``alpha = head_dim**-0.5`` — QK^T at the mask's nonzeros is an SDDMM, the
+probability-weighted sum over V is an SpMM over the same pattern, and one
+``plan_visits`` schedule drives both.  What earns attention its own logical
+kernel (``attn_chain``) is the *additive bias hook*: relative-position or
+ALiBi-style per-edge biases enter the softmax as ``z = scale * e + bias``,
+so the bias stream rides the same balanced slab layout as the pattern and is
+read once per pass — scores themselves never touch HBM.
+
+Structure is identical to ``fused_chain``: pass 1 folds per-visit row
+``(max, sum-of-exp)`` into ``(mb, wb)`` stat blocks with the online-softmax
+update; pass 2 recomputes scores per column block, forms the weights in
+register, and accumulates ``w * V[cols]`` into the revisited output block.
+``attn_stats_pallas`` is exposed separately for the sharded cross-shard
+stats merge.  Rows the mask leaves empty keep ``(SOFTMAX_NEG, 0)`` stats and
+produce exact-zero output rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import registry
+from repro.core.formats import BalancedCOO
+from repro.core.selector import TileGeometry
+from repro.core.spmm import SOFTMAX_EPS, SOFTMAX_NEG
+
+from .fused_chain import _pad_2d, _tile_scores
+from .vsr import _pad_n, _prep_windows, plan_visits
+
+
+# ---------------------------------------------------------------------------
+# pass 1: online row (max, sum-of-exp) of scale * QK^T + bias over visits
+# ---------------------------------------------------------------------------
+
+def _attn_stats_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, q_ref,
+                       k_ref, bias_ref, rm_ref, rs_ref, *, m, wb, scale):
+    v = pl.program_id(0)
+    rows = rows_ref[0, :]
+    e, mask0 = _tile_scores(rows, cols_ref[0, :], q_ref, k_ref, m)
+    z = scale * e + bias_ref[0, :].astype(jnp.float32)
+    base = vb_ref[v] * wb
+    local = rows - base
+    mask = mask0 & (local >= 0) & (local < wb)
+    local = jnp.clip(local, 0, wb - 1)
+    t = rows.shape[0]
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (wb, t), 0)
+    sel = (local[None, :] == row_iota) & mask[None, :]
+    zt = jnp.where(sel, z[None, :], SOFTMAX_NEG)
+    m_tile = jnp.max(zt, axis=1)                              # (wb,)
+    p_tile = jnp.where(sel, jnp.exp(zt - m_tile[:, None]), 0.0)
+    s_tile = jnp.sum(p_tile, axis=1)
+
+    @pl.when(vs_ref[v] == 1)
+    def _():
+        rm_ref[0, :] = m_tile
+        rs_ref[0, :] = s_tile
+
+    @pl.when(vs_ref[v] == 0)
+    def _():
+        m_old = rm_ref[0, :]
+        m_new = jnp.maximum(m_old, m_tile)
+        rm_ref[0, :] = m_new
+        rs_ref[0, :] = (rs_ref[0, :] * jnp.exp(m_old - m_new)
+                        + s_tile * jnp.exp(m_tile - m_new))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "wb", "scale", "interpret"))
+def _attn_stats_call(vt, vb, vs, rows, cols, q, k, bias, *, m, wb, scale,
+                     interpret):
+    n_tiles, t = rows.shape
+    mq, d = q.shape
+    kk, _ = k.shape
+    mb = -(-m // wb)
+    n_visits = vt.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_visits,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((mq, d), lambda v, *pf: (0, 0)),
+            pl.BlockSpec((kk, d), lambda v, *pf: (0, 0)),
+            pl.BlockSpec((1, t), lambda v, vt, *pf: (vt[v], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, wb), lambda v, vt, vb, *pf: (vb[v], 0)),
+            pl.BlockSpec((1, wb), lambda v, vt, vb, *pf: (vb[v], 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_attn_stats_kernel, m=m, wb=wb, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((mb, wb), jnp.float32),
+                   jax.ShapeDtypeStruct((mb, wb), jnp.float32)],
+        interpret=interpret,
+    )(vt, vb, vs, rows, cols, q, k, bias)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: recompute scores, weight in register, accumulate w * V[cols]
+# ---------------------------------------------------------------------------
+
+def _attn_kernel(vt_ref, vb_ref, vs_ref, rows_ref, cols_ref, q_ref, k_ref,
+                 bias_ref, rm_ref, rs_ref, x_ref, o_ref, *, m, wb, scale):
+    v = pl.program_id(1)
+    rows = rows_ref[0, :]
+    cols = cols_ref[0, :]
+    e, mask0 = _tile_scores(rows, cols, q_ref, k_ref, m)
+    z = scale * e + bias_ref[0, :].astype(jnp.float32)
+    base = vb_ref[v] * wb
+    local = rows - base
+    mask = mask0 & (local >= 0) & (local < wb)
+    local = jnp.clip(local, 0, wb - 1)
+
+    # attention weight in register — the score never leaves VMEM
+    zc = jnp.where(mask, z - jnp.take(rm_ref[0, :], local), SOFTMAX_NEG)
+    w = jnp.exp(zc) / jnp.maximum(jnp.take(rs_ref[0, :], local), SOFTMAX_EPS)
+    w = jnp.where(mask, w, 0.0)
+
+    xg = jnp.take(x_ref[...], cols, axis=0)
+    p = w[:, None] * xg.astype(jnp.float32)
+    t = rows.shape[0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (wb, t), 0)
+    onehot = jnp.where((local[None, :] == row_iota) & mask[None, :], 1.0, 0.0)
+    contrib = jnp.dot(onehot, p, preferred_element_type=jnp.float32)
+
+    @pl.when(vs_ref[v] == 1)
+    def _():
+        o_ref[...] = contrib
+
+    @pl.when(vs_ref[v] == 0)
+    def _():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("m", "wb", "tile_n", "scale",
+                                             "interpret"))
+def _attn_apply_call(vt, vb, vs, rows, cols, q, k, bias, x, rm, rs, *, m, wb,
+                     tile_n, scale, interpret):
+    n_tiles, t = rows.shape
+    mq, d = q.shape
+    kk, _ = k.shape
+    kx, n_pad = x.shape
+    nb = n_pad // tile_n
+    mb = -(-m // wb)
+    n_visits = vt.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        # visits innermost: each output block's visits are consecutive grid
+        # steps — the revisited-block accumulation contract
+        grid=(nb, n_visits),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((mq, d), lambda j, v, *pf: (0, 0)),
+            pl.BlockSpec((kk, d), lambda j, v, *pf: (0, 0)),
+            pl.BlockSpec((1, t), lambda j, v, vt, *pf: (vt[v], 0)),
+            pl.BlockSpec((1, wb), lambda j, v, vt, vb, *pf: (vb[v], 0)),
+            pl.BlockSpec((1, wb), lambda j, v, vt, vb, *pf: (vb[v], 0)),
+            pl.BlockSpec((kx, tile_n), lambda j, v, *pf: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((wb, tile_n),
+                               lambda j, v, vt, vb, *pf: (vb[v], j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, m=m, wb=wb, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * wb, n_pad), jnp.float32),
+        interpret=interpret,
+    )(vt, vb, vs, rows, cols, q, k, bias, rm, rs, x)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def attn_stats_pallas(rows, cols, q, k, bias, *, interpret: bool | None = None,
+                      shape=None, scale=1.0, wb: int | None = None,
+                      visit_tile=None, visit_block=None, visit_start=None,
+                      **_opts):
+    """Pass 1 alone: ``(mb, wb)`` row (max, sum-of-exp) blocks of
+    ``scale * QK^T + bias``.  The sharded backend calls this per shard and
+    merges before pass 2."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = int(shape[0])
+    wb = TileGeometry().wb if wb is None else wb
+    qp = _pad_2d(jnp.asarray(q))
+    kp = _pad_2d(jnp.asarray(k))
+    return _attn_stats_call(visit_tile, visit_block, visit_start, rows, cols,
+                            qp, kp, bias, m=m, wb=wb, scale=float(scale),
+                            interpret=interpret)
+
+
+def attn_chain_pallas(rows, cols, q, k, bias, x, *,
+                      interpret: bool | None = None, shape=None, scale=1.0,
+                      visit_tile=None, visit_block=None, visit_start=None,
+                      wb: int | None = None, tile_n: int | None = None,
+                      stats=None, row_base=None, win=None, **_opts):
+    """Fused block-sparse attention over one visit schedule: scores are
+    formed, biased, softmaxed and consumed entirely in VMEM.  ``bias`` is a
+    balanced slab shaped like ``rows`` (pass zeros for no bias); ``stats``
+    substitutes externally merged softmax statistics."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    geom = TileGeometry()
+    wb = geom.wb if wb is None else wb
+    tile_n = geom.tile_n if tile_n is None else tile_n
+    m = int(shape[0])
+    if visit_tile is None or visit_block is None or visit_start is None:
+        bal = BalancedCOO(rows, cols, jnp.zeros(rows.shape, jnp.float32),
+                          (m, int(shape[1])))
+        visit_tile, visit_block, visit_start = map(
+            jnp.asarray, plan_visits(bal, wb))
+    x2 = x[:, None] if x.ndim == 1 else x
+    n = x2.shape[1]
+    xp = _pad_n(x2, tile_n)
+    qp = _pad_2d(jnp.asarray(q))
+    kp = _pad_2d(jnp.asarray(k))
+    if stats is None:
+        rm, rs = _attn_stats_call(visit_tile, visit_block, visit_start, rows,
+                                  cols, qp, kp, bias, m=m, wb=wb,
+                                  scale=float(scale), interpret=interpret)
+    else:
+        rm, rs = stats
+    y = _attn_apply_call(visit_tile, visit_block, visit_start, rows, cols,
+                         qp, kp, bias, xp, rm, rs, m=m, wb=wb, tile_n=tile_n,
+                         scale=float(scale), interpret=interpret)
+    y = y[:, :n].astype(x2.dtype)
+    return y[:, 0] if x.ndim == 1 else y
+
+
+registry.register("attn_chain", "pallas", "balanced", attn_chain_pallas,
+                  prep=_prep_windows)

@@ -479,6 +479,96 @@ def autotune_chain(csr: CSR, *, ns: tuple = (8, 32, 128), d: int = 32,
 
 
 # ---------------------------------------------------------------------------
+# attention crossover: when does the fused sparse-softmax chain win?
+# ---------------------------------------------------------------------------
+
+#: ``attn_fuse_min_seq`` sentinel for "the fused attention chain never wins"
+ATTN_NEVER = 1 << 30
+
+
+def modeled_traffic_attention(mask, head_dim: int = 64, *,
+                              geometry: TileGeometry | None = None,
+                              dtype_bytes: int = 4,
+                              index_bytes: int = 4) -> dict:
+    """Per-call modeled HBM bytes of block-sparse attention under both
+    executions (DESIGN.md §10): the chain model with ``transform="softmax"``
+    and Q/K/V all ``head_dim`` wide, plus the block-granularity view the
+    ISSUE's acceptance metric names — the unfused path materializes every
+    active score block (``2·nnz_blocks·bs²·dtype`` for the write + read of
+    the score round-trip), the fused path materializes none.  ``mask`` is an
+    ``AttentionMask`` (or anything with ``.csr``/``.nnz_blocks``/``.spec``)."""
+    csr = mask.csr
+    base = modeled_traffic_chain(csr, head_dim, head_dim,
+                                 transform="softmax", geometry=geometry,
+                                 dtype_bytes=dtype_bytes,
+                                 index_bytes=index_bytes)
+    bs = int(mask.spec.block)
+    nnz_blocks = int(mask.nnz_blocks)
+    base.update({
+        "seq": int(mask.seq),
+        "block": bs,
+        "nnz_blocks": nnz_blocks,
+        "fused_score_bytes": 0,
+        "unfused_score_bytes": int(2 * nnz_blocks * bs * bs * dtype_bytes),
+    })
+    return base
+
+
+def measure_attention(mask, d: int, *, fused: bool,
+                      backend: str = "pallas",
+                      thresholds: SelectorThresholds | None = None,
+                      interpret: bool | None = None,
+                      repeats: int = 2) -> float:
+    """Seconds per attention call with the fuse gate forced open
+    (``fused=True`` → the one-kernel Pallas attention chain) or shut
+    (``fused=False`` → the unfused XLA SDDMM+softmax+SpMM reference)."""
+    import dataclasses
+    from repro.core.plan import execute_attention
+    th = thresholds if thresholds is not None else default_thresholds()
+    th = dataclasses.replace(th,
+                             attn_fuse_min_seq=1 if fused else ATTN_NEVER)
+    csr = mask.csr
+    p = plan(csr, backend=backend, thresholds=th, n_hint=d, chain_op="attn")
+    m, k = csr.shape
+    q = jnp.ones((m, d), jnp.float32) * 0.01
+    kk = jnp.ones((k, d), jnp.float32) * 0.01
+    v = jnp.ones((k, d), jnp.float32)
+    f = jax.jit(lambda qq, kq, vv: execute_attention(
+        p, qq, kq, vv, interpret=interpret))
+    jax.block_until_ready(f(q, kk, v))    # compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(max(1, repeats)):
+        jax.block_until_ready(f(q, kk, v))
+    return (time.perf_counter() - t0) / max(1, repeats)
+
+
+def autotune_attention(specs, *, d: int = 64,
+                       backend: str = "pallas",
+                       thresholds: SelectorThresholds | None = None,
+                       interpret: bool | None = None,
+                       repeats: int = 2) -> SelectorThresholds:
+    """Measure the fused-attention crossover over a sweep of specs (sorted
+    by sequence length): the smallest ``seq`` at which the fused Pallas
+    chain beats the unfused reference becomes ``attn_fuse_min_seq``
+    (``ATTN_NEVER`` when fusion never wins).  Short sequences amortize the
+    visit-schedule setup and per-column-block recompute poorly; as ``seq``
+    grows the deleted score round-trip (``2·nnz_blocks·bs²·dtype``)
+    dominates.  Timing off-TPU is correctness-grade; run on real hardware
+    before persisting fleet-wide."""
+    import dataclasses
+    from repro.attention import build_mask
+    th = thresholds if thresholds is not None else default_thresholds()
+    for spec in sorted(specs, key=lambda s: s.seq):
+        mask = build_mask(spec)
+        kw = dict(backend=backend, thresholds=th, interpret=interpret,
+                  repeats=repeats)
+        if (measure_attention(mask, d, fused=True, **kw)
+                < measure_attention(mask, d, fused=False, **kw)):
+            return dataclasses.replace(th, attn_fuse_min_seq=int(spec.seq))
+    return dataclasses.replace(th, attn_fuse_min_seq=ATTN_NEVER)
+
+
+# ---------------------------------------------------------------------------
 # quant crossover: when does the narrowed value stream pay for its dequant?
 # ---------------------------------------------------------------------------
 

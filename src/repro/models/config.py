@@ -61,9 +61,16 @@ class ModelConfig:
     sparse_ffn: Optional[SparseFFNConfig] = None
 
     # attention pattern
-    attn_pattern: str = "full"      # full | local_global
-    window: int = 0                 # sliding window for local layers
+    attn_pattern: str = "full"      # full | local_global | block_sparse
+    window: int = 0                 # sliding window (tokens) for local layers
     local_per_global: int = 0       # gemma3: 5 local then 1 global
+    # block_sparse (DESIGN.md §10): train/prefill attention runs through the
+    # fused sparse-softmax chain on a block mask built from ``window`` (token
+    # window → block band; 0 → dense-fallback blocks).  Global/random block
+    # counts make it a BigBird-style pattern.
+    attn_block: int = 64            # block size of the attention mask
+    attn_global_blocks: int = 0     # BigBird global block rows/cols
+    attn_random_blocks: int = 0     # BigBird random blocks per block row
 
     # hybrid (zamba2): shared attention block every `shared_every` SSM layers
     shared_every: int = 0
@@ -97,7 +104,8 @@ class ModelConfig:
     @property
     def sub_quadratic(self) -> bool:
         """Eligible for the long_500k cell (see DESIGN.md §6)."""
-        return self.family in ("ssm", "hybrid") or self.attn_pattern == "local_global"
+        return (self.family in ("ssm", "hybrid")
+                or self.attn_pattern in ("local_global", "block_sparse"))
 
     def scaled(self, **kw) -> "ModelConfig":
         """Reduced copy for smoke tests (same family/topology, tiny dims)."""

@@ -211,6 +211,41 @@ def _split_heads(x, n, hd):
     return x.reshape(b, s, n, hd)
 
 
+def _block_sparse_spec(cfg: ModelConfig, seq: int, causal: bool):
+    """The attention mask spec a block_sparse config implies at this
+    sequence length: token window → block band (BigBird when global/random
+    blocks are configured), dense-fallback blocks when no window is set.
+    Specs are frozen and hashable, so every layer/head/call at one seq
+    shares a single PlanCache entry."""
+    from repro.attention import bigbird, dense_attention, sliding_window
+    block = cfg.attn_block or 64
+    if cfg.window > 0:
+        wb = -(-cfg.window // block)  # token window, ceil to blocks
+        if cfg.attn_global_blocks or cfg.attn_random_blocks:
+            return bigbird(seq, wb, cfg.attn_global_blocks,
+                           cfg.attn_random_blocks, block=block, causal=causal)
+        return sliding_window(seq, wb, block=block, causal=causal)
+    return dense_attention(seq, block=block, causal=causal)
+
+
+def _block_sparse_attention(qt, kt, vt, cfg: ModelConfig, causal: bool):
+    """Train/prefill attention through the fused sparse-softmax chain
+    (DESIGN.md §10).  qt (B, H, S, hd), kt/vt (B, Hk, S, hd) → (B, H, S, hd);
+    GQA repeats KV heads to match, the spec's plan is built once at trace
+    time and shared across the whole (B, H) fan-out."""
+    from repro.attention import sparse_attention
+    b, h, s, hd = qt.shape
+    hk = kt.shape[1]
+    if h != hk:
+        rep = h // hk
+        kt = jnp.repeat(kt, rep, axis=1)
+        vt = jnp.repeat(vt, rep, axis=1)
+    spec = _block_sparse_spec(cfg, s, causal)
+    out = sparse_attention(spec, qt.astype(jnp.float32),
+                           kt.astype(jnp.float32), vt.astype(jnp.float32))
+    return out.astype(qt.dtype)
+
+
 def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, positions,
                cache=None, window: int = 0, causal: bool = True,
                memory=None, rope: bool = True):
@@ -277,7 +312,12 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, positions,
             newv = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], tail_v.astype(cache["v"].dtype), 0, axis=2)
             cache = dict(k=newk, v=newv, length=cache["length"] + s)
-            out = flash_attention(qt, kt, vt, causal=causal, window=window)
+            if cfg.attn_pattern == "block_sparse":
+                out = _block_sparse_attention(qt, kt, vt, cfg, causal)
+            else:
+                out = flash_attention(qt, kt, vt, causal=causal, window=window)
+    elif cfg.attn_pattern == "block_sparse":
+        out = _block_sparse_attention(qt, kt, vt, cfg, causal)
     else:
         out = flash_attention(qt, kt, vt, causal=causal, window=window)
 

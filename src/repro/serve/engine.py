@@ -91,7 +91,18 @@ class ServeEngine:
         self.max_len = max_len
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+        if getattr(getattr(model, "cfg", None), "attn_pattern", "") == "block_sparse":
+            # long-context prefill runs block-sparse attention (DESIGN.md
+            # §10): scope the attention plan builds into THIS engine's cache
+            # so mask reuse across layers/requests shows up in its counters
+            from repro.attention import scoped_plan_cache
+
+            def _prefill(p, b):
+                with scoped_plan_cache(self.plan_cache):
+                    return model.prefill(p, b, max_len)
+            self._prefill = jax.jit(_prefill)
+        else:
+            self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
         self._decode = jax.jit(model.decode_step)
         self._caches: list = [None] * slots
         self._axes = _batch_axes(

@@ -3,8 +3,9 @@
 
 Everything outside ``src/repro/`` and ``tests/`` must go through the
 ``repro.api`` facade — direct imports of ``repro.core.plan`` (or of its
-front-door names via ``repro.core``) from benchmarks, examples, tools, or
-docs snippets fail CI.  Run from the repo root::
+front-door names via ``repro.core``) or of ``repro.attention`` from
+benchmarks, examples, tools, or docs snippets fail CI.  Run from the repo
+root::
 
     python tools/check_api_boundary.py
 """
@@ -17,10 +18,13 @@ import sys
 #: directories whose code may reach into the engine room
 ALLOWED_PREFIXES = ("src/repro/", "tests/")
 
-#: imports that pierce the facade
+#: imports that pierce the facade (``repro.attention`` is re-exported by
+#: ``repro.api`` in full — external code never needs the subpackage itself)
 BANNED = (
     re.compile(r"^\s*from\s+repro\.core\.plan\s+import\b"),
     re.compile(r"^\s*import\s+repro\.core\.plan\b"),
+    re.compile(r"^\s*from\s+repro\.attention\b"),
+    re.compile(r"^\s*import\s+repro\.attention\b"),
 )
 
 
@@ -60,7 +64,8 @@ def main() -> int:
         for v in violations:
             print(f"  {v}", file=sys.stderr)
         return 1
-    print("api boundary clean: repro.core.plan stays inside src/repro and tests")
+    print("api boundary clean: repro.core.plan and repro.attention stay "
+          "inside src/repro and tests")
     return 0
 
 
