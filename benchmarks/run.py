@@ -59,8 +59,8 @@ def main() -> None:
 
     from . import (adaptive_strategy, attention, csc_ablation,
                    fig6_kernel_perf, moe_dispatch, plan_cache, roofline,
-                   sddmm_chain, sharded_spmm, spill_fusion, vdl_ablation,
-                   vsr_ablation)
+                   sddmm_chain, serving, sharded_spmm, spill_fusion,
+                   vdl_ablation, vsr_ablation)
 
     benches = {
         "plan_cache": lambda: plan_cache.run(args.full),
@@ -77,6 +77,7 @@ def main() -> None:
         "spill_fusion": lambda: spill_fusion.run(args.full),
         "sddmm_chain": lambda: sddmm_chain.run(args.full),
         "attention": lambda: attention.run(args.full),
+        "serving": lambda: serving.run(args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -5,6 +5,11 @@ decoding: requests carrying a pinned expert topology decode through
 dispatch plans cached per topology (``engine.plan_cache``) — repeated
 routing patterns pay zero re-planning per tick.
 
+The hardening half (DESIGN.md §11): the engine's SLO telemetry
+(``engine.metrics()``) and fault tolerance — a deterministic injected
+plan-build failure degrades the affected request to the prep-free fallback
+path while resident lanes keep producing, visible in the counters.
+
     PYTHONPATH=src python examples/serve_moe.py
 """
 import sys
@@ -15,7 +20,7 @@ import jax
 
 from repro.configs import get_smoke
 from repro.models import Model
-from repro.serve import Request, ServeEngine
+from repro.serve import FaultInjector, FaultSpec, Request, ServeEngine
 
 
 def main():
@@ -51,6 +56,31 @@ def main():
     s = engine2.plan_cache.stats()
     print(f"pinned decode: {engine2.ticks} ticks, dispatch plans built "
           f"{s['builds']}x, reused {s['hits']}x (topology-keyed PlanCache)")
+
+    # --- SLO telemetry: what the engine measured about itself --------------
+    m = engine2.metrics()
+    t, lat = m["ticks"], m["latency"]
+    print(f"telemetry: tick p50={t['p50_ms']:.2f}ms p99={t['p99_ms']:.2f}ms "
+          f"occupancy={t['mean_occupancy']:.2f}  "
+          f"ttft p50={lat['ttft_p50_ms']:.1f}ms "
+          f"total p50={lat['total_p50_ms']:.1f}ms")
+    engine.close()
+    engine2.close()
+
+    # --- fault tolerance: plan builds fail, serving does not ---------------
+    faults = FaultInjector({"plan_build": FaultSpec(fail=10)}, seed=0)
+    engine3 = ServeEngine(model, params, slots=3, max_len=64, faults=faults,
+                          plan_timeout=0.5)
+    for i, p in enumerate(prompts):
+        engine3.submit(Request(rid=i, prompt=p, max_new=8, topology=(0, 3)))
+    done3 = engine3.run_until_done()
+    assert all(r.done for r in done3)   # every request still completed
+    c = engine3.metrics()["counters"]
+    print(f"faulted run: all {len(done3)} requests done via fallback — "
+          f"plan_build_failures={c.get('plan_build_failures', 0)} "
+          f"plan_retries={c.get('plan_retries', 0)} "
+          f"fallback_lanes={c.get('plan_fallback_lanes', 0)}")
+    engine3.close()
 
 
 if __name__ == "__main__":

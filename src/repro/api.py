@@ -42,8 +42,8 @@ from repro.attention import (AttentionMask, AttentionSpec, SparseAttention,
 from repro.core.cache import (DEFAULT_CACHE, PlanCache, cached_plan,
                               pattern_fingerprint, plan_key)
 from repro.core.formats import CSR, csr_from_dense
-from repro.core.plan import (PlanArtifact, PlanBuilder, execute,
-                             execute_attention, execute_chain,
+from repro.core.plan import (PlanArtifact, PlanBuildError, PlanBuilder,
+                             execute, execute_attention, execute_chain,
                              execute_pattern, execute_sddmm, plan)
 from repro.core.registry import backend_scope, default_backend
 from repro.core.selector import (SelectorThresholds, TileGeometry,
@@ -51,6 +51,9 @@ from repro.core.selector import (SelectorThresholds, TileGeometry,
                                  load_thresholds, save_thresholds)
 from repro.core.selector import calibrate as calibrate  # noqa: F401 (re-export)
 from repro.core.stats import MatrixStats
+from repro.runtime.retry import RetryPolicy, TaskOutcome, run_with_retry
+from repro.serve import (FaultInjector, FaultSpec, InjectedFault, Request,
+                         ServeEngine)
 
 __all__ = [
     "SparseMatrix", "sparse", "sparse_chain", "sddmm", "pattern_matmul",
@@ -64,6 +67,9 @@ __all__ = [
     "AttentionMask", "AttentionSpec", "SparseAttention", "attention_plan",
     "bigbird", "build_mask", "dense_attention", "from_block_mask",
     "scoped_plan_cache", "sliding_window", "sparse_attention",
+    # serving hardening (DESIGN.md §11)
+    "Request", "ServeEngine", "FaultInjector", "FaultSpec", "InjectedFault",
+    "RetryPolicy", "TaskOutcome", "run_with_retry", "PlanBuildError",
 ]
 
 

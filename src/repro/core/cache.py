@@ -156,6 +156,23 @@ class PlanCache:
                 self._entries.popitem(last=False)
                 self.evictions += 1
 
+    def put_built(self, key, value) -> None:
+        """Publish a value that was *built outside the lock* (background plan
+        prep: ``get_or_build`` holds the lock for the build's duration, which
+        would stall every tick-side cache read behind a slow worker build —
+        so workers build privately and the scheduler swaps the artifact in
+        here).  Counts as a build; a racing duplicate keeps the first copy so
+        compiled steps already closed over it stay valid."""
+        with self._lock:
+            self.builds += 1
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                return
+            self._entries[key] = value
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
     def clear(self) -> None:
         """Drop entries; counters survive (they describe lifetime traffic)."""
         with self._lock:

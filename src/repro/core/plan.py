@@ -60,6 +60,20 @@ from .vjp import (_exec_attn, _exec_balanced, _exec_bsr,  # noqa: F401 (re-expor
 # bound-kernel plumbing: identity-stable callables for the custom-VJP statics
 # ---------------------------------------------------------------------------
 
+
+class PlanBuildError(RuntimeError):
+    """A substrate construction failed.  Wraps the original exception with
+    the substrate kind and pattern shape so async plan prep (serve engine,
+    background calibration) can log/classify the failure without holding a
+    reference to the half-built plan; ``__cause__`` keeps the original."""
+
+    def __init__(self, kind: str, shape, cause: BaseException):
+        super().__init__(f"building substrate {kind!r} for pattern shape "
+                         f"{tuple(shape)} failed: "
+                         f"{type(cause).__name__}: {cause}")
+        self.kind = kind
+        self.shape = tuple(shape)
+
 #: content-addressed store of host-side prep artifacts.  ``PlanArtifact``
 #: references prep opts by digest (a hashable static) instead of carrying the
 #: bound callable, so two artifacts built from equal-topology matrices
@@ -315,44 +329,53 @@ class PlanBuilder:
         even when the first touch happens inside a jit trace of ``execute``."""
         sub = self._substrates.get(kind)
         if sub is None:
-            with jax.ensure_compile_time_eval():
-                if kind == "ell":
-                    sub = csr_to_ell(self.csr)
-                elif kind == "balanced":
-                    sub = csr_to_balanced(self.csr, tile=self.tile)
-                    if self.quant is not None:
-                        # per-tile quantization with the dynamic-range
-                        # fallback: a blown-up tile demotes the *whole plan*
-                        # to the unquantized stream (partial quantization
-                        # would split the bound-kernel static per tile)
-                        if quant_mod.check_tile_range(sub.vals):
-                            q, sc = quant_mod.quantize_stream(sub.vals,
-                                                              self.quant)
-                            sub = BalancedCOO(sub.rows, sub.cols, q,
-                                              sub.shape)
-                            self._quant_scales = sc
-                        else:
-                            self.quant = None
-                elif kind == "bsr":
-                    sub = csr_to_bsr(self.csr, *self.bsr_block)
-                elif kind in ("shard_ell", "shard_balanced"):
-                    if self.mesh is None or self.shard_spec is None:
-                        raise ValueError(
-                            "sharded substrates need a plan built with "
-                            "mesh=... (plan(csr, backend='sharded', mesh=m))")
-                    from . import shard as shard_mod
-                    sub = shard_mod.build_sharded_substrate(
-                        self.csr, self.shard_spec, self.mesh,
-                        inner_kind=kind[len("shard_"):], tile=self.tile,
-                        inner_backend=(self.inner_backend
-                                       or registry.default_backend()),
-                        quant=self.quant)
-                    if (self.quant is not None and kind == "shard_balanced"
-                            and sub.scales is None):
-                        self.quant = None    # range fallback fired per shard
-                else:
-                    raise ValueError(f"unknown substrate {kind!r}")
+            try:
+                sub = self._build_substrate(kind)
+            except ValueError:
+                raise            # usage errors keep their type (and message)
+            except Exception as e:
+                raise PlanBuildError(kind, self.csr.shape, e) from e
             self._substrates[kind] = sub
+        return sub
+
+    def _build_substrate(self, kind: str):
+        with jax.ensure_compile_time_eval():
+            if kind == "ell":
+                sub = csr_to_ell(self.csr)
+            elif kind == "balanced":
+                sub = csr_to_balanced(self.csr, tile=self.tile)
+                if self.quant is not None:
+                    # per-tile quantization with the dynamic-range
+                    # fallback: a blown-up tile demotes the *whole plan*
+                    # to the unquantized stream (partial quantization
+                    # would split the bound-kernel static per tile)
+                    if quant_mod.check_tile_range(sub.vals):
+                        q, sc = quant_mod.quantize_stream(sub.vals,
+                                                          self.quant)
+                        sub = BalancedCOO(sub.rows, sub.cols, q,
+                                          sub.shape)
+                        self._quant_scales = sc
+                    else:
+                        self.quant = None
+            elif kind == "bsr":
+                sub = csr_to_bsr(self.csr, *self.bsr_block)
+            elif kind in ("shard_ell", "shard_balanced"):
+                if self.mesh is None or self.shard_spec is None:
+                    raise ValueError(
+                        "sharded substrates need a plan built with "
+                        "mesh=... (plan(csr, backend='sharded', mesh=m))")
+                from . import shard as shard_mod
+                sub = shard_mod.build_sharded_substrate(
+                    self.csr, self.shard_spec, self.mesh,
+                    inner_kind=kind[len("shard_"):], tile=self.tile,
+                    inner_backend=(self.inner_backend
+                                   or registry.default_backend()),
+                    quant=self.quant)
+                if (self.quant is not None and kind == "shard_balanced"
+                        and sub.scales is None):
+                    self.quant = None    # range fallback fired per shard
+            else:
+                raise ValueError(f"unknown substrate {kind!r}")
         return sub
 
     @property

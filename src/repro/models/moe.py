@@ -60,6 +60,14 @@ def router(p: dict, x: jax.Array, cfg: MoEConfig):
     gate, idx = _topk_rows(gates_all, cfg.top_k)
     gate = constrain(gate, ("tokens", None))
     idx = constrain(idx, ("tokens", None))
+    ctx = getattr(_ROUTING, "ctx", None)
+    if ctx is not None:
+        # serving topology capture (armed only inside the engine's prefill
+        # trace): ship this layer's top-k choices to the host sink, tagged
+        # with the traced request id.  debug.callback is scan-safe — the
+        # layer stack's lax.scan carries it per iteration.
+        sink, tag = ctx
+        jax.debug.callback(sink.record_routing, tag, idx)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
     # load-balancing aux loss (Switch-style): E * <f, p>.  Counts via a
     # one-hot reduction (T stays sharded; only a (E,) partial-sum crosses
@@ -324,6 +332,130 @@ def current_pinned() -> Optional[PinnedDispatch]:
     return getattr(_PINNED, "plans", None)
 
 
+# ---------------------------------------------------------------------------
+# prefill-routing capture → pinned-topology derivation, and the drift check
+# that falls back to router-driven decode (the serving halves the ROADMAP
+# names; consumed by serve/engine.py)
+# ---------------------------------------------------------------------------
+
+class RoutingSink:
+    """Host-side collector for routing observations emitted from inside
+    compiled prefill/decode steps via ``jax.debug.callback``.
+
+    Two streams: per-request prefill top-k indices (keyed by an integer tag
+    the engine threads through the jitted prefill as a traced argument — the
+    trace is shared across requests, so the tag cannot be a closure) and
+    per-tick pinned-vs-router match fractions from ``moe_spmm_pinned``.
+    Thread-safe: callbacks fire on JAX runtime threads while the engine
+    drains on the tick thread (after ``jax.effects_barrier()``)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._routing: dict = {}            # tag -> [(T, k) int arrays]
+        self._drift: list = []              # [(T,) match fractions]
+
+    def record_routing(self, tag, idx) -> None:
+        with self._lock:
+            self._routing.setdefault(int(tag), []).append(
+                np.asarray(idx, np.int32))
+
+    def record_drift(self, match) -> None:
+        with self._lock:
+            self._drift.append(np.asarray(match, np.float32))
+
+    def drain_routing(self, tag) -> list:
+        with self._lock:
+            return self._routing.pop(int(tag), [])
+
+    def drain_drift(self) -> list:
+        with self._lock:
+            out, self._drift = self._drift, []
+            return out
+
+
+_ROUTING = threading.local()
+
+
+@contextlib.contextmanager
+def record_routing(sink: RoutingSink, tag):
+    """Arm the ``router()`` capture callback for this trace.  Enter *inside*
+    the jitted prefill wrapper so every retrace (new prompt length) re-arms;
+    ``tag`` is the traced request-id scalar the callback forwards."""
+    prev = getattr(_ROUTING, "ctx", None)
+    _ROUTING.ctx = (sink, tag)
+    try:
+        yield
+    finally:
+        _ROUTING.ctx = prev
+
+
+@contextlib.contextmanager
+def drift_scope(sink: RoutingSink):
+    """Arm the pinned-vs-router drift callback in ``moe_spmm_pinned`` for
+    this trace (the engine wraps its pinned decode step traces in this when
+    drift checking is enabled)."""
+    prev = getattr(_ROUTING, "drift", None)
+    _ROUTING.drift = sink
+    try:
+        yield
+    finally:
+        _ROUTING.drift = prev
+
+
+def dominant_topology(idx_arrays, num_experts: int, k: int) -> Optional[tuple]:
+    """Collapse captured prefill routing (a list of (T, k) expert-id arrays,
+    one per MoE layer) into the request's dominant top-k expert set: the k
+    most-frequently-chosen experts across all prompt tokens and layers, ties
+    broken by expert id for determinism.  Returns a sorted id tuple — the
+    per-lane pinned topology format ``Request.topology`` uses."""
+    if not idx_arrays:
+        return None
+    counts = np.zeros(num_experts, np.int64)
+    for a in idx_arrays:
+        counts += np.bincount(np.asarray(a).reshape(-1),
+                              minlength=num_experts)[:num_experts]
+    order = np.lexsort((np.arange(num_experts), -counts))
+    return tuple(sorted(int(i) for i in order[:k]))
+
+
+def dispatch_plan_spec(topology, cfg: MoEConfig, *,
+                       n_hint: int | None = None,
+                       backend: str | None = None):
+    """Resolve a topology into its cache key and build kwargs *without*
+    building.  The split exists for async plan prep: backend scope and
+    selector thresholds are thread-local / process state that must be
+    resolved on the scheduling (tick) thread — a worker thread resolving
+    them later could key one scope's artifacts under another's.  The
+    returned kwargs are self-contained and safe to ship to any thread's
+    ``build_dispatch_plans``."""
+    from repro.core import registry
+    from repro.core.cache import thresholds_version
+    from repro.core.selector import default_thresholds
+
+    topo = tuple(tuple(int(i) for i in row) for row in topology)
+    # resolve the backend AND thresholds before keying: the built artifacts
+    # freeze both (use_backend scope; selector decisions baked in), so an
+    # unresolved key would serve one scope's/calibration's artifacts to
+    # another — recalibration must invalidate (DESIGN.md §5.3)
+    backend = backend or registry.default_backend()
+    th = default_thresholds()
+    key = ("moe_pinned", topo, cfg.num_experts, cfg.top_k,
+           float(cfg.capacity_factor), backend, n_hint,
+           thresholds_version(th))
+    build_kwargs = dict(topo=topo, cfg=cfg, n_hint=n_hint, backend=backend,
+                        thresholds=th)
+    return key, build_kwargs
+
+
+def build_dispatch_plans(*, topo, cfg, n_hint, backend,
+                         thresholds=None) -> PinnedDispatch:
+    """Cache-free build half of ``dispatch_plan_spec`` — runs anywhere (the
+    engine's plan-prep workers call this off the tick path and publish via
+    ``PlanCache.put_built``)."""
+    return _build_pinned(topo, cfg, n_hint=n_hint, backend=backend,
+                         thresholds=thresholds)
+
+
 def dispatch_plans(topology, cfg: MoEConfig, *, cache=None,
                    n_hint: int | None = None,
                    backend: str | None = None) -> PinnedDispatch:
@@ -335,27 +467,15 @@ def dispatch_plans(topology, cfg: MoEConfig, *, cache=None,
     ``moe_spmm`` exactly, so pinning the router's own top-k reproduces the
     unpinned output bit-for-close.  Plans are cached in ``cache`` (a
     ``repro.core.cache.PlanCache``; the process default when None) keyed on
-    the topology itself — cheap to hash, no CSR fingerprinting per tick."""
+    the topology itself — cheap to hash, no CSR fingerprinting per tick.
+    Synchronous spelling of ``dispatch_plan_spec`` + ``build_dispatch_plans``
+    (the engine's sync mode and tests use this; async mode splits it)."""
     from repro.core.cache import DEFAULT_CACHE
 
-    from repro.core import registry
-    from repro.core.cache import thresholds_version
-    from repro.core.selector import default_thresholds
-
-    topo = tuple(tuple(int(i) for i in row) for row in topology)
+    key, kw = dispatch_plan_spec(topology, cfg, n_hint=n_hint,
+                                 backend=backend)
     cache = cache if cache is not None else DEFAULT_CACHE
-    # resolve the backend AND thresholds before keying: the built artifacts
-    # freeze both (use_backend scope; selector decisions baked in), so an
-    # unresolved key would serve one scope's/calibration's artifacts to
-    # another — recalibration must invalidate (DESIGN.md §5.3)
-    backend = backend or registry.default_backend()
-    th = default_thresholds()
-    key = ("moe_pinned", topo, cfg.num_experts, cfg.top_k,
-           float(cfg.capacity_factor), backend, n_hint,
-           thresholds_version(th))
-    return cache.get_or_build(
-        key, lambda: _build_pinned(topo, cfg, n_hint=n_hint, backend=backend,
-                                   thresholds=th))
+    return cache.get_or_build(key, lambda: build_dispatch_plans(**kw))
 
 
 def _build_pinned(topo: tuple, cfg: MoEConfig, *, n_hint, backend,
@@ -416,6 +536,19 @@ def moe_spmm_pinned(p: dict, x: jax.Array, cfg: MoEConfig,
                          f"tokens; got {t}")
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
                         p["w_router"].astype(jnp.float32))
+    sink = getattr(_ROUTING, "drift", None)
+    if sink is not None:
+        # drift check (armed in the engine's pinned decode trace): the full
+        # (T, E) logits are already here, so the router's true top-k is one
+        # _topk_rows away; per-token overlap with the pinned set goes to the
+        # host — strikes accumulate engine-side and unpin the lane.
+        _, true_idx = _topk_rows(logits, cfg.top_k)
+        pin_oh = jax.nn.one_hot(pinned.idx, cfg.num_experts,
+                                dtype=jnp.float32).sum(1)      # (T, E) 0/1
+        true_oh = jax.nn.one_hot(true_idx, cfg.num_experts,
+                                 dtype=jnp.float32).sum(1)
+        match = (pin_oh * true_oh).sum(-1) / cfg.top_k         # (T,)
+        jax.debug.callback(sink.record_drift, match)
     lg = jnp.take_along_axis(logits, pinned.idx, axis=1)       # (T, k)
     gate = jax.nn.softmax(lg, axis=-1)
     ein = execute(pinned.dispatch, x)                          # (E·C, d)

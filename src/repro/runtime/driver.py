@@ -29,6 +29,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.retry import RetryPolicy, TaskOutcome, run_with_retry
 
 
 @dataclasses.dataclass
@@ -43,6 +44,11 @@ class DriverConfig:
     #: path for the background selector-thresholds calibration (None = off);
     #: skipped when the file already exists (a fleet calibrates once)
     calibrate_to: Optional[str] = None
+    #: retry budget for the background calibration job (exponential backoff
+    #: via ``runtime.retry``; transient FS / measurement hiccups must not
+    #: leave the fleet permanently uncalibrated)
+    calibrate_retries: int = 2
+    calibrate_backoff: float = 0.5
 
 
 @dataclasses.dataclass
@@ -71,6 +77,12 @@ class TrainDriver:
         self._ema: Optional[float] = None
         self._measured = 0
         self._calibrate_thread: Optional[threading.Thread] = None
+        #: observable outcome of the background calibration: ``status`` is
+        #: "off" (not configured), "skipped" (thresholds file already
+        #: exists), "pending" while running, then "ok"/"failed" with the
+        #: attempt count and last error — no more silently swallowed
+        #: failures
+        self.calibration = TaskOutcome(status="off")
 
     def _install_sigterm(self):
         def handler(signum, frame):
@@ -81,23 +93,36 @@ class TrainDriver:
             pass  # non-main thread (tests)
 
     def _start_calibration(self):
-        """Fire-and-forget thresholds calibration (facade-level; tiny R-MAT
-        suite, seconds of CPU) — the calibrate-on-first-serve ROADMAP hook."""
-        if (self.cfg.calibrate_to is None
-                or os.path.exists(self.cfg.calibrate_to)
-                or self._calibrate_thread is not None):
+        """Background thresholds calibration (facade-level; tiny R-MAT
+        suite, seconds of CPU) — the calibrate-on-first-serve ROADMAP hook.
+        Runs through ``runtime.retry``: transient failures retry with
+        backoff, and the terminal outcome (status/attempts/error) lands in
+        ``self.calibration`` instead of being swallowed — calibration must
+        never take the run down, but a silent no-file is undiagnosable."""
+        if self.cfg.calibrate_to is None:
             return
+        if os.path.exists(self.cfg.calibrate_to):
+            self.calibration.status = "skipped"
+            return
+        if self._calibrate_thread is not None:
+            return
+        self.calibration.status = "pending"
+        policy = RetryPolicy(retries=self.cfg.calibrate_retries,
+                             backoff=self.cfg.calibrate_backoff)
 
         def job():
             import warnings
             from repro import api
-            try:
-                api.calibrate_backend(save_to=self.cfg.calibrate_to)
-            except Exception as e:  # calibration must never take the run down,
-                warnings.warn(      # but a silent no-file is undiagnosable
+            run_with_retry(
+                lambda: api.calibrate_backend(save_to=self.cfg.calibrate_to),
+                policy, outcome=self.calibration)
+            if not self.calibration.ok:
+                warnings.warn(
                     f"background thresholds calibration to "
-                    f"{self.cfg.calibrate_to!r} failed: {e!r}; continuing "
-                    "on current thresholds", stacklevel=1)
+                    f"{self.cfg.calibrate_to!r} failed after "
+                    f"{self.calibration.attempts} attempts "
+                    f"({self.calibration.error}); continuing on current "
+                    "thresholds", stacklevel=1)
 
         self._calibrate_thread = threading.Thread(target=job, daemon=True)
         self._calibrate_thread.start()

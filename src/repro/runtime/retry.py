@@ -1,0 +1,86 @@
+"""Bounded retry with exponential backoff — the one failure-handling
+primitive shared by the serving engine's background plan prep / prefill
+workers and the training driver's calibration job.
+
+The contract is deliberately small: ``run_with_retry`` executes a thunk up
+to ``retries + 1`` times, sleeping ``backoff * factor**i`` (capped at
+``max_backoff``) between failures, and always returns a ``TaskOutcome`` —
+it never raises.  Callers that run it on a worker thread share the outcome
+object with the scheduling thread (attempt counts and terminal status are
+visible mid-flight), and ``should_abort`` lets the scheduler cancel the
+remaining attempts of a build it has already given up on (e.g. a plan
+build that blew its timeout and whose request has degraded to the
+fallback path — finishing the retry loop would be wasted work)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """``retries`` extra attempts after the first, exponential backoff."""
+
+    retries: int = 2
+    backoff: float = 0.05          # seconds before the first retry
+    factor: float = 2.0
+    max_backoff: float = 2.0
+
+    def delay(self, failure: int) -> float:
+        """Backoff before retry number ``failure`` (1-based)."""
+        return float(min(self.backoff * self.factor ** max(failure - 1, 0),
+                         self.max_backoff))
+
+
+@dataclasses.dataclass
+class TaskOutcome:
+    """Mutable record of one retried task; shared across threads by design
+    (single-writer: only the executing thread mutates it)."""
+
+    status: str = "pending"        # pending | ok | failed | skipped | off
+    attempts: int = 0
+    error: Optional[str] = None
+    value: Any = None
+    elapsed: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+def run_with_retry(fn: Callable[[], Any],
+                   policy: RetryPolicy | None = None, *,
+                   outcome: TaskOutcome | None = None,
+                   should_abort: Callable[[], bool] | None = None,
+                   on_retry: Callable[[int, BaseException], None] | None = None,
+                   sleep: Callable[[float], None] = time.sleep) -> TaskOutcome:
+    """Run ``fn`` under ``policy``; return (never raise) a ``TaskOutcome``.
+
+    ``on_retry(n, exc)`` fires before backing off for retry ``n`` (metrics
+    hooks); ``should_abort()`` is consulted after each failure so an
+    abandoned task stops burning worker time; ``sleep`` is injectable for
+    deterministic tests."""
+    policy = policy if policy is not None else RetryPolicy()
+    out = outcome if outcome is not None else TaskOutcome()
+    t0 = time.monotonic()
+    while True:
+        out.attempts += 1
+        try:
+            out.value = fn()
+            out.status, out.error = "ok", None
+            break
+        except BaseException as e:  # noqa: BLE001 — outcome carries the error
+            out.error = f"{type(e).__name__}: {e}"
+            failures = out.attempts
+            aborted = should_abort is not None and should_abort()
+            if failures > policy.retries or aborted:
+                out.status = "failed"
+                if aborted:
+                    out.error += " (aborted)"
+                break
+            if on_retry is not None:
+                on_retry(failures, e)
+            sleep(policy.delay(failures))
+    out.elapsed = time.monotonic() - t0
+    return out

@@ -1,1 +1,6 @@
-from .engine import Request, ServeEngine
+from .engine import PlanPrep, Request, ServeEngine
+from .faults import FaultInjector, FaultSpec, InjectedFault
+from .metrics import EngineMetrics, RequestMetrics, percentile
+
+__all__ = ["PlanPrep", "Request", "ServeEngine", "FaultInjector", "FaultSpec",
+           "InjectedFault", "EngineMetrics", "RequestMetrics", "percentile"]

@@ -185,7 +185,11 @@ def _moe_engine(slots=3):
     cfg = get_smoke("olmoe-1b-7b")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return ServeEngine(model, params, slots=slots, max_len=32)
+    # sync mode: these tests pin the tick-synchronous counter discipline
+    # (build on the first decode tick, hit every tick after); the async
+    # engine's deferred builds are covered by tests/test_serving_hardening.py
+    return ServeEngine(model, params, slots=slots, max_len=32,
+                       async_prefill=False, async_plans=False)
 
 
 def test_serve_engine_repeated_topology_builds_once():
