@@ -1,0 +1,99 @@
+"""Guardrail overhead benchmark (DESIGN.md §12): what the robustness
+machinery costs when nothing is wrong.
+
+Three rows per suite matrix:
+
+1. **pattern validation** (host-side, per plan): ``validate_csr`` on a
+   clean matrix (the detection pass every guarded ``sparse()``/``plan()``
+   pays) and the full repair pipeline on an adversarially shuffled copy —
+   both one-off plan-time costs, amortized over every execute;
+2. **numeric sentinel** on the fused NB SpMM path (the PR 4 kernels):
+   wall time with ``sentinel="sanitize"`` (an in-graph ``where(isfinite)``
+   on the output) vs guardrails off, reported as an overhead fraction —
+   the CI target is <3%;
+3. **plan digest** (host-side, per cache publication): one
+   ``plan_digest`` over the built plan.
+
+Interpret-mode wall times off-TPU are correctness-grade; the overhead
+*ratio* between the on/off variants of the identical kernel is the
+portable signal.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import plan_digest, sparse, validate_csr
+from repro.core.formats import CSR
+from . import common
+from .common import csv_row, geomean, pick_suite, time_fn
+
+N = 64
+
+
+def _host_time(fn, iters: int = 5) -> float:
+    iters = 1 if common.QUICK else iters
+    fn()                                   # warm any lazy imports
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _shuffle_rows(csr, seed=0):
+    indptr = np.asarray(csr.indptr)
+    idx = np.asarray(csr.indices).copy()
+    dat = np.asarray(csr.data).copy()
+    r = np.random.default_rng(seed)
+    for i in range(int(csr.shape[0])):
+        lo, hi = int(indptr[i]), int(indptr[i + 1])
+        pm = r.permutation(hi - lo)
+        idx[lo:hi] = idx[lo:hi][pm]
+        dat[lo:hi] = dat[lo:hi][pm]
+    return CSR(csr.indptr, jnp.asarray(idx), jnp.asarray(dat), csr.shape)
+
+
+def run(full: bool = False):
+    suite = pick_suite(full)
+    n = 8 if common.QUICK else N
+    rng = np.random.default_rng(0)
+    rows, overheads = [], []
+    for name, csr in suite.items():
+        x = jnp.asarray(rng.standard_normal((int(csr.shape[1]), n))
+                        .astype(np.float32))
+
+        # 1. pattern validation: clean detection pass + adversarial repair
+        t_check = _host_time(lambda: validate_csr(csr, "check"))
+        shuffled = _shuffle_rows(csr)
+        t_repair = _host_time(lambda: validate_csr(shuffled, "repair"))
+        rows.append(csv_row(f"guardrails/{name}/validate_check",
+                            t_check * 1e6, f"nnz={csr.nnz}"))
+        rows.append(csv_row(f"guardrails/{name}/validate_repair",
+                            t_repair * 1e6, f"nnz={csr.nnz}"))
+
+        # 2. sentinel on vs off around the identical fused NB SpMM
+        A = sparse(csr, cache=False, backend="pallas")
+        t_off = time_fn(lambda: A.matmul(x, impl="nb_pr", interpret=True))
+        t_on = time_fn(lambda: A.matmul(x, impl="nb_pr", interpret=True,
+                                        sentinel="sanitize"))
+        overhead = (t_on - t_off) / max(t_off, 1e-12)
+        overheads.append(max(1.0 + overhead, 1e-6))
+        rows.append(csv_row(f"guardrails/{name}/n{n}/sentinel_off",
+                            t_off * 1e6))
+        rows.append(csv_row(f"guardrails/{name}/n{n}/sentinel_sanitize",
+                            t_on * 1e6, f"overhead={overhead * 100:+.2f}%"))
+
+        # 3. digest cost per cache publication
+        t_dig = _host_time(lambda: plan_digest(A.plan))
+        rows.append(csv_row(f"guardrails/{name}/plan_digest",
+                            t_dig * 1e6, f"nnz={csr.nnz}"))
+
+    mean_overhead = (geomean(overheads) - 1.0) * 100
+    rows.append(csv_row("guardrails/geomean_sentinel_overhead", 0.0,
+                        f"{mean_overhead:+.2f}%_target=<3%"))
+    return rows

@@ -58,9 +58,9 @@ def main() -> None:
         common.set_quick(True)
 
     from . import (adaptive_strategy, attention, csc_ablation,
-                   fig6_kernel_perf, moe_dispatch, plan_cache, roofline,
-                   sddmm_chain, serving, sharded_spmm, spill_fusion,
-                   vdl_ablation, vsr_ablation)
+                   fig6_kernel_perf, guardrails, moe_dispatch, plan_cache,
+                   roofline, sddmm_chain, serving, sharded_spmm,
+                   spill_fusion, vdl_ablation, vsr_ablation)
 
     benches = {
         "plan_cache": lambda: plan_cache.run(args.full),
@@ -78,6 +78,7 @@ def main() -> None:
         "sddmm_chain": lambda: sddmm_chain.run(args.full),
         "attention": lambda: attention.run(args.full),
         "serving": lambda: serving.run(args.full),
+        "guardrails": lambda: guardrails.run(args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

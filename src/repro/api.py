@@ -42,6 +42,9 @@ from repro.attention import (AttentionMask, AttentionSpec, SparseAttention,
 from repro.core.cache import (DEFAULT_CACHE, PlanCache, cached_plan,
                               pattern_fingerprint, plan_key)
 from repro.core.formats import CSR, csr_from_dense
+from repro.core.guardrails import (HEALTH, NumericFault, PatternError,
+                                   grad_scope, inspect_csr, plan_digest,
+                                   repair_csr, sentinel_scope, validate_csr)
 from repro.core.plan import (PlanArtifact, PlanBuildError, PlanBuilder,
                              execute, execute_attention, execute_chain,
                              execute_pattern, execute_sddmm, plan)
@@ -51,9 +54,10 @@ from repro.core.selector import (SelectorThresholds, TileGeometry,
                                  load_thresholds, save_thresholds)
 from repro.core.selector import calibrate as calibrate  # noqa: F401 (re-export)
 from repro.core.stats import MatrixStats
+from repro.runtime.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                  inject_faults)
 from repro.runtime.retry import RetryPolicy, TaskOutcome, run_with_retry
-from repro.serve import (FaultInjector, FaultSpec, InjectedFault, Request,
-                         ServeEngine)
+from repro.serve import Request, ServeEngine
 
 __all__ = [
     "SparseMatrix", "sparse", "sparse_chain", "sddmm", "pattern_matmul",
@@ -70,6 +74,10 @@ __all__ = [
     # serving hardening (DESIGN.md §11)
     "Request", "ServeEngine", "FaultInjector", "FaultSpec", "InjectedFault",
     "RetryPolicy", "TaskOutcome", "run_with_retry", "PlanBuildError",
+    # core guardrails (DESIGN.md §12)
+    "PatternError", "NumericFault", "validate_csr", "inspect_csr",
+    "repair_csr", "plan_digest", "sentinel_scope", "grad_scope",
+    "inject_faults", "health", "reset_health", "configure_guardrails",
 ]
 
 
@@ -170,10 +178,14 @@ class SparseMatrix:
     # -- execution ----------------------------------------------------------
     def matmul(self, x: jax.Array, *, impl: str | None = None,
                backend: str | None = None,
-               interpret: bool | None = None) -> jax.Array:
-        """``A @ x`` with per-call overrides (oracle/ablation mode)."""
+               interpret: bool | None = None,
+               sentinel: str | None = None) -> jax.Array:
+        """``A @ x`` with per-call overrides (oracle/ablation mode).
+        ``sentinel`` opts this call into post-execute non-finite detection
+        (``"raise"``/``"sanitize"``/``"fallback"``, DESIGN.md §12)."""
         return execute(self._plan, x, vals=self._values, impl=impl,
-                       backend=backend, interpret=interpret)
+                       backend=backend, interpret=interpret,
+                       sentinel=sentinel)
 
     def __matmul__(self, x: jax.Array) -> jax.Array:
         return self.matmul(x)
@@ -304,6 +316,7 @@ def sparse(a, *, backend: str | None = None, mesh=None,
            shard_axis: str | None = None, shard_kind: str | None = None,
            geometry: TileGeometry | None = None,
            quant: str | None = None, chain_op: str | None = None,
+           validate: str | None = None,
            cache: "PlanCache | bool | None" = True) -> SparseMatrix:
     """Build a first-class sparse operand from a CSR or a dense 2-D array.
 
@@ -330,8 +343,17 @@ def sparse(a, *, backend: str | None = None, mesh=None,
     ``chain_op`` tags the plan with the SDDMM→SpMM chain transform it will
     serve (``sparse_chain`` sets it automatically): chained and plain-SpMM
     plans over the same pattern key distinct cache entries, so retuning one
-    never evicts the other's compiled executables."""
+    never evicts the other's compiled executables.
+
+    ``validate`` (DESIGN.md §12) runs the guardrail pattern policy before
+    anything — fingerprinting, geometry lookup, caching — touches the CSR:
+    ``"check"`` warns about unsorted/duplicate/out-of-range/non-finite
+    defects, ``"repair"`` rebuilds through the canonical sort/coalesce/clip/
+    zero pipeline (so the repaired matrix caches under its clean
+    fingerprint), ``"strict"`` raises ``PatternError``."""
     csr, values = _as_csr(a)
+    if validate is not None and validate != "off":
+        csr, _ = validate_csr(csr, validate)
     if mesh is None:
         mesh, scoped_axis = scoped_mesh()
         shard_axis = shard_axis or scoped_axis
@@ -421,7 +443,7 @@ def sparse_chain(pattern, a, b, x, *, transform: str = "softmax",
 
 
 # ---------------------------------------------------------------------------
-# cache observability
+# cache + guardrail observability
 # ---------------------------------------------------------------------------
 
 def cache_stats(cache: PlanCache | None = None) -> dict:
@@ -430,6 +452,32 @@ def cache_stats(cache: PlanCache | None = None) -> dict:
 
 def clear_cache(cache: PlanCache | None = None) -> None:
     (cache or DEFAULT_CACHE).clear()
+
+
+def health() -> dict:
+    """Snapshot of the guardrail health registry (DESIGN.md §12):
+    ``{"counters": {...}, "breakers": {"backend:logical": {...}}}``.
+
+    Counters include the named demotions that used to be silent warnings
+    (``demote:quant_range``, ``demote:max_win_pallas_to_xla``,
+    ``demote:chain_fuse``, ``demote:attn_fuse``, ...), sentinel firings
+    (``sentinel:<site>``), kernel reroutes
+    (``kernel_reroute:<from>-><to>:<logical>``), and pattern
+    validation/repair events.  Breakers carry state / consecutive failures /
+    trips / recoveries per (backend, logical kernel)."""
+    return HEALTH.snapshot()
+
+
+def reset_health() -> None:
+    """Drop all guardrail counters and breakers (tests / fresh epochs)."""
+    HEALTH.reset()
+
+
+def configure_guardrails(*, threshold: int = 3, cooldown_s: float = 30.0) -> None:
+    """Set the circuit-breaker parameters: ``threshold`` consecutive kernel
+    failures trip a breaker open; after ``cooldown_s`` seconds it half-opens
+    and probes the primary backend once (DESIGN.md §12)."""
+    HEALTH.configure(threshold=threshold, cooldown_s=cooldown_s)
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from .formats import CSR
+from .guardrails import plan_digest, validate_csr
 from .selector import SelectorThresholds
 
 
@@ -99,18 +100,47 @@ class PlanCache:
     ``build`` thunk runs (counted in ``builds``) and the result is inserted,
     evicting the least-recently-used entry past ``capacity``.  Thread-safe —
     the serve engine and a background calibration job may share one cache.
+
+    Integrity (DESIGN.md §12): every entry is stored alongside a content
+    digest (``guardrails.plan_digest``).  ``integrity="publish"`` (default)
+    verifies an *existing* entry when a racing ``put_built`` re-publishes its
+    key — a corrupted first copy is replaced instead of kept; ``"hit"``
+    additionally verifies on every ``get``/``get_or_build`` hit, so a stale
+    or mutated cached plan is dropped and rebuilt, never executed.
+    Mismatches are counted in ``digest_mismatches``.  ``"off"`` skips
+    digesting entirely.
     """
 
-    def __init__(self, capacity: int = 128):
+    def __init__(self, capacity: int = 128, *, integrity: str = "publish"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if integrity not in ("off", "publish", "hit"):
+            raise ValueError(f"unknown integrity policy {integrity!r}; "
+                             "expected 'off', 'publish' or 'hit'")
         self.capacity = capacity
-        self._entries: OrderedDict = OrderedDict()
+        self.integrity = integrity
+        self._entries: OrderedDict = OrderedDict()   # key -> (value, digest)
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.builds = 0
+        self.digest_mismatches = 0
+
+    def _digest(self, value):
+        return None if self.integrity == "off" else plan_digest(value)
+
+    def _verify_hit(self, key) -> bool:
+        """Under ``integrity="hit"``: drop-and-report a corrupted entry.
+        Caller holds the lock.  Returns whether the entry survived."""
+        if self.integrity != "hit":
+            return True
+        value, digest = self._entries[key]
+        if plan_digest(value) == digest:
+            return True
+        self.digest_mismatches += 1
+        del self._entries[key]
+        return False
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -120,12 +150,13 @@ class PlanCache:
             return key in self._entries
 
     def get(self, key, default=None):
-        """Peek + LRU-touch without building; counts a hit or a miss."""
+        """Peek + LRU-touch without building; counts a hit or a miss (a
+        corrupted entry under ``integrity="hit"`` is dropped and missed)."""
         with self._lock:
-            if key in self._entries:
+            if key in self._entries and self._verify_hit(key):
                 self.hits += 1
                 self._entries.move_to_end(key)
-                return self._entries[key]
+                return self._entries[key][0]
             self.misses += 1
             return default
 
@@ -133,16 +164,18 @@ class PlanCache:
         """Return the cached value for ``key``, building (and counting) it on
         a miss.  ``build`` runs outside the lock-held fast path but inside
         the lock overall — plan construction is host-side and the engine's
-        per-tick caller is single-threaded; contention is the rare case."""
+        per-tick caller is single-threaded; contention is the rare case.
+        Under ``integrity="hit"`` a corrupted entry is rebuilt, never
+        returned."""
         with self._lock:
-            if key in self._entries:
+            if key in self._entries and self._verify_hit(key):
                 self.hits += 1
                 self._entries.move_to_end(key)
-                return self._entries[key]
+                return self._entries[key][0]
             self.misses += 1
             value = build()
             self.builds += 1
-            self._entries[key] = value
+            self._entries[key] = (value, self._digest(value))
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
                 self.evictions += 1
@@ -150,7 +183,7 @@ class PlanCache:
 
     def put(self, key, value) -> None:
         with self._lock:
-            self._entries[key] = value
+            self._entries[key] = (value, self._digest(value))
             self._entries.move_to_end(key)
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
@@ -162,13 +195,20 @@ class PlanCache:
         would stall every tick-side cache read behind a slow worker build —
         so workers build privately and the scheduler swaps the artifact in
         here).  Counts as a build; a racing duplicate keeps the first copy so
-        compiled steps already closed over it stay valid."""
+        compiled steps already closed over it stay valid — unless the first
+        copy fails its digest check (``integrity`` != "off"), in which case
+        the corrupted entry is replaced by the fresh build."""
         with self._lock:
             self.builds += 1
             if key in self._entries:
-                self._entries.move_to_end(key)
-                return
-            self._entries[key] = value
+                old, digest = self._entries[key]
+                if (self.integrity == "off"
+                        or plan_digest(old) == digest):
+                    self._entries.move_to_end(key)
+                    return
+                self.digest_mismatches += 1
+            self._entries[key] = (value, self._digest(value))
+            self._entries.move_to_end(key)
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
                 self.evictions += 1
@@ -181,11 +221,13 @@ class PlanCache:
     def reset_stats(self) -> None:
         with self._lock:
             self.hits = self.misses = self.evictions = self.builds = 0
+            self.digest_mismatches = 0
 
     def stats(self) -> dict:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions, "builds": self.builds,
+                    "digest_mismatches": self.digest_mismatches,
                     "size": len(self._entries), "capacity": self.capacity}
 
     def __repr__(self) -> str:
@@ -204,6 +246,7 @@ def cached_plan(csr: CSR, *, cache: PlanCache | None = None,
                 thresholds: SelectorThresholds | None = None,
                 mesh=None, tile: int | None = None,
                 bsr_block: tuple = (8, 128),
+                validate: str | None = None,
                 **plan_kwargs):
     """``plan()`` through a ``PlanCache``: same topology + shape + backend +
     mesh + thresholds → the same ``PlanBuilder`` (whose lazily-built
@@ -211,7 +254,13 @@ def cached_plan(csr: CSR, *, cache: PlanCache | None = None,
 
     Values are *not* part of the key — a hit may return a plan baked with
     different values than ``csr.data``; callers that care (the facade does)
-    compare and pass a live stream at execute time."""
+    compare and pass a live stream at execute time.
+
+    ``validate`` runs the guardrail pattern policy *before* the key is
+    computed, so a repaired matrix keys (and caches) under its canonical
+    sorted/coalesced fingerprint — the same entry a pre-cleaned input hits."""
+    if validate is not None and validate != "off":
+        csr, _ = validate_csr(csr, validate)
     from . import registry
     from .plan import plan as build_plan
     from .selector import default_thresholds

@@ -45,10 +45,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.faults import consult
+
+from . import guardrails
 from . import quant as quant_mod
 from . import registry
 from .formats import (BSR, CSR, ELL, BalancedCOO, csr_to_balanced, csr_to_bsr,
                       csr_to_ell, row_ids_from_indptr)
+from .guardrails import HEALTH, NumericFault
 from .selector import (SelectorThresholds, TileGeometry, default_thresholds,
                        select_kernel)
 from .stats import MatrixStats, balanced_tile_span, matrix_stats
@@ -311,6 +315,11 @@ class PlanBuilder:
     # per call, but cached plans for different chain ops must not alias
     # (their prep/bound caches hold transform-specific partials).
     chain_op: str | None = None
+    # default numeric-sentinel policy for executes of this plan (DESIGN.md
+    # §12): None defers to the per-call argument / the ambient
+    # ``guardrails.sentinel_scope``; "raise" additionally turns the quant
+    # dynamic-range demotion into a ``NumericFault``
+    sentinel: str | None = None
     _substrates: dict = dataclasses.field(default_factory=dict, repr=False)
     _quant_scales: Any = dataclasses.field(default=None, repr=False)
     _opts: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -329,10 +338,11 @@ class PlanBuilder:
         even when the first touch happens inside a jit trace of ``execute``."""
         sub = self._substrates.get(kind)
         if sub is None:
+            consult("plan_build")    # scoped fault site (runtime/faults.py)
             try:
                 sub = self._build_substrate(kind)
-            except ValueError:
-                raise            # usage errors keep their type (and message)
+            except (ValueError, NumericFault):
+                raise    # usage errors / sentinel raises keep their type
             except Exception as e:
                 raise PlanBuildError(kind, self.csr.shape, e) from e
             self._substrates[kind] = sub
@@ -355,7 +365,14 @@ class PlanBuilder:
                         sub = BalancedCOO(sub.rows, sub.cols, q,
                                           sub.shape)
                         self._quant_scales = sc
+                    elif self.sentinel == "raise":
+                        raise NumericFault(
+                            "quantized value stream exceeds the per-tile "
+                            f"dynamic range ({self.quant!r}); plan with "
+                            "quant=None or sentinel!='raise' to demote "
+                            "instead")
                     else:
+                        HEALTH.bump("demote:quant_range")
                         self.quant = None
             elif kind == "bsr":
                 sub = csr_to_bsr(self.csr, *self.bsr_block)
@@ -373,6 +390,7 @@ class PlanBuilder:
                     quant=self.quant)
                 if (self.quant is not None and kind == "shard_balanced"
                         and sub.scales is None):
+                    HEALTH.bump("demote:quant_range")
                     self.quant = None    # range fallback fired per shard
             else:
                 raise ValueError(f"unknown substrate {kind!r}")
@@ -438,6 +456,7 @@ class PlanBuilder:
         key = (entry.logical, entry.backend, self.quant)
         opts = self._opts.get(key)
         if opts is None:
+            consult("substrate_prep")    # scoped fault site
             if entry.prep is None:
                 opts = {}
             else:
@@ -586,7 +605,9 @@ def plan(csr: CSR, *, n_hint: int | None = None,
          inner_backend: str | None = None,
          geometry: TileGeometry | None = None,
          quant: str | None = None,
-         chain_op: str | None = None) -> PlanBuilder:
+         chain_op: str | None = None,
+         validate: str | None = None,
+         sentinel: str | None = None) -> PlanBuilder:
     """Offline planning front door.
 
     ``n_hint``: anticipated N of the dense operand; when given, the substrate
@@ -622,7 +643,19 @@ def plan(csr: CSR, *, n_hint: int | None = None,
 
     ``chain_op`` (DESIGN.md §9) tags the plan with the SDDMM→SpMM chain
     transform it will serve — a cache-segmentation key for ``PlanCache``, not
-    a behavioural switch (``execute_chain`` takes the transform per call)."""
+    a behavioural switch (``execute_chain`` takes the transform per call).
+
+    ``validate`` (DESIGN.md §12): ``"check"``/``"repair"``/``"strict"`` run
+    the pattern through ``guardrails.validate_csr`` before any substrate is
+    baked — warn about / fix / reject unsorted rows, duplicate or
+    out-of-range indices, non-finite values, and indptr damage.  ``None``
+    (or ``"off"``) trusts the input, matching prior behaviour.  ``sentinel``
+    sets the plan's default numeric-sentinel policy for ``execute``."""
+    if validate is not None and validate != "off":
+        csr, _ = guardrails.validate_csr(csr, validate)
+    if sentinel is not None and sentinel not in guardrails.SENTINEL_POLICIES:
+        raise ValueError(f"unknown sentinel policy {sentinel!r}; expected "
+                         f"one of {guardrails.SENTINEL_POLICIES}")
     if backend is None:
         backend = "sharded" if mesh is not None else registry.default_backend()
     th = thresholds if thresholds is not None else default_thresholds()
@@ -633,6 +666,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         if not quant_mod.supports(quant):
             warnings.warn(f"quant={quant!r} is not supported by this jax "
                           "build; demoting to 'int8'", stacklevel=2)
+            HEALTH.bump("demote:fp8_to_int8")
             quant = "int8"
         if n_hint is not None and n_hint < th.quant_min_n:
             quant = None    # selector crossover: not worth it at this N
@@ -655,6 +689,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
                 f"max_win={th.max_win} (empty-row gaps inflate the spill "
                 "window without adding work); falling back to the xla "
                 "backend", stacklevel=2)
+            HEALTH.bump("demote:max_win_pallas_to_xla")
             backend = "xla"
     elif (backend == "sharded"
           and (inner_backend or registry.default_backend()) == "pallas"):
@@ -667,6 +702,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
                 f"worst balanced tile spans {span} rows > thresholds."
                 f"max_win={th.max_win}; sharded plan falls back to the xla "
                 "inner backend", stacklevel=2)
+            HEALTH.bump("demote:max_win_sharded_inner_to_xla")
             inner_backend = "xla"
     spec = None
     if backend == "sharded":
@@ -689,6 +725,7 @@ def plan(csr: CSR, *, n_hint: int | None = None,
         inner_backend=inner_backend,
         quant=quant,
         chain_op=chain_op,
+        sentinel=sentinel,
     )
     if n_hint is not None:
         entry = p.entry(p.select(n_hint))
@@ -775,31 +812,26 @@ def _run_entry(entry: registry.KernelEntry, sub, bound, x, vals, nnz: int,
     raise ValueError(f"substrate {entry.substrate!r} has no differentiable path")
 
 
-def execute(p: "PlanBuilder | PlanArtifact", x: jax.Array, *,
-            vals: jax.Array | None = None, impl: str | None = None,
-            backend: str | None = None,
-            interpret: bool | None = None) -> jax.Array:
-    """Run the planned SpMV/SpMM: ``y = A @ x``.
+def _demoted_inner(p: PlanBuilder) -> PlanBuilder:
+    """The sharded plan's one rung down the degradation ladder: the same
+    matrix / spec / mesh with the per-shard kernels demoted to the xla
+    reference.  Cached on the parent (``_opts`` is a host-side cache dict);
+    every mutable cache is replaced with a fresh one — ``dataclasses.replace``
+    would otherwise *share* the dicts, and the demoted replica's shard
+    substrates (inner_backend='xla') must not alias the parent's."""
+    cached = p._opts.get(("demoted_inner",))
+    if cached is None:
+        cached = dataclasses.replace(
+            p, inner_backend="xla", _substrates={}, _quant_scales=None,
+            _opts={}, _bound={}, _ell_lens=None, _ell_src=None,
+            _bsr_map=None, _bsr_brow=None, _topology=None)
+        p._opts[("demoted_inner",)] = cached
+    return cached
 
-    Accepts a ``PlanBuilder`` (host object, closed over by jit) or a
-    ``PlanArtifact`` (pytree, may itself be a traced jit/scan argument).
-    Differentiable w.r.t. ``x`` and (when given) ``vals`` — a live CSR-ordered
-    nonzero stream overriding the values baked into the plan's substrates,
-    which is how trainable sparse weights ride the adaptive dispatch.  ``impl``
-    forces a logical kernel (oracle / ablation mode); ``backend`` overrides
-    the plan's backend for this call (builders only — artifacts are frozen
-    per backend); ``interpret`` is forwarded to Pallas backends."""
-    if impl in ("sddmm", "chain"):
-        raise ValueError(f"impl {impl!r} takes dense operands, not a value "
-                         "stream; use execute_sddmm / execute_chain")
-    if isinstance(p, PlanArtifact):
-        return _execute_artifact(p, x, vals=vals, impl=impl, backend=backend,
-                                 interpret=interpret)
-    if vals is not None and vals.size != p.csr.nnz:
-        raise ValueError(f"vals stream has {vals.size} entries but the "
-                         f"matrix has {p.csr.nnz} nonzeros")
-    n = 1 if x.ndim == 1 else x.shape[1]
-    name = impl or p.select(n)
+
+def _builder_exec(p: PlanBuilder, name: str, backend: str | None, x, vals,
+                  interpret):
+    """The unguarded builder dispatch: resolve → substrate → bind → run."""
     entry = p.entry(name, backend)
     sub = p.substrate(entry.substrate)
     bound = p.bound_kernel(entry, interpret)
@@ -810,7 +842,64 @@ def execute(p: "PlanBuilder | PlanArtifact", x: jax.Array, *,
                       lambda name: builder_aux[name]())
 
 
-def _execute_artifact(art: PlanArtifact, x, *, vals, impl, backend, interpret):
+def execute(p: "PlanBuilder | PlanArtifact", x: jax.Array, *,
+            vals: jax.Array | None = None, impl: str | None = None,
+            backend: str | None = None,
+            interpret: bool | None = None,
+            sentinel: str | None = None) -> jax.Array:
+    """Run the planned SpMV/SpMM: ``y = A @ x``.
+
+    Accepts a ``PlanBuilder`` (host object, closed over by jit) or a
+    ``PlanArtifact`` (pytree, may itself be a traced jit/scan argument).
+    Differentiable w.r.t. ``x`` and (when given) ``vals`` — a live CSR-ordered
+    nonzero stream overriding the values baked into the plan's substrates,
+    which is how trainable sparse weights ride the adaptive dispatch.  ``impl``
+    forces a logical kernel (oracle / ablation mode); ``backend`` overrides
+    the plan's backend for this call (builders only — artifacts are frozen
+    per backend); ``interpret`` is forwarded to Pallas backends.
+
+    Guardrails (DESIGN.md §12): the dispatch runs under the per-(backend,
+    logical-kernel) circuit breaker — kernel failures re-route one rung down
+    the demotion ladder (pallas/bsr→xla; sharded demotes its inner backend)
+    and trip the breaker after repeated failures.  ``sentinel`` opts into
+    post-execute non-finite detection (``"raise"``/``"sanitize"``/
+    ``"fallback"``; default: the plan's ``sentinel`` or the ambient
+    ``guardrails.sentinel_scope``)."""
+    if impl in ("sddmm", "chain"):
+        raise ValueError(f"impl {impl!r} takes dense operands, not a value "
+                         "stream; use execute_sddmm / execute_chain")
+    if isinstance(p, PlanArtifact):
+        return _execute_artifact(p, x, vals=vals, impl=impl, backend=backend,
+                                 interpret=interpret, sentinel=sentinel)
+    if vals is not None and vals.size != p.csr.nnz:
+        raise ValueError(f"vals stream has {vals.size} entries but the "
+                         f"matrix has {p.csr.nnz} nonzeros")
+    n = 1 if x.ndim == 1 else x.shape[1]
+    name = impl or p.select(n)
+    eff = backend or p.backend
+    policy = (sentinel if sentinel is not None
+              else (p.sentinel or guardrails.active_sentinel()))
+    fb, fb_name = None, None
+    if eff == "sharded":
+        if (p.inner_backend or registry.default_backend()) != "xla":
+            fb = lambda: _builder_exec(_demoted_inner(p), name, None,  # noqa: E731
+                                       x, vals, interpret)
+            fb_name = "sharded/xla-inner"
+    else:
+        demoted = registry.DEMOTION.get(eff)
+        if demoted is not None:
+            fb = lambda: _builder_exec(p, name, demoted, x, vals,  # noqa: E731
+                                       interpret)
+            fb_name = demoted
+    y = guardrails.guarded_call(
+        name, eff, lambda: _builder_exec(p, name, backend, x, vals, interpret),
+        fallback=fb, fallback_name=fb_name)
+    return guardrails.apply_sentinel(y, policy, site=f"execute:{name}",
+                                     fallback=fb)
+
+
+def _execute_artifact(art: PlanArtifact, x, *, vals, impl, backend, interpret,
+                      sentinel=None):
     meta = art.meta
     if backend is not None and backend != meta.backend:
         raise ValueError(
@@ -828,10 +917,31 @@ def _execute_artifact(art: PlanArtifact, x, *, vals, impl, backend, interpret):
             f"artifact carries substrates {tuple(art.substrates)} but kernel "
             f"{name!r} needs {entry.substrate!r}; finalize with n=/impl=/"
             "kernels= covering it")
-    bound = _bound_kernel(entry, interpret,
-                          dict(meta.prep).get(entry.logical))
-    return _run_entry(entry, sub, bound, x, vals, meta.nnz,
-                      lambda name: art.aux[name])
+
+    def run(entry_, sub_):
+        bound = _bound_kernel(entry_, interpret,
+                              dict(meta.prep).get(entry_.logical))
+        return _run_entry(entry_, sub_, bound, x, vals, meta.nnz,
+                          lambda name: art.aux[name])
+
+    # artifacts are frozen: a rung down exists only when the fallback
+    # backend's substrate was finalized in (xla consumes the same ell/
+    # balanced formats pallas does, so 2x2 artifacts usually carry it)
+    fb = None
+    demoted = registry.DEMOTION.get(meta.backend)
+    if demoted is not None:
+        try:
+            fbe = registry.resolve(name, demoted)
+            fbs = art.substrates.get(fbe.substrate)
+        except KeyError:
+            fbs = None
+        if fbs is not None and (fbe.differentiable or vals is None):
+            fb = lambda: run(fbe, fbs)   # noqa: E731
+    policy = sentinel if sentinel is not None else guardrails.active_sentinel()
+    y = guardrails.guarded_call(name, meta.backend, lambda: run(entry, sub),
+                                fallback=fb, fallback_name=demoted)
+    return guardrails.apply_sentinel(y, policy, site=f"execute:{name}",
+                                     fallback=fb)
 
 
 # ---------------------------------------------------------------------------
@@ -891,6 +1001,26 @@ def _chain_bound(p: PlanBuilder, entry: registry.KernelEntry, interpret,
     return fn
 
 
+def _chain_fallback(p: PlanBuilder, backend: str, run, extra: dict):
+    """One rung down the degradation ladder for the chain-family entries
+    (sddmm / chain / attention), as a ``(thunk, name)`` pair for
+    ``guardrails.guarded_call`` — ``(None, None)`` at the bottom.  Single-
+    device accelerated backends re-resolve on their ``registry.DEMOTION``
+    target; a sharded plan demotes its per-shard inner backend through the
+    ``inner_backend`` extra (the shard substrate is inner-agnostic, so no
+    rebuild).  ``run(backend, extra)`` is the caller's dispatch closure."""
+    if backend == "sharded":
+        if (p.inner_backend or registry.default_backend()) != "xla" \
+                and extra.get("inner_backend") != "xla":
+            return (lambda: run("sharded", dict(extra, inner_backend="xla")),
+                    "sharded/xla-inner")
+        return None, None
+    demoted = registry.DEMOTION.get(backend)
+    if demoted is None:
+        return None, None
+    return (lambda: run(demoted, dict(extra))), demoted
+
+
 def execute_sddmm(p: PlanBuilder, a: jax.Array, b: jax.Array, *,
                   backend: str | None = None,
                   interpret: bool | None = None) -> jax.Array:
@@ -911,22 +1041,30 @@ def execute_sddmm(p: PlanBuilder, a: jax.Array, b: jax.Array, *,
     if a.shape[0] != m or b.shape[0] != k:
         raise ValueError(f"operand rows {a.shape[0]}/{b.shape[0]} do not "
                          f"match the pattern shape {(m, k)}")
-    entry = p.entry("sddmm", backend)
-    rows, cols = _chain_pattern(p, entry)
-    bound = _chain_bound(p, entry, interpret, {})
-    slab = _exec_sddmm((bound, (m, k)), rows, cols, a, b)
-    nnz = p.csr.nnz
-    if entry.substrate == "shard_balanced":
-        # stacked per-shard slabs scatter back to the global stream through
-        # the substrate's src map (each nonzero lands in exactly one slot)
-        sub = p.substrate("shard_balanced")
-        src = sub.src.reshape(-1)
-        e = jnp.where(src >= 0, slab.reshape(-1), 0.0)
-        return jax.ops.segment_sum(e, jnp.where(src >= 0, src, nnz),
-                                   num_segments=nnz + 1)[:nnz]
-    # balanced tiling is row-major over the CSR stream: flatten-and-trim
-    # restores CSR order
-    return slab.reshape(-1)[:nnz]
+    eff = backend or p.backend
+
+    def run(bk, ex):
+        entry = p.entry("sddmm", bk)
+        rows, cols = _chain_pattern(p, entry)
+        bound = _chain_bound(p, entry, interpret, dict(ex))
+        slab = _exec_sddmm((bound, (m, k)), rows, cols, a, b)
+        nnz = p.csr.nnz
+        if entry.substrate == "shard_balanced":
+            # stacked per-shard slabs scatter back to the global stream
+            # through the substrate's src map (each nonzero lands in
+            # exactly one slot)
+            sub = p.substrate("shard_balanced")
+            src = sub.src.reshape(-1)
+            e = jnp.where(src >= 0, slab.reshape(-1), 0.0)
+            return jax.ops.segment_sum(e, jnp.where(src >= 0, src, nnz),
+                                       num_segments=nnz + 1)[:nnz]
+        # balanced tiling is row-major over the CSR stream: flatten-and-trim
+        # restores CSR order
+        return slab.reshape(-1)[:nnz]
+
+    fb, fb_name = _chain_fallback(p, eff, run, {})
+    return guardrails.guarded_call("sddmm", eff, lambda: run(backend, {}),
+                                   fallback=fb, fallback_name=fb_name)
 
 
 def execute_chain(p: PlanBuilder, a: jax.Array, b: jax.Array, x: jax.Array,
@@ -967,15 +1105,24 @@ def execute_chain(p: PlanBuilder, a: jax.Array, b: jax.Array, x: jax.Array,
     # the per-column-block score recompute costs more than the 2*nnz edge
     # bytes it saves, so run the unfused two-kernel xla reference instead
     if backend == "pallas" and n < p.thresholds.chain_fuse_min_n:
+        HEALTH.bump("demote:chain_fuse")
         backend = "xla"
     elif backend == "sharded":
         inner = p.inner_backend or registry.default_backend()
         if inner == "pallas" and n < p.thresholds.chain_fuse_min_n:
+            HEALTH.bump("demote:chain_fuse")
             extra["inner_backend"] = "xla"
-    entry = p.entry("chain", backend)
-    rows, cols = _chain_pattern(p, entry)
-    bound = _chain_bound(p, entry, interpret, extra)
-    return _exec_chain((bound, (m, k), transform, al), rows, cols, a, b, x)
+
+    def run(bk, ex):
+        entry = p.entry("chain", bk)
+        rows, cols = _chain_pattern(p, entry)
+        bound = _chain_bound(p, entry, interpret, dict(ex))
+        return _exec_chain((bound, (m, k), transform, al), rows, cols, a, b, x)
+
+    fb, fb_name = _chain_fallback(p, backend, run, extra)
+    return guardrails.guarded_call("chain", backend,
+                                   lambda: run(backend, extra),
+                                   fallback=fb, fallback_name=fb_name)
 
 
 def execute_attention(p: PlanBuilder, q: jax.Array, k: jax.Array,
@@ -1016,36 +1163,55 @@ def execute_attention(p: PlanBuilder, q: jax.Array, k: jax.Array,
     # xla reference below the cutoff
     extra: dict = {}
     if backend == "pallas" and m < p.thresholds.attn_fuse_min_seq:
+        HEALTH.bump("demote:attn_fuse")
         backend = "xla"
     elif backend == "sharded":
         inner = p.inner_backend or registry.default_backend()
         if inner == "pallas" and m < p.thresholds.attn_fuse_min_seq:
+            HEALTH.bump("demote:attn_fuse")
             extra["inner_backend"] = "xla"
     if bias is None:
         # softmax chain with alpha = scale: reuse the chain entries (the
         # sharded one merges softmax stats across shards — grad-exact)
-        entry = p.entry("chain", backend)
-        rows, cols = _chain_pattern(p, entry)
-        bound = _chain_bound(p, entry, interpret,
-                             dict(extra, transform="softmax", alpha=sc))
-        return _exec_chain((bound, (m, kdim), "softmax", sc),
-                           rows, cols, q, k, v)
+        def run(bk, ex):
+            entry = p.entry("chain", bk)
+            rows, cols = _chain_pattern(p, entry)
+            bound = _chain_bound(p, entry, interpret,
+                                 dict(ex, transform="softmax", alpha=sc))
+            return _exec_chain((bound, (m, kdim), "softmax", sc),
+                               rows, cols, q, k, v)
+
+        fb, fb_name = _chain_fallback(p, backend, run, extra)
+        return guardrails.guarded_call("chain", backend,
+                                       lambda: run(backend, extra),
+                                       fallback=fb, fallback_name=fb_name)
     if backend == "sharded":
         raise NotImplementedError(
             "sharded block-sparse attention does not support an additive "
-            "bias stream yet; drop bias= or use a single-device backend")
+            "bias stream yet; supported alternatives: (1) keep the bias and "
+            "run unsharded — execute_attention(p, ..., backend='pallas') or "
+            "'xla' on a single-device plan over the same pattern, or (2) "
+            "keep the sharded plan and drop bias= (the no-bias path rides "
+            "the sharded softmax chain, cross-shard merge included)")
     bias = jnp.asarray(bias)
     if bias.ndim != 1 or bias.shape[0] != p.csr.nnz:
         raise ValueError(f"bias must be a flat ({p.csr.nnz},) per-edge "
                          f"stream in CSR order; got {bias.shape}")
-    entry = p.entry("attn_chain", backend)
-    rows, cols = _chain_pattern(p, entry)
-    bound = _chain_bound(p, entry, interpret, dict(extra, scale=sc))
     # the flat stream rides the balanced slab layout (pure pad+reshape, so
     # the bias cotangent flows back to the flat stream automatically)
     slab = _stream_to_balanced(bias.astype(jnp.float32),
                                p.substrate("balanced"))
-    return _exec_attn((bound, (m, kdim), sc), rows, cols, q, k, slab, v)
+
+    def run_attn(bk, ex):
+        entry = p.entry("attn_chain", bk)
+        rows, cols = _chain_pattern(p, entry)
+        bound = _chain_bound(p, entry, interpret, dict(ex, scale=sc))
+        return _exec_attn((bound, (m, kdim), sc), rows, cols, q, k, slab, v)
+
+    fb, fb_name = _chain_fallback(p, backend, run_attn, extra)
+    return guardrails.guarded_call("attn_chain", backend,
+                                   lambda: run_attn(backend, extra),
+                                   fallback=fb, fallback_name=fb_name)
 
 
 # module-level bound-kernel cache for the plan-free training entry
@@ -1081,6 +1247,7 @@ def execute_pattern(rows: jax.Array, cols: jax.Array, vals: jax.Array,
         if not quant_mod.supports(quant):
             warnings.warn(f"quant={quant!r} is not supported by this jax "
                           "build; demoting to 'int8'", stacklevel=2)
+            HEALTH.bump("demote:fp8_to_int8")
             quant = "int8"
         impl = _quant_logical(impl, quant)
     if mesh is not None or backend == "sharded":

@@ -161,6 +161,8 @@ def check_tile_range(vals, bound: float = MAX_DYNAMIC_RANGE,
     ratio = np.where((cnt > 0) & (med > 0), amax / np.maximum(med, 1e-300), 0.0)
     worst = float(ratio.max()) if ratio.size else 0.0
     if worst > bound:
+        from .guardrails import HEALTH
+        HEALTH.bump("quant_range_violations")
         warnings.warn(
             f"quantization {context}: worst per-tile dynamic range "
             f"amax/rms = {worst:.1f} exceeds {bound:.0f}; keeping the "

@@ -51,6 +51,14 @@ LOGICAL_KERNELS: tuple[str, ...] = MATMUL_KERNELS + ("sddmm", "chain",
 SUBSTRATES: tuple[str, ...] = ("ell", "balanced", "bsr",
                                "shard_ell", "shard_balanced")
 
+#: the degradation ladder (DESIGN.md §12): which backend a failing kernel
+#: re-routes to.  One rung each — every accelerated backend falls back to
+#: the XLA reference, which has no rung below (failures there propagate).
+#: ``"sharded"`` maps to ``"xla"`` in the *inner* sense: the plan stays
+#: sharded, its per-shard kernels demote (``core/plan.py`` handles the
+#: demoted-inner rebuild; the mapping here just marks a rung exists).
+DEMOTION: dict[str, str] = {"pallas": "xla", "bsr": "xla", "sharded": "xla"}
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelEntry:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .formats import BSR, ELL, BalancedCOO
+from .guardrails import sanitize_grads
 
 
 def _as_2d(a):
@@ -30,7 +31,9 @@ def _as_2d(a):
 
 def _coo_bwd(rows, cols, valid, vals, x, g, shape):
     """Shared cotangent math for any COO-viewable substrate:
-    dvals[e] = <g[row_e,:], x[col_e,:]> (masked), dx = Aᵀ·g."""
+    dvals[e] = <g[row_e,:], x[col_e,:]> (masked), dx = Aᵀ·g.  The returned
+    pair passes through the guardrail grad sentinel — a no-op unless a
+    ``guardrails.grad_scope("sanitize")`` is active at trace time."""
     m, k = shape
     x2, _ = _as_2d(x)
     g2, _ = _as_2d(g)
@@ -41,7 +44,7 @@ def _coo_bwd(rows, cols, valid, vals, x, g, shape):
     p = vals.astype(jnp.float32)[:, None] * g_rows.astype(jnp.float32)
     dx = jax.ops.segment_sum(p, cols, num_segments=k)
     dx = dx.reshape(x.shape).astype(x.dtype)
-    return dvals, dx
+    return sanitize_grads(dvals, dx)
 
 
 def _float0(a):
@@ -163,6 +166,7 @@ def _exec_bsr_bwd(static, res, g):
     p = jnp.einsum("bmk,bmn->bkn", blocks.astype(jnp.float32), gb)
     dx = jax.ops.segment_sum(p, bcol, num_segments=kb)
     dx = dx.reshape(kb * bk, -1)[:k].reshape(x.shape).astype(x.dtype)
+    dblocks, dx = sanitize_grads(dblocks, dx)
     return (_float0(indptr), _float0(bcol), _float0(brow), dblocks, dx)
 
 
@@ -205,6 +209,7 @@ def _exec_sddmm_bwd(static, res, g):
     bg = jnp.take(b.astype(jnp.float32), c, axis=0)
     da = jax.ops.segment_sum(gf[:, None] * bg, rr, num_segments=m + 1)[:m]
     db = jax.ops.segment_sum(gf[:, None] * ag, c, num_segments=k)
+    da, db = sanitize_grads(da, db)
     return (_float0(rows), _float0(cols),
             da.astype(a.dtype), db.astype(b.dtype))
 
@@ -256,6 +261,7 @@ def _exec_chain_bwd(static, res, g):
     db = jax.ops.segment_sum(de[:, None] * ag, c, num_segments=k)
     dx = jax.ops.segment_sum(w[:, None] * gr, c, num_segments=k)
     dx = dx.reshape(x.shape).astype(x.dtype)
+    da, db, dx = sanitize_grads(da, db, dx)
     return (_float0(rows), _float0(cols), da.astype(a.dtype),
             db.astype(b.dtype), dx)
 
@@ -310,6 +316,7 @@ def _exec_attn_bwd(static, res, g):
     dbias = dz.reshape(bias.shape).astype(
         bias.dtype if jnp.issubdtype(jnp.result_type(bias), jnp.inexact)
         else jnp.float32)
+    dq, dk, dbias, dx = sanitize_grads(dq, dk, dbias, dx)
     return (_float0(rows), _float0(cols), dq.astype(q.dtype),
             dk.astype(k.dtype), dbias, dx)
 

@@ -1,0 +1,175 @@
+"""Deterministic fault injection for the whole runtime (DESIGN.md §12).
+
+Grown out of ``serve/faults.py`` (which now re-exports from here): the
+injector began life as the serving engine's failure driver, but the
+guardrail subsystem needs the *core* plan/execute path to be drivable by the
+same deterministic fault schedules — the degradation ladder, numeric
+sentinels, and plan-integrity digests are only trustworthy if tests can
+make plan builds, substrate prep, and kernel executes fail on demand.
+
+``FaultInjector`` is a seeded, per-site fault source consulted at
+well-known hook points ("sites"):
+
+serving sites (the engine holds its own injector instance):
+
+    ``plan_build``      raise / delay inside a background dispatch-plan build
+    ``prefill``         raise / delay inside a background prefill attempt
+    ``topology_drift``  perturb a request's pinned expert topology so the
+                        drift monitor sees a router/pin mismatch
+
+core sites (consulted through the ``inject_faults`` scope below, so the
+serve engine's explicitly-passed injector never double-fires):
+
+    ``plan_build``               raise inside ``PlanBuilder.substrate``
+                                 before a substrate is constructed
+    ``substrate_prep``           raise inside ``PlanBuilder.kernel_opts``
+                                 before a registry ``prep`` hook runs
+    ``kernel_execute``           raise before any kernel dispatch in
+                                 ``execute``/``execute_chain``/... (all
+                                 backends)
+    ``kernel_execute:<backend>`` same, but only when the resolved backend
+                                 matches — the lever that trips one rung of
+                                 the degradation ladder while the fallback
+                                 rung stays healthy
+
+Each site gets its own ``random.Random`` stream seeded from the injector
+seed and a stable digest of the site name (*not* Python's randomized
+``hash``), so a given ``(seed, spec)`` pair replays the exact same fault
+schedule on every run and on every platform — the acceptance tests pin
+fallback/retry/breaker counters against that determinism.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import random
+import threading
+import time
+import zlib
+from typing import Dict, Optional
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``FaultInjector.raise_if`` at a firing site."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """What one site does when consulted.
+
+    ``fail``        the first ``fail`` consultations raise (deterministic
+                    burst — exercises bounded retry and terminal failure)
+    ``p_fail``      after the burst, each consultation raises with this
+                    probability on the site's seeded stream
+    ``delay``       seconds to sleep before returning / raising
+    ``delay_times`` only the first ``delay_times`` consultations sleep
+                    (None = every one)
+    """
+
+    fail: int = 0
+    p_fail: float = 0.0
+    delay: float = 0.0
+    delay_times: Optional[int] = None
+
+
+class FaultInjector:
+    """Seeded per-site fault source; thread-safe (sites fire from the tick
+    thread and from prefill/plan worker threads concurrently)."""
+
+    def __init__(self, specs: Optional[Dict[str, FaultSpec]] = None, *,
+                 seed: int = 0):
+        self.seed = seed
+        self.specs: Dict[str, FaultSpec] = dict(specs or {})
+        self._lock = threading.Lock()
+        self._rng: Dict[str, random.Random] = {}
+        self._count: Dict[str, int] = {}
+        self.fired: Dict[str, int] = {}
+
+    def _site_rng(self, site: str) -> random.Random:
+        rng = self._rng.get(site)
+        if rng is None:
+            # zlib.crc32 is stable across processes, unlike hash()
+            rng = random.Random((self.seed << 32) ^ zlib.crc32(site.encode()))
+            self._rng[site] = rng
+        return rng
+
+    def fire(self, site: str) -> bool:
+        """Consult ``site``: apply its delay (if any) and report whether the
+        site fails this time.  Callers that can't raise use the bool."""
+        spec = self.specs.get(site)
+        if spec is None:
+            return False
+        with self._lock:
+            n = self._count.get(site, 0)
+            self._count[site] = n + 1
+            fails = n < spec.fail
+            if not fails and spec.p_fail > 0.0:
+                fails = self._site_rng(site).random() < spec.p_fail
+            delay = spec.delay if (spec.delay_times is None
+                                   or n < spec.delay_times) else 0.0
+            if fails:
+                self.fired[site] = self.fired.get(site, 0) + 1
+        if delay > 0.0:
+            time.sleep(delay)
+        return fails
+
+    def raise_if(self, site: str) -> None:
+        if self.fire(site):
+            raise InjectedFault(f"injected fault at {site!r}")
+
+    def perturb_topology(self, topology: tuple, num_experts: int) -> tuple:
+        """Drift a pinned top-k expert set: if the ``topology_drift`` site
+        fires, rotate every expert id by one (mod E) — a maximal, sorted,
+        still-valid top-k set that cannot match the router's choice."""
+        if not self.fire("topology_drift"):
+            return topology
+        return tuple(sorted((int(e) + 1) % num_experts for e in topology))
+
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self.fired)
+
+
+# ---------------------------------------------------------------------------
+# the core-site scope: how plan/execute find the injector
+# ---------------------------------------------------------------------------
+#
+# The serve engine passes its injector explicitly (constructor argument) and
+# owns the serving sites.  The core sites instead consult a thread-local
+# dynamic scope, so test code can wrap *any* entry point — api.sparse,
+# execute, a whole train step — without threading an injector kwarg through
+# every layer, and so production code pays one thread-local read when no
+# injector is active.
+
+_SCOPE = threading.local()
+
+
+@contextlib.contextmanager
+def inject_faults(injector: FaultInjector | None):
+    """Make ``injector`` the active core-site fault source for the dynamic
+    extent.  ``None`` is a no-op scope (handy for plumbing optional config
+    through).  Nests; the innermost scope wins."""
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    if injector is not None:
+        stack.append(injector)
+    try:
+        yield injector
+    finally:
+        if injector is not None:
+            stack.pop()
+
+
+def active_injector() -> FaultInjector | None:
+    """Innermost ``inject_faults`` scope, or None (the production path)."""
+    stack = getattr(_SCOPE, "stack", None)
+    return stack[-1] if stack else None
+
+
+def consult(site: str) -> None:
+    """Fire ``site`` on the scoped injector, if any — the one-liner the core
+    hook points call (``raise_if`` on the active scope)."""
+    inj = active_injector()
+    if inj is not None:
+        inj.raise_if(site)

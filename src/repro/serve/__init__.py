@@ -1,6 +1,7 @@
 from .engine import PlanPrep, Request, ServeEngine
 from .faults import FaultInjector, FaultSpec, InjectedFault
-from .metrics import EngineMetrics, RequestMetrics, percentile
+from .metrics import EngineMetrics, RequestMetrics, health_summary, percentile
 
 __all__ = ["PlanPrep", "Request", "ServeEngine", "FaultInjector", "FaultSpec",
-           "InjectedFault", "EngineMetrics", "RequestMetrics", "percentile"]
+           "InjectedFault", "EngineMetrics", "RequestMetrics",
+           "health_summary", "percentile"]

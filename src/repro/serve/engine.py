@@ -614,9 +614,16 @@ class ServeEngine:
 
     # ------------------------------------------------------------- telemetry
     def metrics(self) -> dict:
+        from repro.core.guardrails import HEALTH
+
+        from .metrics import health_summary
         out = self.metrics_agg.snapshot()
         out["plan_cache"] = self.plan_cache.stats()
         out["faults"] = self.faults.counts() if self.faults is not None else {}
+        # core-kernel guardrail state (breakers, demotions, sentinels) rides
+        # the same scrape: serving SLO breaches usually *start* as kernel
+        # degradation one layer down (DESIGN.md §12)
+        out["health"] = health_summary(HEALTH.snapshot())
         return out
 
     def close(self) -> None:

@@ -1,108 +1,10 @@
-"""Deterministic fault injection for the serving engine.
+"""Compatibility shim: the fault injector generalized into
+``repro.runtime.faults`` (the core plan/execute guardrails consume the same
+deterministic fault schedules as the serving engine, see DESIGN.md §12).
+Everything that imported the serving-era names keeps working."""
+from repro.runtime.faults import (FaultInjector, FaultSpec,  # noqa: F401
+                                  InjectedFault, active_injector,
+                                  inject_faults)
 
-The hardening paths in ``ServeEngine`` — prefill retry, plan-build retry /
-fallback degradation, topology-drift unpinning — are only trustworthy if
-tests *drive* them, not just assert their presence.  ``FaultInjector`` is a
-seeded, per-site fault source the engine consults at well-known hook
-points ("sites"):
-
-    ``plan_build``      raise / delay inside a background dispatch-plan build
-    ``prefill``         raise / delay inside a background prefill attempt
-    ``topology_drift``  perturb a request's pinned expert topology so the
-                        drift monitor sees a router/pin mismatch
-
-Each site gets its own ``random.Random`` stream seeded from the injector
-seed and a stable digest of the site name (*not* Python's randomized
-``hash``), so a given ``(seed, spec)`` pair replays the exact same fault
-schedule on every run and on every platform — the acceptance tests pin
-fallback/retry counters against that determinism.
-"""
-from __future__ import annotations
-
-import dataclasses
-import random
-import threading
-import time
-import zlib
-from typing import Dict, Optional
-
-
-class InjectedFault(RuntimeError):
-    """Raised by ``FaultInjector.raise_if`` at a firing site."""
-
-
-@dataclasses.dataclass(frozen=True)
-class FaultSpec:
-    """What one site does when consulted.
-
-    ``fail``        the first ``fail`` consultations raise (deterministic
-                    burst — exercises bounded retry and terminal failure)
-    ``p_fail``      after the burst, each consultation raises with this
-                    probability on the site's seeded stream
-    ``delay``       seconds to sleep before returning / raising
-    ``delay_times`` only the first ``delay_times`` consultations sleep
-                    (None = every one)
-    """
-
-    fail: int = 0
-    p_fail: float = 0.0
-    delay: float = 0.0
-    delay_times: Optional[int] = None
-
-
-class FaultInjector:
-    """Seeded per-site fault source; thread-safe (sites fire from the tick
-    thread and from prefill/plan worker threads concurrently)."""
-
-    def __init__(self, specs: Optional[Dict[str, FaultSpec]] = None, *,
-                 seed: int = 0):
-        self.seed = seed
-        self.specs: Dict[str, FaultSpec] = dict(specs or {})
-        self._lock = threading.Lock()
-        self._rng: Dict[str, random.Random] = {}
-        self._count: Dict[str, int] = {}
-        self.fired: Dict[str, int] = {}
-
-    def _site_rng(self, site: str) -> random.Random:
-        rng = self._rng.get(site)
-        if rng is None:
-            # zlib.crc32 is stable across processes, unlike hash()
-            rng = random.Random((self.seed << 32) ^ zlib.crc32(site.encode()))
-            self._rng[site] = rng
-        return rng
-
-    def fire(self, site: str) -> bool:
-        """Consult ``site``: apply its delay (if any) and report whether the
-        site fails this time.  Callers that can't raise use the bool."""
-        spec = self.specs.get(site)
-        if spec is None:
-            return False
-        with self._lock:
-            n = self._count.get(site, 0)
-            self._count[site] = n + 1
-            fails = n < spec.fail
-            if not fails and spec.p_fail > 0.0:
-                fails = self._site_rng(site).random() < spec.p_fail
-            delay = spec.delay if (spec.delay_times is None
-                                   or n < spec.delay_times) else 0.0
-            if fails:
-                self.fired[site] = self.fired.get(site, 0) + 1
-        if delay > 0.0:
-            time.sleep(delay)
-        return fails
-
-    def raise_if(self, site: str) -> None:
-        if self.fire(site):
-            raise InjectedFault(f"injected fault at {site!r}")
-
-    def perturb_topology(self, topology: tuple, num_experts: int) -> tuple:
-        """Drift a pinned top-k expert set: if the ``topology_drift`` site
-        fires, rotate every expert id by one (mod E) — a maximal, sorted,
-        still-valid top-k set that cannot match the router's choice."""
-        if not self.fire("topology_drift"):
-            return topology
-        return tuple(sorted((int(e) + 1) % num_experts for e in topology))
-
-    def counts(self) -> Dict[str, int]:
-        with self._lock:
-            return dict(self.fired)
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault", "inject_faults",
+           "active_injector"]

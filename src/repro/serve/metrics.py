@@ -127,3 +127,20 @@ class EngineMetrics:
                 "total_p99_ms": percentile(total, 99) * 1e3,
             },
         }
+
+
+def health_summary(snapshot: dict) -> dict:
+    """Condense a ``guardrails.HealthRegistry`` snapshot into the serving
+    dashboard shape: total trips/recoveries, the set of currently-open (or
+    half-open) breakers, and the raw counters.  ``engine.metrics()`` attaches
+    this under ``"health"`` so one scrape covers serving *and* core-kernel
+    degradation (DESIGN.md §12)."""
+    breakers = snapshot.get("breakers", {})
+    return {
+        "counters": dict(snapshot.get("counters", {})),
+        "breaker_trips": sum(b["trips"] for b in breakers.values()),
+        "breaker_recoveries": sum(b["recoveries"] for b in breakers.values()),
+        "open_breakers": sorted(k for k, b in breakers.items()
+                                if b["state"] != "closed"),
+        "breakers": {k: dict(b) for k, b in breakers.items()},
+    }

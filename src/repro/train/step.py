@@ -24,6 +24,11 @@ class TrainConfig:
     #: scoped backend for the sparse layers' kernels during tracing (the
     #: facade's ``use_backend``); None keeps the platform default
     sparse_backend: str | None = None
+    #: skip-and-report guardrail (DESIGN.md §12): when the loss or any grad
+    #: leaf goes non-finite, keep the previous params/optimizer state for
+    #: this step instead of poisoning them, and report it in the metrics
+    #: (``skipped_nonfinite``).  Pure in-graph ``where`` — jit/pjit-safe.
+    skip_nonfinite: bool = False
 
 
 def make_train_step(loss_fn: Callable, tcfg: TrainConfig) -> Callable:
@@ -75,6 +80,18 @@ def make_train_step(loss_fn: Callable, tcfg: TrainConfig) -> Callable:
         new_params, new_opt, opt_metrics = adamw_update(params, grads, opt, tcfg.opt)
         out = {"loss": loss, **{k: v for k, v in metrics.items()
                                 if jnp.ndim(v) == 0}, **opt_metrics}
+        if tcfg.skip_nonfinite:
+            leaf_ok = [jnp.all(jnp.isfinite(g)) for g in
+                       jax.tree_util.tree_leaves(grads)
+                       if jnp.issubdtype(jnp.result_type(g), jnp.inexact)]
+            ok = jnp.logical_and(jnp.isfinite(loss),
+                                 functools.reduce(jnp.logical_and, leaf_ok,
+                                                  jnp.bool_(True)))
+            keep = lambda new, old: jax.tree_util.tree_map(  # noqa: E731
+                lambda n, o: jnp.where(ok, n, o), new, old)
+            new_params = keep(new_params, params)
+            new_opt = keep(new_opt, opt)
+            out["skipped_nonfinite"] = jnp.where(ok, 0, 1)
         return {"params": new_params, "opt": new_opt}, out
 
     return train_step

@@ -64,3 +64,55 @@ except ModuleNotFoundError:
             wrapper.__doc__ = fn.__doc__
             return wrapper
         return deco
+
+
+# --- malformed-pattern corpus (guardrail tests; DESIGN.md §12) -------------
+#
+# Deterministic generator for each defect class ``inspect_csr`` detects.
+# Works with or without hypothesis (plain numpy; seeded), so the guardrail
+# property tests can iterate kind × seed without strategy plumbing.
+
+MALFORMED_KINDS = ("unsorted", "duplicates", "out_of_range", "nonfinite",
+                   "mixed")
+
+
+def malformed_csr(kind: str, seed: int, m: int = 12, k: int = 10,
+                  density: float = 0.3):
+    """A CSR over an ``(m, k)`` shape with a structurally valid ``indptr``
+    but corrupted ``indices``/``data`` per ``kind`` (one of
+    ``MALFORMED_KINDS``).  Returns a ``repro.core.formats.CSR``; the clean
+    reference is recoverable via ``guardrails.repair_csr``."""
+    import numpy as np
+
+    import jax.numpy as jnp
+    from repro.core.formats import CSR
+
+    if kind not in MALFORMED_KINDS:
+        raise ValueError(f"unknown malformed kind {kind!r}")
+    rng = np.random.default_rng(seed)
+    counts = rng.binomial(k, density, size=m).astype(np.int64)
+    counts = np.maximum(counts, 1)  # every row nonempty → defects land
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    nnz = int(indptr[-1])
+    indices = np.concatenate([
+        np.sort(rng.choice(k, size=int(c), replace=False)) for c in counts])
+    data = rng.standard_normal(nnz).astype(np.float32)
+    # row-local corruption keeps indptr valid while breaking the invariant
+    pick = rng.choice(nnz, size=max(1, nnz // 4), replace=False)
+    if kind in ("unsorted", "mixed"):
+        for r in range(m):
+            lo, hi = int(indptr[r]), int(indptr[r + 1])
+            if hi - lo >= 2:
+                indices[lo:hi] = indices[lo:hi][::-1]
+    if kind in ("duplicates", "mixed"):
+        for r in range(m):
+            lo, hi = int(indptr[r]), int(indptr[r + 1])
+            if hi - lo >= 2:
+                indices[lo + 1] = indices[lo]
+    if kind in ("out_of_range", "mixed"):
+        indices[pick] = k + rng.integers(0, 5, size=pick.size)
+    if kind in ("nonfinite", "mixed"):
+        data[pick] = np.where(rng.random(pick.size) < 0.5, np.nan, np.inf)
+    return CSR(jnp.asarray(indptr), jnp.asarray(indices),
+               jnp.asarray(data), (m, k))

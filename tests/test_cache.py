@@ -32,7 +32,8 @@ def test_lru_counters_hit_miss_eviction():
     assert cache.get_or_build("b", build("b")) == "b"   # miss
     assert cache.get_or_build("c", build("c")) == "c"   # miss → evicts "a"
     assert cache.stats() == {"hits": 1, "misses": 3, "evictions": 1,
-                             "builds": 3, "size": 2, "capacity": 2}
+                             "builds": 3, "digest_mismatches": 0,
+                             "size": 2, "capacity": 2}
     assert "a" not in cache and "b" in cache
     # touching "b" promotes it: next insert evicts "c", not "b"
     cache.get_or_build("b", build("b!"))
@@ -41,6 +42,52 @@ def test_lru_counters_hit_miss_eviction():
     assert builds == ["a", "b", "c", "d"]
     cache.reset_stats()
     assert cache.stats()["hits"] == 0 and len(cache) == 2
+
+
+def test_thread_stress_concurrent_cache():
+    """Hammer one PlanCache from many threads mixing get_or_build, put_built
+    and get under a tight LRU bound: no exceptions, no lost publications
+    (every lookup returns the key's canonical value), counters consistent."""
+    import threading
+
+    cache = PlanCache(capacity=8)
+    keys = [f"k{i}" for i in range(16)]
+    errors = []
+    lookups = [0] * 8
+
+    def worker(wid):
+        rng = np.random.default_rng(wid)
+        try:
+            for step in range(300):
+                key = keys[int(rng.integers(len(keys)))]
+                op = int(rng.integers(3))
+                if op == 0:
+                    got = cache.get_or_build(key, lambda k=key: ("v", k))
+                elif op == 1:
+                    cache.put_built(key, ("v", key))
+                    got = ("v", key)
+                else:
+                    got = cache.get(key, ("v", key))
+                lookups[wid] += 1
+                if got != ("v", key):
+                    errors.append((wid, step, key, got))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append((wid, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    s = cache.stats()
+    assert s["size"] <= 8 and len(cache) <= 8
+    assert s["digest_mismatches"] == 0       # values were never corrupted
+    assert s["hits"] + s["misses"] >= 1
+    assert s["builds"] >= s["evictions"]     # every eviction was once built
+    # the cache still serves correct values after the storm
+    for key in keys:
+        assert cache.get_or_build(key, lambda k=key: ("v", k)) == ("v", key)
 
 
 def test_capacity_validation_and_clear():
@@ -80,7 +127,8 @@ def test_same_pattern_hits_and_key_components(rng):
     p2 = cached_plan(csr2, cache=cache, backend="xla")   # values ≠, pattern =
     assert p1 is p2
     assert cache.stats() == {"hits": 1, "misses": 1, "evictions": 0,
-                             "builds": 1, "size": 1, "capacity": 8}
+                             "builds": 1, "digest_mismatches": 0,
+                             "size": 1, "capacity": 8}
     # backend is part of the key
     p3 = cached_plan(csr, cache=cache, backend="pallas")
     assert p3 is not p1 and cache.stats()["builds"] == 2

@@ -121,6 +121,9 @@ def test_run_until_done_marks_stragglers_timeout(llama_model):
     assert by[1].out                       # it did stream some tokens
     m = eng.metrics()
     assert m["requests"] == {"done": 1, "timeout": 1}
+    # one scrape covers serving AND core-kernel degradation (DESIGN.md §12)
+    assert set(m["health"]) >= {"counters", "breaker_trips",
+                                "breaker_recoveries", "open_breakers"}
     eng.close()
 
 
